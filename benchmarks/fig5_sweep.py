@@ -1,0 +1,61 @@
+"""Paper Fig. 5: area/power at iso-throughput across the A×B×C tensor-PE
+design space (model sweep), plus the TPU analogue — a Pallas block-shape
+sweep over the STA GEMM kernel reporting arithmetic intensity and VMEM
+footprint per (bm, bk, bn) (the quantities that decide the MXU sweet spot,
+from the same geometry module the kernels tile with)."""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+
+from repro.core.area_model import fig5_sweep
+from repro.core.sta import VMEM_BYTES, mxu_utilization
+
+
+def pallas_block_sweep(m=4096, k=4096, n=4096, itemsize=1):
+    """For each candidate block: VMEM working set, arithmetic intensity
+    (flops per HBM byte), and MXU alignment utilization."""
+    rows = []
+    for bm, bk, bn in itertools.product((128, 256, 512), (128, 256, 512),
+                                        (128, 256, 512)):
+        ws = (bm * bk + bk * bn) * itemsize + bm * bn * 4
+        if ws > VMEM_BYTES // 2:
+            continue
+        # per output tile: bm*bn*K flops; HBM traffic = K*(bm+bn) operands
+        flops = 2 * bm * bn * k
+        traffic = k * (bm + bn) * itemsize + bm * bn * 4
+        rows.append({"bm": bm, "bk": bk, "bn": bn,
+                     "vmem_bytes": ws,
+                     "arith_intensity": round(flops / traffic, 1),
+                     "mxu_util": round(mxu_utilization(bm, bk, bn), 3)})
+    rows.sort(key=lambda r: -r["arith_intensity"])
+    return rows
+
+
+def run(quiet: bool = False) -> dict:
+    model_rows = fig5_sweep()
+    best_sta = min(model_rows, key=lambda r: r["sta_area"])
+    best_dbb = min((r for r in model_rows if "dbb_area" in r),
+                   key=lambda r: r["dbb_area"])
+    pl = pallas_block_sweep()
+    if not quiet:
+        print(f"design points: {len(model_rows)}")
+        print(f"best STA area point: {best_sta['a']}x{best_sta['b']}x"
+              f"{best_sta['c']} -> {best_sta['sta_area']:.3f}x SA area "
+              f"(paper sweet spot 4x8x4)")
+        print(f"best STA-DBB area point: {best_dbb['a']}x{best_dbb['b']}x"
+              f"{best_dbb['c']} -> {best_dbb['dbb_area']:.3f}x SA area")
+        print("top Pallas blocks by arithmetic intensity:")
+        for r in pl[:5]:
+            print("  ", json.dumps(r))
+    return {"model_sweep": model_rows, "best_sta": best_sta,
+            "best_dbb": best_dbb, "pallas_sweep": pl[:10]}
+
+
+def main(argv=None):
+    return run()
+
+
+if __name__ == "__main__":
+    main()

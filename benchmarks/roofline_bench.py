@@ -1,0 +1,70 @@
+"""Beyond-paper: the 40-cell roofline table from the multi-pod dry-run
+artifacts (launch/dryrun.py writes artifacts/dryrun/*.json; EXPERIMENTS.md
+§Roofline is generated from this table)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "pod", packed: bool | None = False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh:
+            continue
+        if packed is not None and r.get("packed", False) != packed:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r) -> str:
+    cell = f"{r['arch']}×{r['shape']}"
+    if r["status"] == "skipped":
+        return f"{cell:42s} SKIP ({r['reason'][:48]}...)"
+    if r["status"] != "ok":
+        return f"{cell:42s} ERROR"
+    t = r["roofline"]
+    mem = r.get("memory", {})
+    fits = mem.get("total_per_device", 0) <= 16e9
+    return (f"{cell:42s} C {t['compute_s']:9.3g}s  M {t['memory_s']:9.3g}s "
+            f" X {t['collective_s']:9.3g}s  -> {t['bottleneck']:10s} "
+            f"frac {t['roofline_fraction']:6.3f} "
+            f"{'fits' if fits else 'OVER'}")
+
+
+def run(quiet: bool = False, mesh: str = "pod") -> dict:
+    rows = load_cells(mesh)
+    if not rows:
+        print(f"no dry-run artifacts under {ART}; run "
+              "`python -m repro.launch.dryrun` first")
+        return {"rows": []}
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not quiet:
+        print(f"== roofline table ({mesh} mesh, {len(ok)} compiled cells, "
+              f"{len(rows) - len(ok)} skipped/failed) ==")
+        for r in rows:
+            print(fmt_row(r))
+        if ok:
+            worst = min(
+                (r for r in ok if r["shape"] == "train_4k"),
+                key=lambda r: r["roofline"]["roofline_fraction"],
+                default=None)
+            if worst:
+                print(f"\nworst train roofline fraction: "
+                      f"{worst['arch']} "
+                      f"({worst['roofline']['roofline_fraction']:.3f})")
+    return {"rows": rows}
+
+
+def main(argv=None):
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark aggregator: one section per paper artifact.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
+--fast trims step counts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    help="section names to skip")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig4_layers, fig5_sweep, roofline_bench,
+                            table1_dbb_accuracy, table2_efficiency)
+
+    sections = [
+        ("table2_efficiency (paper Table II)",
+         lambda: table2_efficiency.run()),
+        ("fig5_sweep (paper Fig. 5)", lambda: fig5_sweep.run()),
+        ("fig4_layers (paper Fig. 4)", lambda: fig4_layers.run()),
+        ("table1_dbb_accuracy (paper Table I)",
+         lambda: table1_dbb_accuracy.run(steps=30 if args.fast else 60)),
+        ("roofline (dry-run artifacts)", lambda: roofline_bench.run()),
+    ]
+    failures = []
+    for name, fn in sections:
+        if any(s in name for s in args.skip):
+            print(f"\n=== {name}: SKIPPED ===")
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"--- ok in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        return 1
+    print("\nall benchmark sections passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

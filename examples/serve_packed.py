@@ -1,0 +1,40 @@
+"""Batched serving with DBB-packed weights (the paper's deployment mode):
+init an olmo-family smoke model, prune+pack its weights to the STA-DBB
+memory format, and serve batched greedy generations — verifying packed
+and dense serving agree token-for-token and reporting the footprint win.
+
+Run:  PYTHONPATH=src python examples/serve_packed.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.dbb_linear import pack_tree, tree_footprint_bytes
+from repro.core.sparsity import apply_dbb_to_tree
+from repro.models import registry
+from repro.serve.engine import ServeEngine
+
+cfg = get_config("olmo-1b", smoke=True)
+params = registry.init_params(jax.random.PRNGKey(0), cfg)
+
+# amplitude-prune to the DBB constraint, then pack (values + bitmask)
+proj = apply_dbb_to_tree(params, cfg.dbb, straight_through=False)
+packed = pack_tree(proj, cfg.dbb)
+d_bytes, p_bytes = tree_footprint_bytes(proj), tree_footprint_bytes(packed)
+print(f"weight footprint: {d_bytes / 1e6:.2f} MB dense -> "
+      f"{p_bytes / 1e6:.2f} MB packed ({100 * p_bytes / d_bytes:.1f}%)")
+
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(2, cfg.vocab_size, size=n))
+           for n in (5, 9, 3)]
+
+eng_dense = ServeEngine(cfg, proj, max_batch=4)
+eng_packed = ServeEngine(cfg, packed, max_batch=4)
+
+out_d = eng_dense.generate(prompts, max_new_tokens=8)
+out_p = eng_packed.generate(prompts, max_new_tokens=8)
+for i, (a, b) in enumerate(zip(out_d, out_p)):
+    status = "==" if a == b else "!="
+    print(f"req{i}: dense {a} {status} packed {b}")
+assert out_d == out_p, "packed serving must match projected-dense serving"
+print("packed serving is exact. done.")

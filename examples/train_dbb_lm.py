@@ -1,0 +1,65 @@
+"""End-to-end driver (brief deliverable b): train a ~100M-param dense LM
+with DBB-sparse projections for a few hundred steps on CPU, with
+checkpointing mid-run, a simulated preemption + resume, and a final
+eval — the full production train path at laptop scale.
+
+Run:  PYTHONPATH=src python examples/train_dbb_lm.py [--steps 200]
+(~100M params; a few hundred CPU steps takes a while — use --steps 60
+for a quick pass.)
+"""
+import argparse
+import os
+import shutil
+import tempfile
+
+import jax
+
+from repro.config import (DbbConfig, ModelConfig, RunConfig, ShapeSpec,
+                          TrainConfig)
+from repro.launch.train import train_loop
+from repro.train import checkpoint as ckpt
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--seq-len", type=int, default=256)
+ap.add_argument("--batch", type=int, default=8)
+args = ap.parse_args()
+
+# ~100M params: 12L, d=512, ff=2048, 32k vocab (olmo-style family)
+cfg = ModelConfig(
+    name="lm100m", family="dense_lm", num_layers=12, d_model=512,
+    num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+    norm="rmsnorm", act="silu", mlp_gated=True, dtype="float32",
+    remat="none",
+    dbb=DbbConfig(enabled=True, block=8, nnz=4),
+)
+print(f"params ≈ {cfg.param_count() / 1e6:.1f}M")
+
+ckdir = os.path.join(tempfile.gettempdir(), "repro_lm100m_ck")
+shutil.rmtree(ckdir, ignore_errors=True)
+
+half = args.steps // 2
+shape = ShapeSpec("train", args.seq_len, args.batch, "train")
+
+
+def rc(steps):
+    return RunConfig(model=cfg, train=TrainConfig(
+        steps=steps, learning_rate=6e-4, warmup_steps=20,
+        microbatches=2, grad_compress="bf16",
+        checkpoint_dir=ckdir, checkpoint_every=max(half // 2, 10),
+        log_every=10, dbb_prune_start=args.steps // 4,
+        dbb_prune_ramp=args.steps // 4))
+
+
+print(f"\n== phase 1: train to step {half} (simulated preemption) ==")
+state, hist1 = train_loop(rc(half), shape)
+
+print("\n== phase 2: resume from latest checkpoint, finish run ==")
+assert ckpt.latest_step(ckdir) is not None
+state, hist2 = train_loop(rc(args.steps), shape)
+
+first, last = hist1[0]["loss"], hist2[-1]["loss"]
+print(f"\nloss: {first:.3f} -> {last:.3f} over {args.steps} steps "
+      f"(resumed at {ckpt.latest_step(ckdir)})")
+assert last < first, "training diverged?"
+print("done.")

@@ -1,0 +1,50 @@
+"""Splice generated tables into EXPERIMENTS.md at the GENERATED markers.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+import io
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import gen_tables  # noqa: E402  (same directory)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def capture(fn, *a, **kw):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a, **kw)
+    return buf.getvalue().strip()
+
+
+def main():
+    cells = gen_tables.load(gen_tables.ART)
+    base = (gen_tables.load(gen_tables.BASE)
+            if os.path.isdir(gen_tables.BASE) else {})
+    sections = {
+        "DRYRUN": capture(gen_tables.dryrun_table, cells),
+        "ROOFLINE": capture(gen_tables.roofline_table, cells, "pod"),
+        "PACKED": capture(gen_tables.packed_table, cells, "pod"),
+        "DELTA": (capture(gen_tables.delta_table, cells, base, "pod")
+                  if base else ""),
+    }
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    for key, content in sections.items():
+        marker = f"<!-- GENERATED:{key} -->"
+        block = f"{marker}\n{content}\n<!-- /GENERATED:{key} -->"
+        pat = re.compile(
+            re.escape(marker) + r"(?:.*?<!-- /GENERATED:" + key + r" -->)?",
+            re.S)
+        text = pat.sub(lambda _: block, text, count=1)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(__file__))
+    main()

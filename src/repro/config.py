@@ -1,0 +1,308 @@
+"""Configuration system for the STA/DBB reproduction framework.
+
+A single dataclass family covers every assigned architecture. Configs are
+plain frozen dataclasses so they hash, compare, and round-trip through the
+CLI (`--arch <id> --shape <id>`); `repro.configs` registers one builder per
+architecture id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# DBB (density-bound block) — the paper's sparse format
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DbbConfig:
+    """Density-bound block sparsity config (paper §IV-A).
+
+    block:     block length B along the contraction (K) dimension (paper: 8).
+    nnz:       density bound k — max non-zeros per block (paper sweet spot: 4).
+    enabled:   master switch; dense models run with enabled=False.
+    apply_to:  which weight families get DBB'd. Attention score/value matmuls
+               are activation×activation and are never DBB'd (weights only).
+    """
+    block: int = 8
+    nnz: int = 4
+    enabled: bool = False
+    apply_to: Tuple[str, ...] = ("mlp", "attn_proj", "expert")
+
+    @property
+    def density(self) -> float:
+        return self.nnz / self.block
+
+    @property
+    def weight_footprint_ratio(self) -> float:
+        """Compressed bytes / dense bytes for INT8 weights (paper: 62.5%).
+
+        Per block of B INT8 values: k value bytes + ceil(B/8) bitmask bytes.
+        """
+        mask_bytes = (self.block + 7) // 8
+        return (self.nnz + mask_bytes) / self.block
+
+
+# ---------------------------------------------------------------------------
+# STA tensor-PE geometry (paper §III-B) — drives Pallas block shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StaConfig:
+    """A×B×C tensor-PE geometry mapped onto Pallas GEMM tiling.
+
+    The paper's A×B×C_MxN: M×N systolic grid of tensor PEs, each an A×C array
+    of B-input dot-product units. On TPU this becomes block tiling:
+      bm = A * m_tiles, bk = B * k_unroll, bn = C * n_tiles
+    with the accumulator tile output-stationary in VMEM scratch.
+    """
+    a: int = 4
+    b: int = 8
+    c: int = 4
+    # Pallas block shape (bm, bk, bn) for the GEMM kernels; MXU-aligned.
+    block_m: int = 128
+    block_k: int = 128
+    block_n: int = 128
+
+    def macs_per_pe(self) -> int:
+        return self.a * self.b * self.c
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantConfig:
+    enabled: bool = False
+    weight_dtype: str = "int8"      # int8 symmetric per-channel
+    accumulator_dtype: str = "int32"
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoeConfig:
+    num_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # Arctic has a dense residual MLP in parallel with the MoE FFN.
+    dense_residual_ff: int = 0
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+    impl: str = "auto"  # auto | dense | ep  (dense one-hot vs expert-parallel)
+
+
+@dataclass(frozen=True)
+class SsmConfig:
+    state_size: int = 64           # mamba2 N / rwkv head size
+    head_dim: int = 64
+    expand: int = 2                # d_inner = expand * d_model (mamba2)
+    conv_width: int = 4            # mamba2 local conv
+    chunk: int = 128               # chunked-scan block length
+    # zamba2: one shared attention block applied every `shared_period` layers
+    shared_period: int = 6
+    shared_window: int = 4096      # sliding window for shared attn at long ctx
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense_lm"   # dense_lm | moe_lm | rwkv6 | zamba2 | vlm_lm | audio_lm | cnn
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0               # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    max_seq_len: int = 8192
+    # layer details
+    norm: str = "rmsnorm"           # rmsnorm | layernorm | nonparam_ln (olmo)
+    act: str = "silu"               # silu (swiglu) | gelu (geglu/gelu-mlp)
+    mlp_gated: bool = True
+    qkv_bias: bool = False          # qwen2.5 uses QKV bias
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    rope: bool = True
+    # modality frontends (stubs): number of prefix embedding positions
+    prefix_embed_len: int = 0       # paligemma: 256 SigLIP patches
+    embeds_input: bool = False      # musicgen/paligemma: frontend supplies embeds
+    # sub-configs
+    moe: MoeConfig = field(default_factory=MoeConfig)
+    ssm: SsmConfig = field(default_factory=SsmConfig)
+    dbb: DbbConfig = field(default_factory=DbbConfig)
+    sta: StaConfig = field(default_factory=StaConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "auto"             # auto | none | full — auto picks by size
+    # distribution: "tp" = tensor-parallel over the model axis;
+    # "dp" = the model axis joins batch parallelism (params replicated +
+    # ZeRO/FSDP) — the right layout for d_model <~ 2048 where TP boundary
+    # collectives dwarf the per-shard compute (§Perf iteration 12)
+    parallel: str = "tp"
+    # attention
+    attn_impl: str = "auto"         # auto | naive | chunked
+    attn_chunk: int = 1024
+    sliding_window: int = 0         # 0 = full causal
+    attn_logit_softcap: float = 0.0
+    # cnn family (paper's own models)
+    cnn_channels: Tuple[int, ...] = ()
+    cnn_kernel: int = 3
+    cnn_classes: int = 10
+    cnn_img: int = 32
+    cnn_in_ch: int = 3
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "rwkv6"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k eligibility: SSM / hybrid families only (DESIGN.md §4)."""
+        return self.family in ("rwkv6", "zamba2")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + layers + head)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.resolved_head_dim
+        if self.family == "cnn":
+            n, cin, k = 0, self.cnn_in_ch, self.cnn_kernel
+            for cout in self.cnn_channels:
+                n += cin * cout * k * k + cout
+                cin = cout
+            img = self.cnn_img // (2 ** len(self.cnn_channels))
+            n += cin * img * img * self.cnn_classes
+            return n
+        n = v * d  # embed
+        if not self.tie_embeddings:
+            n += v * d
+        per_layer = 0
+        if self.family == "rwkv6":
+            # r,k,v,g,o projections + decay lora + channel mix (approx., see models/rwkv6.py)
+            per_layer = 5 * d * d + 2 * d * f + 2 * d * 96
+        else:
+            q = d * self.num_heads * hd
+            kv = 2 * d * self.num_kv_heads * hd
+            o = self.num_heads * hd * d
+            attn = q + kv + o
+            if self.family in ("moe_lm",):
+                ff = self.moe.num_experts * (3 if self.mlp_gated else 2) * d * f
+                ff += d * self.moe.num_experts  # router
+                if self.moe.dense_residual_ff:
+                    ff += (3 if self.mlp_gated else 2) * d * self.moe.dense_residual_ff
+            else:
+                ff = (3 if self.mlp_gated else 2) * d * f
+            per_layer = attn + ff
+            if self.family == "zamba2":
+                di = self.ssm.expand * d
+                mamba = d * 2 * di + di * d + di * (self.ssm.conv_width + 3)
+                per_layer = mamba + ff // max(1, self.num_layers)  # rough; exact in model
+        return n + self.num_layers * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts instead of all)."""
+        if self.family != "moe_lm" or not self.moe.num_experts:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        dense = self.param_count()
+        per_expert = (3 if self.mlp_gated else 2) * d * f
+        inactive = (self.moe.num_experts - self.moe.top_k) * per_expert * L
+        return dense - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the four assigned cells per arch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeSpec("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs, and why not if it doesn't."""
+    if shape.name == "long_500k" and not model.supports_long_context:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{model.name} is a pure full-attention arch (skip per brief)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Mesh / training / serving
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1            # grad-accumulation microbatches (scan)
+    learning_rate: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | adafactor | sgd
+    grad_compress: str = "none"      # none | bf16 | int8_ef
+    seed: int = 0
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    log_every: int = 10
+    # DBB pruning schedule
+    dbb_prune_start: int = 0
+    dbb_prune_ramp: int = 0          # steps to ramp density bound down
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq_len: int = 2048
+    prefill_chunk: int = 512
+    eos_id: int = 1
+    temperature: float = 0.0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)

@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — DBB format, STA geometry, sparse training,
+INT8 quantization, the analytical area/power model, and the DbbLinear router."""
+from repro.core.dbb import (DbbWeight, dbb_mask, dbb_project, pack_dbb,
+                            unpack_dbb, dbb_footprint_bytes, validate_dbb)
+from repro.core.sparsity import ste_dbb, apply_dbb_to_tree, dbb_schedule_nnz
+from repro.core.quant import (QuantizedWeight, quantize_weight,
+                              dequantize_weight, fake_quant, int8_matmul)
+from repro.core.dbb_linear import (dbb_linear_apply, pack_tree,
+                                   maybe_decompress_tree, tree_footprint_bytes)

@@ -1,0 +1,93 @@
+"""INT8 symmetric quantization (paper targets INT8 operands / INT32 acc).
+
+Mobile CNN inference in the paper is INT8 end-to-end. Here:
+  * weights: symmetric per-output-channel scales, int8 storage
+  * activations: symmetric per-tensor scale (computed on the fly or calibrated)
+  * matmul: int8×int8 → int32 accumulation via ``preferred_element_type``,
+    exactly the SA/STA datapath (INT8 operands, INT32 accumulators)
+  * QAT: fake-quant with straight-through gradients
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedWeight", "quantize_weight", "dequantize_weight",
+    "fake_quant", "act_scale", "int8_matmul", "quant_error",
+]
+
+_INT8_MAX = 127.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    q: jax.Array            # int8 [K, N]
+    scale: jax.Array        # f32 [N] per-out-channel
+
+
+def quantize_weight(w: jax.Array) -> QuantizedWeight:
+    """Symmetric per-out-channel INT8 quantization of ``W[K, N]``."""
+    amax = jnp.max(jnp.abs(w), axis=0)                      # [N]
+    scale = jnp.where(amax > 0, amax / _INT8_MAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale[None, :]), -_INT8_MAX, _INT8_MAX)
+    return QuantizedWeight(q=q.astype(jnp.int8), scale=scale)
+
+
+def dequantize_weight(qw: QuantizedWeight, dtype=jnp.float32) -> jax.Array:
+    return (qw.q.astype(jnp.float32) * qw.scale[None, :]).astype(dtype)
+
+
+def act_scale(x: jax.Array) -> jax.Array:
+    """Per-tensor symmetric activation scale."""
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, amax / _INT8_MAX, 1.0).astype(jnp.float32)
+
+
+@jax.custom_vjp
+def fake_quant(w: jax.Array) -> jax.Array:
+    """Quantize-dequantize with straight-through gradient (QAT)."""
+    qw = quantize_weight(w)
+    return dequantize_weight(qw, w.dtype)
+
+
+def _fq_fwd(w):
+    return fake_quant(w), None
+
+
+def _fq_bwd(_, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def int8_matmul(x: jax.Array, qw: QuantizedWeight,
+                x_scale: Optional[jax.Array] = None,
+                out_dtype=jnp.float32) -> jax.Array:
+    """``x @ W`` on the INT8 datapath: int8 operands, INT32 accumulation.
+
+    x: float [..., K] (quantized on the fly unless int8 already)
+    Returns float [..., N] = (x_q @ w_q) * x_scale * w_scale.
+    """
+    if x.dtype == jnp.int8:
+        xq, xs = x, (x_scale if x_scale is not None else jnp.float32(1.0))
+    else:
+        xs = act_scale(x) if x_scale is None else x_scale
+        xq = jnp.clip(jnp.round(x / xs), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, qw.q,
+        dimension_numbers=(((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * xs * qw.scale).astype(out_dtype)
+
+
+def quant_error(w: jax.Array) -> jax.Array:
+    """RMS relative quantization error (diagnostics)."""
+    wq = dequantize_weight(quantize_weight(w))
+    denom = jnp.sqrt(jnp.mean(w.astype(jnp.float32) ** 2)) + 1e-12
+    return jnp.sqrt(jnp.mean((w - wq) ** 2)) / denom

@@ -1,0 +1,127 @@
+"""STA tensor-PE geometry → TPU tiling (paper §III-B, Fig. 2/3).
+
+The paper's ``A×B×C @ M×N`` describes an M×N systolic grid of tensor PEs, each
+an A×C array of B-input dot-product units, output-stationary. On TPU:
+
+  * the MXU is a fixed 128×128 systolic array — the grid (M×N) and PE dims
+    (A×C) collapse into the Pallas GEMM block shape (bm, bn);
+  * B (dot-unit depth) maps to the K-tile (bk) streamed through VMEM;
+  * "output-stationary" maps to an accumulator tile held in VMEM scratch
+    across the K grid dimension (one final store replaces the shift-out).
+
+This module is the single source of truth for block-shape selection and for
+the per-PE resource ratios consumed by the analytical area model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.config import StaConfig
+
+__all__ = [
+    "PeResources", "sta_pe_resources", "sa_pe_resources", "dbb_pe_resources",
+    "choose_block_shape", "mxu_utilization",
+]
+
+MXU_DIM = 128          # TPU MXU systolic dimension
+LANE = 128             # VREG lane count (last-dim tiling quantum)
+SUBLANE = 8            # sublane quantum for f32
+VMEM_BYTES = 16 * 2**20  # ~16 MiB usable VMEM per core (v5e)
+
+
+@dataclasses.dataclass(frozen=True)
+class PeResources:
+    """Per-PE resource counts, normalized per effective MAC/cycle.
+
+    Units: flip-flop bit counts and datapath unit counts; the area model
+    multiplies these by calibrated per-unit costs.
+    """
+    macs: int                # physical multipliers
+    eff_macs: int            # effective MACs/cycle (throughput)
+    operand_ff: int          # operand pipeline register bits
+    acc_ff: int              # accumulator register bits
+    tree_adds: int           # adder-tree 2-input adders (narrow)
+    acc_adds: int            # INT32 accumulate adders
+    mux_inputs: int          # total mux input legs (DBB's activation select)
+    fifo_bits: int = 0       # SMT-SA FIFO storage bits
+    index_ff: int = 0        # DBB non-zero index register bits
+
+
+def sa_pe_resources() -> PeResources:
+    """Classic SA scalar PE: 2 INT8 operand regs, INT32 acc, 1 MAC."""
+    return PeResources(macs=1, eff_macs=1, operand_ff=16, acc_ff=32,
+                       tree_adds=0, acc_adds=1, mux_inputs=0)
+
+
+def sta_pe_resources(a: int, b: int, c: int) -> PeResources:
+    """Tensor-PE A×B×C: A·C dot-units of depth B.
+
+    Operand regs: A row-vectors and C col-vectors of B INT8 each — each row
+    register is reused by C dot units (and vice versa), which is exactly the
+    paper's "intra-PE operand reuse".
+    """
+    macs = a * b * c
+    operand_ff = (a + c) * b * 8
+    acc_ff = a * c * 32
+    tree_adds = a * c * (b - 1)
+    acc_adds = a * c
+    return PeResources(macs=macs, eff_macs=macs, operand_ff=operand_ff,
+                       acc_ff=acc_ff, tree_adds=tree_adds, acc_adds=acc_adds,
+                       mux_inputs=0)
+
+
+def dbb_pe_resources(a: int, b: int, c: int, nnz: int) -> PeResources:
+    """STA-DBB tensor-PE: each B-input dot unit keeps only `nnz` multipliers,
+    each fed by a B:1 activation mux + log2(B)-bit index register
+    (paper §IV-B: "trade two 8-bit multipliers for two 8-bit 4:1 MUXes").
+    Weight operand registers shrink to the nnz values (+ indices); activation
+    registers still hold all B inputs. Effective throughput stays A·B·C.
+    """
+    idx_bits = max(1, (b - 1).bit_length())
+    macs = a * nnz * c
+    operand_ff = a * b * 8 + c * nnz * 8       # acts full, weights compressed
+    index_ff = c * nnz * idx_bits
+    acc_ff = a * c * 32
+    tree_adds = a * c * (nnz - 1)
+    acc_adds = a * c
+    mux_inputs = a * c * nnz * b               # nnz muxes of radix B per unit
+    return PeResources(macs=macs, eff_macs=a * b * c, operand_ff=operand_ff,
+                       acc_ff=acc_ff, tree_adds=tree_adds, acc_adds=acc_adds,
+                       mux_inputs=mux_inputs, index_ff=index_ff)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def choose_block_shape(m: int, k: int, n: int, cfg: StaConfig,
+                       itemsize: int = 2) -> Tuple[int, int, int]:
+    """Pick (bm, bk, bn) honoring MXU alignment and the VMEM budget.
+
+    VMEM working set = bm·bk + bk·bn operand tiles + bm·bn f32 accumulator;
+    shrink K first (it streams), then M (batch rows), keeping N lane-aligned.
+    """
+    bm = min(cfg.block_m, _round_up(max(m, 1), SUBLANE))
+    bk = min(cfg.block_k, _round_up(max(k, 1), LANE))
+    bn = min(cfg.block_n, _round_up(max(n, 1), LANE))
+
+    def footprint(bm, bk, bn):
+        return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bk > LANE:
+        bk //= 2
+    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bm > SUBLANE:
+        bm //= 2
+    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bn > LANE:
+        bn //= 2
+    return bm, bk, bn
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Fraction of MXU issue slots doing useful work for an M×K×N GEMM
+    (padding waste from non-128-aligned dims — the TPU analogue of the
+    paper's PE-array utilization argument)."""
+    mm, kk, nn = (_round_up(m, MXU_DIM), _round_up(k, MXU_DIM),
+                  _round_up(n, MXU_DIM))
+    return (m * k * n) / float(mm * kk * nn)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataState, SyntheticCNN, SyntheticLM,
+                                 make_pipeline)
+
+__all__ = ["SyntheticLM", "SyntheticCNN", "DataState", "make_pipeline"]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+sta_gemm: dense Tensor-PE-tiled GEMM (output-stationary VMEM accumulation).
+dbb_gemm: DBB structured-sparse GEMM with on-chip bitmask decompression.
+"""

@@ -1,0 +1,51 @@
+"""Shared Pallas kernel utilities (TPU target, interpret-mode on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.7 name
+    from jax.experimental.pallas import tpu as pltpu
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:  # pragma: no cover - older naming
+    from jax.experimental.pallas import tpu as pltpu
+    CompilerParams = pltpu.TPUCompilerParams  # type: ignore[attr-defined]
+
+__all__ = ["pltpu", "CompilerParams", "on_cpu", "default_interpret",
+           "cdiv", "round_up", "popcount_u32", "acc_dtype_for"]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on this CPU container."""
+    return on_cpu()
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def popcount_u32(x: jax.Array, bits: int) -> jax.Array:
+    """Population count via an unrolled shift-and-add (Pallas-safe: no
+    dependence on lax.population_count lowering inside Mosaic)."""
+    out = jnp.zeros_like(x)
+    for t in range(bits):
+        out = out + ((x >> t) & 1)
+    return out
+
+
+def acc_dtype_for(operand_dtype) -> jnp.dtype:
+    """Accumulator dtype on the PE datapath: INT32 for INT8 operands
+    (the paper's datapath), f32 otherwise."""
+    if operand_dtype == jnp.int8:
+        return jnp.dtype(jnp.int32)
+    return jnp.dtype(jnp.float32)

@@ -1,0 +1,4 @@
+from repro.kernels.dbb_gemm.ops import dbb_gemm, dbb_gemm_packed
+from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
+
+__all__ = ["dbb_gemm", "dbb_gemm_packed", "dbb_gemm_ref"]

@@ -1,0 +1,122 @@
+"""DBB structured-sparse GEMM Pallas kernel (paper §IV, STA-DBB).
+
+TPU adaptation (DESIGN.md §2): the STA-DBB hardware feeds each dot unit the
+``k`` non-zero weights plus a bitmask, and *muxes* the matching activations.
+The MXU has no muxes, so the exploitable win on TPU is **HBM bandwidth**: the
+weight stream stays DBB-compressed in HBM — `values [K/B·k, N]` + one mask
+byte per block, 62.5% of dense bytes at k=4/B=8 — and is decompressed
+*inside the kernel* in VMEM right before the MXU dot. Decode-time GEMMs are
+memory-bound, so the compression moves the dominant roofline term directly.
+
+The decompression is the paper's mux, inverted: for dense block position
+``pos``, the source slot is ``rank(pos) = popcount(mask & ((1<<pos)-1))`` and
+the value is kept iff bit ``pos`` is set. Everything is unrolled over the
+static block geometry (B, k), so the kernel body is pure VPU select/add ops
+followed by a single MXU dot per tile.
+
+Accumulation is output-stationary in VMEM scratch across the K grid
+dimension, identical to the dense STA kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import CompilerParams, acc_dtype_for, pltpu, popcount_u32
+
+__all__ = ["dbb_gemm_pallas"]
+
+
+def _decompress_tile(vals, mask, *, block: int, nnz: int):
+    """Expand a compressed weight tile to dense.
+
+    vals: [nb * nnz, bn]  (slot-major per block: rows kb*nnz + s)
+    mask: [nb, bn] int32 bitmask, bit pos set ⇔ dense position kept
+    returns: [nb * block, bn] dense tile
+    """
+    nb_nnz, bn = vals.shape
+    nb = nb_nnz // nnz
+    v = vals.reshape(nb, nnz, bn)
+    rows = []
+    for pos in range(block):
+        bit = (mask >> pos) & 1                        # [nb, bn]
+        below = mask & ((1 << pos) - 1)
+        rank = popcount_u32(below, pos) if pos else jnp.zeros_like(mask)
+        val_at_rank = jnp.zeros_like(v[:, 0, :])
+        for s in range(min(nnz, pos + 1)):
+            val_at_rank = jnp.where(rank == s, v[:, s, :], val_at_rank)
+        rows.append(jnp.where(bit == 1, val_at_rank,
+                              jnp.zeros_like(val_at_rank)))
+    dense = jnp.stack(rows, axis=1)                    # [nb, block, bn]
+    return dense.reshape(nb * block, bn)
+
+
+def _dbb_gemm_kernel(x_ref, v_ref, m_ref, o_ref, acc_ref, *,
+                     n_k: int, block: int, nnz: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decompress_tile(v_ref[...], m_ref[...], block=block, nnz=nnz)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w.astype(x_ref.dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def dbb_gemm_pallas(
+    x: jax.Array,          # [M, K]
+    values: jax.Array,     # [K//B * k, N] compressed non-zeros (slot-major)
+    bitmask: jax.Array,    # [K//B, N] int32 (low `block` bits used)
+    *,
+    block: int = 8,
+    nnz: int = 4,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x @ unpack(values, bitmask)`` with on-chip DBB decompression."""
+    m, k_dim = x.shape
+    kc, n = values.shape
+    nb_total = k_dim // block
+    assert kc == nb_total * nnz, (values.shape, k_dim, block, nnz)
+    assert bitmask.shape == (nb_total, n), bitmask.shape
+    assert k_dim % block_k == 0 and block_k % block == 0
+    assert m % block_m == 0 and n % block_n == 0
+
+    acc_dtype = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc_dtype if x.dtype == jnp.int8 else x.dtype
+    n_k = k_dim // block_k
+    nb_tile = block_k // block            # blocks per K tile
+    bkc = nb_tile * nnz                   # compressed rows per K tile
+
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_dbb_gemm_kernel, n_k=n_k, block=block,
+                               nnz=nnz, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkc, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((nb_tile, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), acc_dtype)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, values, bitmask)

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for DBB GEMM.
+
+`dbb_gemm_packed` consumes a `core.dbb.DbbWeight` (the framework's stored
+format); `dbb_gemm` takes raw (values, bitmask). Both pad M to the block
+grid and fall back to the oracle when `use_kernel=False`.
+
+K and N must already be block-aligned — weights are packed offline, and
+every assigned architecture's matmul dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dbb import DbbWeight
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
+from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
+
+__all__ = ["dbb_gemm", "dbb_gemm_packed"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "nnz", "block_m", "block_k", "block_n",
+                     "out_dtype", "interpret", "use_kernel"))
+def dbb_gemm(
+    x: jax.Array,          # [..., K]
+    values: jax.Array,     # [K//B * k, N]
+    bitmask: jax.Array,    # [K//B, N] integer
+    *,
+    block: int = 8,
+    nnz: int = 4,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    *batch, k_dim = x.shape
+    n = values.shape[1]
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    mask_i32 = bitmask.astype(jnp.int32)
+
+    if not use_kernel:
+        y = dbb_gemm_ref(x2, values, mask_i32, block=block, nnz=nnz,
+                         out_dtype=out_dtype)
+        return y.reshape(*batch, n)
+
+    assert k_dim % block == 0, (k_dim, block)
+    bm = min(block_m, round_up(m, 8))
+    bk = min(round_up(block_k, block) // block * block, block_k) or block
+    bk = max(block, bk // block * block)
+    bn = min(block_n, round_up(n, 128))
+    # pad every axis to its block grid: M rows (zeros), K by whole DBB
+    # blocks (zero value-rows + zero mask-rows), N by zero columns
+    mp = round_up(m, bm)
+    kp = round_up(k_dim, bk)
+    np_ = round_up(n, bn)
+    nb, nbp = k_dim // block, kp // block
+    xp = x2 if (mp, kp) == (m, k_dim) else jnp.pad(
+        x2, ((0, mp - m), (0, kp - k_dim)))
+    vp, mp_arr = values, mask_i32
+    if nbp != nb:
+        vp = jnp.pad(vp, ((0, (nbp - nb) * nnz), (0, 0)))
+        mp_arr = jnp.pad(mp_arr, ((0, nbp - nb), (0, 0)))
+    if np_ != n:
+        vp = jnp.pad(vp, ((0, 0), (0, np_ - n)))
+        mp_arr = jnp.pad(mp_arr, ((0, 0), (0, np_ - n)))
+    y = dbb_gemm_pallas(xp, vp, mp_arr, block=block, nnz=nnz,
+                        block_m=bm, block_k=bk, block_n=bn,
+                        out_dtype=out_dtype, interpret=interpret)
+    return y[:m, :n].reshape(*batch, n)
+
+
+def dbb_gemm_packed(x: jax.Array, p: DbbWeight, *, out_dtype=None,
+                    interpret: Optional[bool] = None,
+                    use_kernel: bool = True, **block_kw) -> jax.Array:
+    """GEMM against a packed DbbWeight; applies the per-channel quant scale."""
+    y = dbb_gemm(x, p.values, p.bitmask, block=p.block, nnz=p.nnz,
+                 out_dtype=out_dtype, interpret=interpret,
+                 use_kernel=use_kernel, **block_kw)
+    if p.scale is not None:
+        y = (y.astype(jnp.float32) * p.scale).astype(
+            out_dtype if out_dtype is not None else y.dtype)
+    return y

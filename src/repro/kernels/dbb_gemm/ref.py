@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the DBB GEMM kernel: decompress densely, then matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dbb import DbbWeight, unpack_dbb
+from repro.kernels.common import acc_dtype_for
+
+__all__ = ["dbb_gemm_ref", "decompress_ref"]
+
+
+def decompress_ref(values: jax.Array, bitmask: jax.Array, *,
+                   block: int, nnz: int) -> jax.Array:
+    """Dense [K, N] from (values [K/B*k, N], bitmask [K/B, N])."""
+    nb, n = bitmask.shape
+    v = values.reshape(nb, nnz, n)
+    pos = jnp.arange(block)                                    # [B]
+    bit = (bitmask[:, None, :] >> pos[None, :, None]) & 1      # [nb, B, n]
+    below_mask = (jnp.uint32(1) << pos.astype(jnp.uint32)) - 1
+    below = bitmask[:, None, :].astype(jnp.uint32) & below_mask[None, :, None]
+    # rank = popcount(below): below has < 32 bits set, use bit-sum
+    rank = jnp.zeros_like(below, dtype=jnp.int32)
+    for t in range(block):
+        rank = rank + ((below >> t) & 1).astype(jnp.int32)
+    slot = jnp.clip(rank, 0, nnz - 1)
+    gathered = jnp.take_along_axis(v, slot, axis=1)            # [nb, B, n]
+    dense = jnp.where(bit == 1, gathered, jnp.zeros_like(gathered))
+    return dense.reshape(nb * block, n)
+
+
+def dbb_gemm_ref(x: jax.Array, values: jax.Array, bitmask: jax.Array, *,
+                 block: int, nnz: int, out_dtype=None) -> jax.Array:
+    acc = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc if x.dtype == jnp.int8 else x.dtype
+    w = decompress_ref(values, bitmask, block=block, nnz=nnz).astype(x.dtype)
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc)
+    return y.astype(out_dtype)
+
+
+def dbb_gemm_ref_from_packed(x: jax.Array, p: DbbWeight,
+                             out_dtype=None) -> jax.Array:
+    """Oracle via core.dbb.unpack_dbb (independent decompression path)."""
+    w = unpack_dbb(p).astype(x.dtype)
+    acc = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc if x.dtype == jnp.int8 else x.dtype
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc)
+    return y.astype(out_dtype)

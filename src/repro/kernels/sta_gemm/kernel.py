@@ -1,0 +1,79 @@
+"""STA dense GEMM Pallas kernel — the Tensor-PE array as VMEM tiling.
+
+Paper mapping (DESIGN.md §2): the A×B×C @ M×N tensor-PE grid becomes a
+(bm, bk, bn) block decomposition. The accumulator tile is *output-stationary*
+in VMEM scratch across the K grid dimension — the TPU analogue of keeping
+INT32 accumulators in place while INT8 operands shift through the array
+(the paper's modified dataflow, §II). INT8 operands accumulate in INT32 via
+``preferred_element_type``, exactly the SA/STA datapath.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import CompilerParams, acc_dtype_for, pltpu
+
+__all__ = ["sta_gemm_pallas"]
+
+
+def _sta_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    """One (i, j, k) grid step: acc[i,j] += x[i,k] @ w[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def sta_gemm_pallas(
+    x: jax.Array,             # [M, K]
+    w: jax.Array,             # [K, N]
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dense ``x @ w`` with output-stationary VMEM accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        f"shape ({m},{k},{n}) not divisible by blocks "
+        f"({block_m},{block_k},{block_n}); pad at the ops layer")
+    acc_dtype = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc_dtype if x.dtype == jnp.int8 else x.dtype
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_sta_gemm_kernel, n_k=n_k, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), acc_dtype)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper around the STA GEMM kernel.
+
+Handles batch dims, padding to block multiples, dtype policy, and the
+CPU-interpret fallback. Block shapes default to `core.sta.choose_block_shape`
+so the Tensor-PE geometry config drives the tiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import StaConfig
+from repro.core.sta import choose_block_shape
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
+from repro.kernels.sta_gemm.ref import sta_gemm_ref
+
+__all__ = ["sta_gemm"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "out_dtype",
+                     "interpret", "use_kernel"))
+def sta_gemm(
+    x: jax.Array,                # [..., K]
+    w: jax.Array,                # [K, N]
+    *,
+    block_m: int = 0,
+    block_k: int = 0,
+    block_n: int = 0,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Dense GEMM through the STA Pallas kernel (oracle fallback optional)."""
+    if interpret is None:
+        interpret = default_interpret()
+    *batch, k = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    if not use_kernel:
+        y = sta_gemm_ref(x2, w, out_dtype=out_dtype)
+        return y.reshape(*batch, n)
+
+    cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
+                    block_n=block_n or 128)
+    bm, bk, bn = choose_block_shape(m, k, n, cfg,
+                                    itemsize=x.dtype.itemsize)
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x2
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    y = sta_gemm_pallas(xp, wp, block_m=bm, block_k=bk, block_n=bn,
+                        out_dtype=out_dtype, interpret=interpret)
+    y = y[:m, :n]
+    return y.reshape(*batch, n)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the STA dense GEMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import acc_dtype_for
+
+__all__ = ["sta_gemm_ref"]
+
+
+def sta_gemm_ref(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """``x @ w`` with the same accumulation semantics as the kernel:
+    INT8×INT8→INT32 on the integer datapath, f32 accumulation otherwise."""
+    acc = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = acc if x.dtype == jnp.int8 else x.dtype
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc)
+    return y.astype(out_dtype)

@@ -1,0 +1,224 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+`input_specs` returns weak-type-correct, shardable SDS trees for each model
+input (and the cache/state trees for serving cells) — no device allocation
+ever happens in the dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import (ModelConfig, RunConfig, ShapeSpec, TrainConfig,
+                          MeshConfig)
+from repro.dist import sharding as shd
+from repro.models import registry
+from repro.train.loop import TrainState, init_train_state
+
+__all__ = ["run_config_for", "train_input_specs", "serve_input_specs",
+           "train_state_specs", "serve_param_specs", "input_specs",
+           "sds_tree"]
+
+SDS = jax.ShapeDtypeStruct
+
+# the two assigned giants need factored optimizer state + bf16 params to fit
+_BIG_MOE = ("arctic-480b", "kimi-k2-1t-a32b")
+
+
+# activation-memory budget: tokens per data-shard per microbatch. 16k keeps
+# a 60L×d7168 layer-boundary save set under ~2 GB/device (§Perf iteration 3)
+MB_TOKENS_TARGET = 16_384
+
+
+def pad_attention_heads(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Deployment transform (§Perf iteration 4): pad Q heads up to a
+    multiple of the model-axis size, Megatron-padded-vocab style.
+
+    When num_heads % tp != 0 GSPMD cannot keep heads local, falls back to
+    contracting head_dim across shards, and every attention score picks up
+    an all-reduce (measured: ~290 GB/step on qwen train_4k). Padded Q heads
+    shard cleanly; KV projections replicate via the `hkv % tp != 0` rule in
+    dist/sharding.py, so scores are shard-local. The extra heads are a
+    strict superset of the published arch (zero-extended at init, trainable
+    thereafter — exactly like Megatron's padded embedding rows).
+    """
+    if cfg.family in ("cnn", "rwkv6") or cfg.num_heads % tp == 0:
+        return cfg
+    mha = cfg.num_kv_heads == cfg.num_heads
+    hq = -(-cfg.num_heads // tp) * tp
+    while not mha and hq % cfg.num_kv_heads:
+        hq += tp                    # GQA: padded heads must group evenly
+    return cfg.replace(num_heads=hq,
+                       num_kv_heads=hq if mha else cfg.num_kv_heads,
+                       head_dim=cfg.resolved_head_dim)
+
+
+def microbatches_for(shape: Optional[ShapeSpec],
+                     data_shards: int = 16,
+                     cfg: Optional[ModelConfig] = None,
+                     tp: int = 16) -> int:
+    if shape is None or shape.kind != "train":
+        return 1
+    if shape.global_batch % data_shards:
+        return 1
+    b_loc = shape.global_batch // data_shards
+    target = MB_TOKENS_TARGET
+    if cfg is not None and cfg.family == "moe_lm":
+        # FSDP'd expert weights are re-gathered and their grads re-reduced
+        # once per microbatch — for the MoE giants that wire traffic
+        # dominates activation memory, so run the whole batch in one
+        # microbatch (§Perf iteration 14)
+        target = MB_TOKENS_TARGET * 8
+    m = min(b_loc, max(1, (b_loc * shape.seq_len) // target))
+    if cfg is not None and cfg.parallel != "dp":
+        # saved-activation budget: the named mlp_wi/wg saves cost
+        # tokens_mb × L × gates × (d_ff/tp) × 2B per device — cap at ~3 GB
+        gates = 2 if cfg.mlp_gated else 1
+        f_loc = max(cfg.d_ff // max(tp, 1), 1)
+        saved = (b_loc * shape.seq_len * cfg.num_layers * gates
+                 * f_loc * 2)
+        m = max(m, min(b_loc, -(-saved // (3 << 30))))
+    while b_loc % m:            # round UP to a divisor (memory cap is hard)
+        m += 1
+    return min(m, b_loc)
+
+
+def run_config_for(cfg: ModelConfig, shape: Optional[ShapeSpec] = None,
+                   data_shards: int = 16, model_shards: int = 16,
+                   **train_kw) -> RunConfig:
+    opt = "adafactor" if cfg.name in _BIG_MOE else "adamw"
+    if cfg.name in _BIG_MOE:
+        cfg = cfg.replace(param_dtype="bfloat16")
+    # §Perf iteration 12: d<=2048 models are TP-boundary-bound at 16-way
+    # model parallelism — flip the model axis to batch parallelism for
+    # training (params replicated + ZeRO; ~4x less wire traffic). Giant
+    # vocabs stay vocab-parallel (the CE/embedding win dominates there).
+    eff_shards = data_shards
+    if (shape is not None and shape.kind == "train"
+            and cfg.d_model <= 2048 and cfg.vocab_size <= 100_000
+            and cfg.family != "moe_lm"
+            and shape.global_batch % (data_shards * model_shards) == 0):
+        # only when the batch actually divides data×model — otherwise the
+        # model axis would sit idle and replicate compute 16×
+        cfg = cfg.replace(parallel="dp")
+        eff_shards = data_shards * model_shards
+    train_kw.setdefault("microbatches",
+                        microbatches_for(shape, eff_shards, cfg=cfg,
+                                         tp=model_shards))
+    train = TrainConfig(optimizer=opt, **train_kw)
+    return RunConfig(model=cfg, train=train)
+
+
+def sds_tree(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: SDS(x.shape, x.dtype) if hasattr(x, "shape") else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# batch inputs
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """{tokens|embeds, labels, loss_mask, [prefix_embeds]} SDS for one step."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "cnn":
+        return {"images": SDS((b, cfg.cnn_img, cfg.cnn_img, cfg.cnn_in_ch),
+                              jnp.float32),
+                "labels": SDS((b,), jnp.int32)}
+    out: Dict[str, jax.ShapeDtypeStruct] = {
+        "labels": SDS((b, s), jnp.int32),
+        "loss_mask": SDS((b, s), jnp.float32),
+    }
+    if cfg.embeds_input:
+        out["embeds"] = SDS((b, s, cfg.d_model), dt)
+    elif cfg.prefix_embed_len:
+        out["tokens"] = SDS((b, s - cfg.prefix_embed_len), jnp.int32)
+        out["prefix_embeds"] = SDS((b, cfg.prefix_embed_len, cfg.d_model), dt)
+    else:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeSpec
+                      ) -> Tuple[Any, Any]:
+    """(tokens_or_batch, cache) SDS for decode/prefill cells."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(registry.init_cache, cfg, b, s))
+    if shape.kind == "decode":
+        return SDS((b,), jnp.int32), cache
+    # prefill: full-context batch (no labels)
+    batch = dict(train_input_specs(cfg, shape))
+    batch.pop("labels", None)
+    batch.pop("loss_mask", None)
+    return batch, cache
+
+
+# ---------------------------------------------------------------------------
+# state + sharding assembly
+# ---------------------------------------------------------------------------
+
+def train_state_specs(run_cfg: RunConfig, mesh: Mesh,
+                      fsdp: Optional[int] = shd.FSDP_MIN_SHARD_ELEMS
+                      ) -> Tuple[Any, Any]:
+    """(state_sds, state_spec_tree) for TrainState under `mesh`."""
+    state_sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), run_cfg))
+    pspecs = shd.param_specs(state_sds.params, mesh, run_cfg.model,
+                             fsdp_min_shard_elems=fsdp)
+    ospecs = shd.opt_state_specs_like(state_sds.opt_state, state_sds.params,
+                                      pspecs, mesh)
+    efspecs = (None if state_sds.ef is None else
+               shd.opt_state_specs_like({"m": state_sds.ef},
+                                        state_sds.params, pspecs, mesh)["m"])
+    spec = TrainState(params=pspecs, opt_state=ospecs, ef=efspecs,
+                      step=P())
+    return state_sds, spec
+
+
+def serve_param_specs(cfg: ModelConfig, mesh: Mesh, packed: bool = False,
+                      int8: bool = False,
+                      fsdp: Optional[int] = shd.FSDP_MIN_SHARD_ELEMS
+                      ) -> Tuple[Any, Any]:
+    """(params_sds, spec_tree) for serving weights (cfg.dtype at rest;
+    optionally DBB-packed, optionally INT8 values + per-channel scales —
+    the paper's deployment format)."""
+    def build():
+        p = registry.init_params(jax.random.PRNGKey(0), cfg)
+        p = jax.tree_util.tree_map(
+            lambda x: x.astype(cfg.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
+        if packed:
+            from repro.core.dbb_linear import pack_tree
+            p = pack_tree(p, cfg.dbb, quantize=int8)
+        return p
+
+    params_sds = jax.eval_shape(build)
+    specs = shd.param_specs(params_sds, mesh, cfg,
+                            fsdp_min_shard_elems=fsdp)
+    return params_sds, specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict:
+    """Sharding-annotated SDS dict for the cell's step inputs (brief step 2):
+    training → batch dict; serving → (tokens/batch, cache)."""
+    if shape.kind == "train":
+        sds = train_input_specs(cfg, shape)
+        specs = shd.batch_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        return {"batch": sds, "specs": {k: specs.get(k, P()) for k in sds}}
+    tok, cache = serve_input_specs(cfg, shape)
+    cspecs = shd.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    ba = shd._batch_axes(mesh, shape.global_batch)
+    if shape.kind == "decode":
+        tspec: Any = P(ba)
+    else:
+        full = shd.batch_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        tspec = {k: full.get(k, P()) for k in tok}
+    return {"tokens": tok, "cache": cache,
+            "specs": {"tokens": tspec, "cache": cspecs}}

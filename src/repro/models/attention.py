@@ -1,0 +1,327 @@
+"""GQA/MQA attention: naive path for short sequences, chunked
+(memory-efficient, flash-style) path for long prefill, cached decode path.
+
+The chunked path unrolls q-chunks in Python (static) and scans only the
+kv-chunks each q-chunk actually attends to — no wasted upper-triangle
+compute, static shapes throughout, HLO size linear in the chunk count.
+KV heads are never materialized at Hq width (GQA grouping stays factored).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.dist.mesh_ctx import current_mesh
+from repro.models.common import apply_rope, linear_init, normal_init
+
+__all__ = ["attention_init", "attention_apply", "decode_attention_apply",
+           "init_kv_cache"]
+
+_NEG_INF = -1e30
+
+
+def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d, hq, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    return {
+        "q_proj": linear_init(ks[0], d, hq * hd, dtype, bias=cfg.qkv_bias),
+        "k_proj": linear_init(ks[1], d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "v_proj": linear_init(ks[2], d, hkv * hd, dtype, bias=cfg.qkv_bias),
+        "o_proj": linear_init(ks[3], hq * hd, d, dtype,
+                              scale=1.0 / math.sqrt(hq * hd * 2 * cfg.num_layers)),
+    }
+
+
+def _project_qkv(p: Dict, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def lin(pp, x):
+        y = x @ pp["w"].astype(x.dtype)
+        if "b" in pp:
+            y = y + pp["b"].astype(x.dtype)
+        return y
+
+    q = lin(p["q_proj"], x).reshape(b, s, hq, hd)
+    k = lin(p["k_proj"], x).reshape(b, s, hkv, hd)
+    v = lin(p["v_proj"], x).reshape(b, s, hkv, hd)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores(q, k, cfg: ModelConfig):
+    """q: [B,T,Hkv,G,D], k: [B,S,Hkv,D] -> scores [B,Hkv,G,T,S] (f32).
+
+    Operands stay in their storage dtype (bf16) — the MXU accumulates in
+    f32 via preferred_element_type. Casting q/k to f32 up front would make
+    XLA materialize (and on scan paths hoist) f32 copies of the whole KV
+    cache: 2× the HBM traffic for zero precision gain on the MXU
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bthgd,bshd->bhgts", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        s = c * jnp.tanh(s / c)
+    return s
+
+
+def _mask_bias(qpos, kpos, window: int) -> jax.Array:
+    """[T, S] additive bias: causal (+ optional sliding window)."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return jnp.where(m, 0.0, _NEG_INF)
+
+
+def _naive_attention(q, k, v, qpos, kpos, cfg: ModelConfig):
+    """q:[B,T,Hq,D] k,v:[B,S,Hkv,D]; quadratic reference path."""
+    b, t, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, t, hkv, g, hd)
+    s = _scores(qg, k, cfg) + _mask_bias(qpos, kpos, cfg.sliding_window)
+    p = jax.nn.softmax(s, axis=-1)
+    # PV in storage dtype with f32 accumulation (flash-attention practice)
+    o = jnp.einsum("bhgts,bshd->bthgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, t, hq, hd).astype(q.dtype)
+
+
+def _chunked_causal_attention(q, k, v, cfg: ModelConfig, chunk: int):
+    """No-waste blocked causal attention with running-softmax combine."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    window = cfg.sliding_window
+    qg = q.reshape(b, n, chunk, hkv, g, hd)
+    kc = k.reshape(b, n, chunk, hkv, hd)
+    vc = v.reshape(b, n, chunk, hkv, hd)
+    # chunk-major for scan: [n, B, C, H, D]
+    kc = jnp.moveaxis(kc, 1, 0)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    outs = []
+    for i in range(n):                      # static unroll over q chunks
+        j0 = 0
+        if window > 0:
+            j0 = max(0, (i * chunk - window) // chunk)
+        qi = qg[:, i]                       # [B, C, Hkv, G, D] storage dtype
+        qpos = i * chunk + jnp.arange(chunk)
+
+        def step(carry, xs):
+            m_run, l_run, acc = carry
+            kj, vj, jidx = xs               # [B,C,H,D], [B,C,H,D], scalar
+            sc = _scores(qi, kj, cfg)       # [B,H,G,T,S]
+            kpos = jidx * chunk + jnp.arange(chunk)
+            sc = sc + _mask_bias(qpos, kpos, window)
+            m_new = jnp.maximum(m_run, sc.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            pj = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * alpha + pj.sum(axis=-1)
+            oj = jnp.einsum("bhgts,bshd->bhgtd", pj.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + oj
+            return (m_new, l_new, acc), None
+
+        shape_ml = (b, hkv, g, chunk)
+        carry0 = (jnp.full(shape_ml, _NEG_INF, jnp.float32),
+                  jnp.zeros(shape_ml, jnp.float32),
+                  jnp.zeros((*shape_ml, hd), jnp.float32))
+        xs = (kc[j0:i + 1], vc[j0:i + 1], jnp.arange(j0, i + 1))
+        # flash-attention backward: recompute scores per kv-chunk instead
+        # of saving [B,H,C,C] probability tensors for every chunk pair
+        (m_f, l_f, acc), _ = jax.lax.scan(jax.checkpoint(step), carry0, xs)
+        o = acc / jnp.maximum(l_f[..., None], 1e-30)   # [B,H,G,T,D]
+        outs.append(jnp.moveaxis(o, 3, 1).reshape(b, chunk, hq, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def _attention_core(q, k, v, positions, cfg: ModelConfig) -> jax.Array:
+    """Dispatch naive vs chunked on projected q/k/v. Returns o [B,S,Hq,D]."""
+    s = q.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if s > 2 * cfg.attn_chunk else "naive"
+    if impl == "chunked" and s % cfg.attn_chunk == 0:
+        return _chunked_causal_attention(q, k, v, cfg, cfg.attn_chunk)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    return _naive_attention(q, k, v, pos1d, pos1d, cfg)
+
+
+def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                    positions: Optional[jax.Array] = None,
+                    window_override: Optional[int] = None) -> jax.Array:
+    """Full-sequence (train / prefill) attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if window_override is not None:
+        cfg = cfg.replace(sliding_window=window_override)
+    mesh = current_mesh()
+    tp = mesh.shape["model"] if (mesh is not None
+                                 and "model" in mesh.axis_names
+                                 and cfg.parallel != "dp") else 1
+    if tp > 1 and cfg.num_heads % tp == 0 and s > 1:
+        return _attention_tp(p, cfg, x, positions, mesh, tp)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = _attention_core(q, k, v, positions, cfg)
+    b_, s_, hq, hd = o.shape
+    y = o.reshape(b_, s_, hq * hd) @ p["o_proj"]["w"].astype(o.dtype)
+    return y
+
+
+def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, mesh, tp: int) -> jax.Array:
+    """Explicit tensor-parallel attention (§Perf iterations 4+5).
+
+    Q heads shard over "model" (hq % tp == 0, padded upstream when needed);
+    K/V are computed per-shard from (small) replicated-or-gathered weights,
+    and each local Q head gathers its own KV head — all score/softmax/PV
+    work is shard-local, and the single boundary collective is the o_proj
+    row-parallel psum in the storage dtype (bf16)."""
+    from repro.models.mlp import (batch_axes_for,   # avoid import cycle
+                                  seq_parallel_ok)
+
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hq_l = hq // tp
+    g = hq // hkv
+    ba = batch_axes_for(mesh, b)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    # sequence parallelism (§Perf iteration 7): residual stays seq-sharded;
+    # block entry all-gathers, block exit reduce-scatters — same bytes as
+    # the TP all-reduce at 2× the effective ring bandwidth, and norms /
+    # residual adds run on 1/tp of the tokens.
+    sp = seq_parallel_ok(cfg, s, tp)
+    xspec = P(ba, "model", None) if sp else P(ba, None, None)
+
+    # K/V projections stay column-sharded for COMPUTE (fractional heads are
+    # fine for the GEMM); the small K/V activations are all-gathered so the
+    # head-structured attention is shard-local. Computing K/V replicated
+    # instead costs the full projection per device (+264 TFLOP/step on
+    # qwen train_4k — §Perf iteration 6 refuted that variant).
+    kvd = hkv * hd
+    kv_shardable = kvd % tp == 0
+    kv_w = P(None, "model") if kv_shardable else P(None, None)
+    kv_b = P("model") if kv_shardable else P(None)
+    wspecs = {
+        "q_proj": {"w": P(None, "model")},
+        "k_proj": {"w": kv_w},
+        "v_proj": {"w": kv_w},
+        "o_proj": {"w": P("model", None)},
+    }
+    if "b" in p["q_proj"]:
+        wspecs["q_proj"]["b"] = P("model")
+        wspecs["k_proj"]["b"] = kv_b
+        wspecs["v_proj"]["b"] = kv_b
+
+    def lin(pp, xx):
+        y = xx @ pp["w"].astype(xx.dtype)
+        if "b" in pp:
+            y = y + pp["b"].astype(xx.dtype)
+        return y
+
+    def fn(xl, pl):
+        bl = xl.shape[0]
+        midx = jax.lax.axis_index("model")
+        if sp:      # gather sequence shards at block entry (SP)
+            xl = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        q = lin(pl["q_proj"], xl).reshape(bl, s, hq_l, hd)
+        k = lin(pl["k_proj"], xl)                     # [b,s,kvd/tp]
+        v = lin(pl["v_proj"], xl)
+        if kv_shardable:
+            k = jax.lax.all_gather(k, "model", axis=2, tiled=True)
+            v = jax.lax.all_gather(v, "model", axis=2, tiled=True)
+        k = k.reshape(bl, s, hkv, hd)
+        v = v.reshape(bl, s, hkv, hd)
+        if cfg.rope:
+            q = apply_rope(q, pos1d[None, :], cfg.rope_theta)
+            k = apply_rope(k, pos1d[None, :], cfg.rope_theta)
+        # each local q head pairs with its kv head (present locally)
+        kv_idx = (midx * hq_l + jnp.arange(hq_l)) // g
+        k_sel = jnp.take(k, kv_idx, axis=2)           # [b,s,hq_l,hd]
+        v_sel = jnp.take(v, kv_idx, axis=2)
+        o = _attention_core(q, k_sel, v_sel, positions, cfg)
+        y = o.reshape(bl, s, hq_l * hd) @ pl["o_proj"]["w"].astype(o.dtype)
+        if sp:      # reduce-scatter back to the seq-sharded residual
+            return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                        tiled=True)
+        return jax.lax.psum(y, "model")               # bf16 boundary reduce
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(xspec, wspecs),
+        out_specs=xspec,
+        check_vma=False)(x, {k: p[k] for k in wspecs})
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, hkv, hd), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                           cache_k: jax.Array, cache_v: jax.Array,
+                           lengths: jax.Array,
+                           window_override: Optional[int] = None,
+                           ring: bool = False
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: x [B, 1, d]; cache_k/v [B, Smax, Hkv, D];
+    lengths [B] current *absolute* context lengths. Returns (y, new_k, new_v).
+
+    ring=True treats the cache as a sliding-window ring buffer of size Smax:
+    the new KV lands at ``lengths % Smax`` and every slot written so far is
+    valid (window = Smax by construction). K entries are RoPE-rotated at
+    their absolute positions, so relative offsets stay correct after wrap.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    smax = cache_k.shape[1]
+    q, k, v = _project_qkv(p, cfg, x, lengths[:, None])
+    ins = (lengths % smax) if ring else lengths
+
+    def upd(cache, new, i):
+        return jax.lax.dynamic_update_slice(cache, new, (i, 0, 0))
+    new_k = jax.vmap(upd)(cache_k, k, ins)
+    new_v = jax.vmap(upd)(cache_v, v, ins)
+
+    qg = q.reshape(b, 1, hkv, g, hd)
+    sc = _scores(qg, new_k, cfg)                     # [B,H,G,1,Smax]
+    kpos = jnp.arange(smax)[None, :]                 # [1, Smax]
+    if ring:
+        valid = kpos < jnp.minimum(lengths[:, None] + 1, smax)
+    else:
+        valid = kpos <= lengths[:, None]
+        window = (cfg.sliding_window if window_override is None
+                  else window_override)
+        if window > 0:
+            valid &= kpos > (lengths[:, None] - window)
+    sc = sc + jnp.where(valid, 0.0, _NEG_INF)[:, None, None, None, :]
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", pr.astype(new_v.dtype), new_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+    y = o @ p["o_proj"]["w"].astype(x.dtype)
+    return y, new_k, new_v

@@ -1,0 +1,91 @@
+"""The paper's own model family: small CNNs with convolution *lowered to
+GEMM* (im2col), exactly the premise of the paper ("CNN layers are typically
+implemented by lowering 2D convolution to GEMM kernels").
+
+Every conv/fc weight is a GEMM weight matrix [K, N] with K = kh·kw·c_in,
+so the DBB 8×1 blocks run along the GEMM contraction dim — the same layout
+the STA-DBB hardware consumes, and the layout `core.dbb`/`kernels.dbb_gemm`
+expect. The forward can route matmuls through the Pallas kernels
+(`matmul="sta" | "dbb"`) or plain XLA (training).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.dbb import DbbWeight
+from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
+from repro.kernels.sta_gemm.ops import sta_gemm
+from repro.models.common import normal_init
+
+__all__ = ["cnn_init", "cnn_apply", "im2col"]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           pad: str = "SAME") -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major [C*kh*kw]; reorder to
+    # [kh*kw*C] so K blocks run over spatial-then-channel (any fixed order
+    # works for DBB; this matches the weight reshape below).
+    b, ho, wo, ckk = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    patches = jnp.moveaxis(patches, -2, -1)
+    return patches.reshape(b, ho, wo, kh * kw * c)
+
+
+def _matmul(x: jax.Array, w, mode: str) -> jax.Array:
+    if isinstance(w, DbbWeight):
+        return dbb_gemm_packed(x, w)
+    if mode == "sta":
+        return sta_gemm(x, w)
+    return x @ w
+
+
+def cnn_init(key, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    params: Dict = {}
+    cin, k = cfg.cnn_in_ch, cfg.cnn_kernel
+    keys = jax.random.split(key, len(cfg.cnn_channels) + 1)
+    for i, cout in enumerate(cfg.cnn_channels):
+        kdim = k * k * cin
+        params[f"conv{i}"] = {
+            "w": normal_init(keys[i], (kdim, cout), 1.0 / math.sqrt(kdim),
+                             dtype),
+            "b": jnp.zeros((cout,), dtype),
+        }
+        cin = cout
+    img = cfg.cnn_img // (2 ** len(cfg.cnn_channels))
+    fdim = cin * img * img
+    params["fc"] = {
+        "w": normal_init(keys[-1], (fdim, cfg.cnn_classes),
+                         1.0 / math.sqrt(fdim), dtype),
+        "b": jnp.zeros((cfg.cnn_classes,), dtype),
+    }
+    return params
+
+
+def cnn_apply(params: Dict, cfg: ModelConfig, images: jax.Array,
+              matmul: str = "xla") -> jax.Array:
+    """images: [B, H, W, C] -> logits [B, classes]."""
+    x = images
+    k = cfg.cnn_kernel
+    for i, cout in enumerate(cfg.cnn_channels):
+        b, h, w, c = x.shape
+        cols = im2col(x, k, k)                       # [B,H,W,k*k*C]
+        y = _matmul(cols.reshape(b * h * w, -1), params[f"conv{i}"]["w"],
+                    matmul)
+        y = y.reshape(b, h, w, cout) + params[f"conv{i}"]["b"]
+        y = jax.nn.relu(y)
+        x = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    return _matmul(flat, params["fc"]["w"], matmul) + params["fc"]["b"]

@@ -1,0 +1,121 @@
+"""Shared model building blocks (pure-functional, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+__all__ = [
+    "Initializer", "normal_init", "zeros_init", "norm_apply", "norm_init",
+    "rope_freqs", "apply_rope", "embed_init", "embed_apply", "linear_init",
+    "dtype_of",
+]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, _scale, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, dtype,
+                scale: Optional[float] = None, bias: bool = False) -> Dict:
+    """Truncated-normal-ish fan-in init, [K, N] layout (contraction first)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    p = {"w": normal_init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(kind: str, d: int, dtype) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":   # OLMo: LayerNorm without affine params
+        return {}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., None, :]                      # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> Dict:
+    return {"table": normal_init(key, (vocab, d), 1.0, dtype)}
+
+
+def embed_apply(p: Dict, tokens: jax.Array, dtype,
+                vocab_parallel: bool = True) -> jax.Array:
+    """Vocab-parallel gather when a model axis is active (the table is the
+    single largest weight in half the assigned archs — never all-gather it);
+    plain gather otherwise (single device / "dp" layouts)."""
+    from repro.dist.collectives import vocab_parallel_embed
+    from repro.dist.mesh_ctx import current_mesh
+
+    mesh = current_mesh()
+    table = p["table"]
+    if (vocab_parallel and mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1 and tokens.ndim == 2
+            and table.shape[0] % mesh.shape["model"] == 0):
+        return vocab_parallel_embed(table, tokens, dtype, mesh)
+    return table.astype(dtype)[tokens]

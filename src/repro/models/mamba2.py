@@ -1,0 +1,191 @@
+"""Mamba2 (SSD) block (arXiv:2405.21060), used by the Zamba2 hybrid.
+
+Scalar-per-head decay makes the chunked "state-space dual" form numerically
+safe without factorization tricks: every pairwise decay is
+``exp(cs_t - cs_s) ≤ 1`` for ``s ≤ t``. Chunked scan carries the inter-chunk
+state ``S [B, H, P, N]``; a per-token recurrence serves as oracle + decode.
+
+Simplifications vs the reference (documented): single B/C group
+(`ngroups=1`), no learned initial state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import linear_init, normal_init, norm_apply, norm_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode_step",
+           "ssd_recurrent", "ssd_chunked", "init_mamba_state"]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm.expand * cfg.d_model
+    p = cfg.ssm.head_dim
+    h = d_in // p
+    n = cfg.ssm.state_size
+    return d_in, h, p, n
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z, x, B, C, dt]
+    d_proj = 2 * d_in + 2 * n + h
+    return {
+        "in_proj": linear_init(ks[0], d, d_proj, dtype),
+        "out_proj": linear_init(ks[1], d_in, d, dtype,
+                                scale=1.0 / math.sqrt(d_in * 2 * cfg.num_layers)),
+        "conv_w": normal_init(ks[2], (cw, d_in + 2 * n), 0.5, dtype),
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": norm_init("rmsnorm", d_in, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_recurrent(x, b_mat, c_mat, la, state):
+    """Exact recurrence (oracle / decode).
+
+    x:  [B,T,H,P] (already dt-scaled)      la: [B,T,H] log decay (≤ 0)
+    b_mat, c_mat: [B,T,N]                  state: [B,H,P,N]
+    Returns (y [B,T,H,P], final state)."""
+    def step(s, xs):
+        xt, bt, ct, lat = xs
+        s = jnp.exp(lat)[..., None, None] * s + \
+            xt[..., :, None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (x, b_mat, c_mat, la))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def ssd_chunked(x, b_mat, c_mat, la, state, chunk: int = 128):
+    """Chunked SSD; all pairwise exponents ≤ 0."""
+    bb, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    f32 = jnp.float32
+
+    def to_chunks(a, last):
+        return jnp.moveaxis(
+            a.astype(f32).reshape(bb, nc, chunk, *a.shape[2:]), 1, 0)
+
+    xc = to_chunks(x, 2)
+    bc = to_chunks(b_mat, 1)
+    cc = to_chunks(c_mat, 1)
+    lac = to_chunks(la, 1)
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+
+    @jax.checkpoint   # per-chunk remat: the [B,C,C,H] pairwise tensors
+    def step(s, xs):  # would otherwise be saved for every chunk
+        xj, bj, cj, laj = xs               # [B,C,H,P] [B,C,N] [B,C,N] [B,C,H]
+        cs = jnp.cumsum(laj, axis=1)       # inclusive [B,C,H]
+        # inter-chunk: y_t += exp(cs_t) * C_t · S
+        y = jnp.exp(cs)[..., None] * jnp.einsum("bhpn,btn->bthp", s, cj)
+        # intra-chunk (s ≤ t): att[t,s,h] = exp(cs_t − cs_s) (C_t·B_s)
+        expo = cs[:, :, None, :] - cs[:, None, :, :]          # [B,C,C,H]
+        expo = jnp.where(tri[None, :, :, None], expo, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", cj, bj)               # [B,C,C]
+        att = jnp.exp(expo) * cb[..., None]
+        y = y + jnp.einsum("btsh,bshp->bthp", att, xj)
+        # state: S ← exp(cs_L) S + Σ_s exp(cs_L − cs_s) x_s ⊗ B_s
+        k_out = jnp.exp(cs[:, -1:, :] - cs)                   # [B,C,H] ≤ 1
+        s = jnp.exp(cs[:, -1])[..., None, None] * s + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", k_out, xj, bj)
+        return s, y
+
+    state, ys = jax.lax.scan(step, state.astype(f32), (xc, bc, cc, lac))
+    return jnp.moveaxis(ys, 0, 1).reshape(bb, t, h, p), state
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, h, p, n = _dims(cfg)
+    z, xs, b_mat, c_mat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 ctx: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: [B,T,C]; w: [W,C].
+    ctx: [B,W-1,C] trailing context from the previous segment (decode)."""
+    width = w.shape[0]
+    pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype) \
+        if ctx is None else ctx.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :], xp[:, -(width - 1):]
+
+
+def mamba2_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                 state: Optional[jax.Array] = None,
+                 conv_ctx: Optional[jax.Array] = None,
+                 chunk: Optional[int] = None):
+    """Full-sequence Mamba2 block. Returns (y, (ssd_state, conv_ctx))."""
+    bsz, t, _ = x.shape
+    d_in, h, pp, n = _dims(cfg)
+    proj = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_out, new_conv_ctx = _causal_conv(
+        conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype),
+        conv_ctx)
+    conv_out = jax.nn.silu(conv_out)
+    xs, b_mat, c_mat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])        # [B,T,H]
+    a = -jnp.exp(p["a_log"])[None, None, :]                    # [1,1,H] < 0
+    la = dt * a                                                # log decay ≤ 0
+    xh = xs.reshape(bsz, t, h, pp).astype(jnp.float32) * dt[..., None]
+    if state is None:
+        state = jnp.zeros((bsz, h, pp, n), jnp.float32)
+    ck = chunk or cfg.ssm.chunk
+    if t == 1:
+        y, state = ssd_recurrent(xh, b_mat, c_mat, la, state)
+    elif t % ck == 0:
+        y, state = ssd_chunked(xh, b_mat, c_mat, la, state, chunk=ck)
+    else:
+        y, state = ssd_recurrent(xh, b_mat, c_mat, la, state)
+    y = y + p["d_skip"][None, None, :, None] * \
+        xs.reshape(bsz, t, h, pp).astype(jnp.float32)
+    y = y.reshape(bsz, t, d_in).astype(x.dtype)
+    y = norm_apply("rmsnorm", p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]["w"].astype(x.dtype), (state, new_conv_ctx)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, h, pp, n = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    return (jnp.zeros((batch, h, pp, n), jnp.float32),
+            jnp.zeros((batch, cw - 1, d_in + 2 * n), dtype))
+
+
+def mamba2_decode_step(p: Dict, cfg: ModelConfig, x: jax.Array, state):
+    """x: [B,1,d]; state = (ssd_state, conv_ctx)."""
+    ssd_state, conv_ctx = state
+    y, new_state = mamba2_apply(p, cfg, x, state=ssd_state,
+                                conv_ctx=conv_ctx)
+    return y, new_state

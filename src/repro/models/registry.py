@@ -1,0 +1,43 @@
+"""Model registry: uniform entry points keyed by config family."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tf
+
+__all__ = ["init_params", "forward", "decode_step", "prefill", "init_cache",
+           "lm_head_weight"]
+
+_LM_FAMILIES = ("dense_lm", "moe_lm", "rwkv6", "zamba2", "vlm_lm", "audio_lm")
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    if cfg.family == "cnn":
+        return cnn_mod.cnn_init(key, cfg)
+    if cfg.family in _LM_FAMILIES:
+        return tf.init_params(key, cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, jax.Array]:
+    """batch keys: tokens | embeds | prefix_embeds | images (cnn).
+    Returns (hidden/logits, aux)."""
+    if cfg.family == "cnn":
+        return (cnn_mod.cnn_apply(params, cfg, batch["images"]),
+                jnp.zeros((), jnp.float32))
+    return tf.forward(params, cfg,
+                      tokens=batch.get("tokens"),
+                      embeds=batch.get("embeds"),
+                      prefix_embeds=batch.get("prefix_embeds"))
+
+
+decode_step = tf.decode_step
+prefill = tf.prefill
+init_cache = tf.init_cache
+lm_head_weight = tf.lm_head_weight

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import HW_V5E, RooflineTerms, roofline_terms
+from repro.roofline.hlo import HloStats, analyze_hlo_text
+
+__all__ = ["analyze_hlo_text", "HloStats", "roofline_terms",
+           "RooflineTerms", "HW_V5E"]

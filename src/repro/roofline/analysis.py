@@ -1,0 +1,147 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+  compute    = flops / peak_flops          (197 TFLOP/s bf16 per chip)
+  memory     = hbm_bytes / hbm_bw          (819 GB/s per chip)
+  collective = Σ_kind bytes_kind / effective_bw(kind)
+
+All inputs are *per-device* quantities from the per-device HLO module
+(roofline/hlo.py), so no further division by chip count is needed. The
+dominant term approximates the step time lower bound; the bottleneck is
+whichever term is largest.
+
+Collective effective bandwidths model the v5e 2D-torus ICI (~50 GB/s/link,
+4 links/chip usable per direction pair):
+  * all-reduce moves 2×(N-1)/N ≈ 2 bytes/elem over the slowest axis ring →
+    counted bytes are operand bytes; effective bw ≈ link_bw × links/2;
+  * all-gather / reduce-scatter move (N-1)/N ≈ 1× → link_bw × links;
+  * all-to-all is bisection-limited → link_bw × links / 2;
+  * collective-permute is point-to-point → link_bw.
+These are first-order planning numbers (the paper's own Table II is a
+calibrated model, in the same spirit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline.hlo import HloStats
+
+__all__ = ["Hardware", "HW_V5E", "RooflineTerms", "roofline_terms",
+           "model_flops_per_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float            # per chip, bf16
+    hbm_bw: float                # bytes/s per chip
+    ici_link_bw: float           # bytes/s per link per direction
+    ici_links: int               # usable links per chip
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_link_bw=50e9, ici_links=4)
+
+
+def _collective_bw(kind: str, hw: Hardware) -> float:
+    if kind == "all-reduce":
+        return hw.ici_link_bw * hw.ici_links / 2
+    if kind in ("all-gather", "reduce-scatter"):
+        return hw.ici_link_bw * hw.ici_links
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return hw.ici_link_bw * hw.ici_links / 2
+    return hw.ici_link_bw          # collective-permute & friends
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float              # headline: TPU-fused estimate (see below)
+    collective_s: float
+    collective_breakdown: Dict[str, float]
+    flops: float
+    hbm_bytes: float             # unfused per-op HLO bytes (upper bracket)
+    io_bytes: float              # argument+output bytes (fused lower bound)
+    collective_bytes: float
+    model_flops: float = 0.0     # analytic 6·N·D (per device share)
+    int8_compute_s: float = 0.0  # if the datapath ran INT8 (paper mode)
+    memory_unfused_s: float = 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower bound: perfect overlap of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / step-time lower bound — the fraction of the
+        compute roofline this step achieves assuming perfect overlap."""
+        if self.step_time_lb == 0:
+            return 0.0
+        useful_s = self.model_flops / HW_V5E.peak_flops
+        return useful_s / self.step_time_lb
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "memory_unfused_s": self.memory_unfused_s,
+            "collective_s": self.collective_s,
+            "collective_breakdown": self.collective_breakdown,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "io_bytes": self.io_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_lb": self.step_time_lb,
+        }
+
+
+def roofline_terms(stats: HloStats, hw: Hardware = HW_V5E,
+                   model_flops_per_device: float = 0.0,
+                   io_bytes_per_device: float = 0.0) -> RooflineTerms:
+    """Three terms per device.
+
+    Memory fidelity note (DESIGN.md §2): this container compiles with the
+    XLA *CPU* backend, whose fusion is far weaker than TPU's — per-op HLO
+    bytes over-count what a TPU would move by 5-20×. The headline memory
+    term is therefore the artifact-derived *fused* estimate: every step must
+    at minimum stream its arguments in and outputs out of HBM
+    (params + optimizer state + caches + batch). The unfused per-op number
+    is reported alongside as the upper bracket.
+    """
+    coll_s = {k: v / _collective_bw(k, hw)
+              for k, v in stats.collective_bytes.items()}
+    mem_fused = io_bytes_per_device / hw.hbm_bw
+    mem_unfused = stats.hbm_bytes / hw.hbm_bw
+    return RooflineTerms(
+        compute_s=stats.flops / hw.peak_flops,
+        memory_s=mem_fused if io_bytes_per_device else mem_unfused,
+        memory_unfused_s=mem_unfused,
+        collective_s=sum(coll_s.values()),
+        collective_breakdown=coll_s,
+        flops=stats.flops,
+        hbm_bytes=stats.hbm_bytes,
+        io_bytes=io_bytes_per_device,
+        collective_bytes=stats.total_collective_bytes,
+        model_flops=model_flops_per_device,
+        int8_compute_s=stats.flops / (hw.peak_flops * 2),
+    )
+
+
+def model_flops_per_step(n_active_params: int, tokens_per_step: int,
+                         train: bool) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference forward."""
+    per_tok = (6 if train else 2) * n_active_params
+    return float(per_tok) * tokens_per_step

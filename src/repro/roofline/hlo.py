@@ -1,0 +1,371 @@
+"""Trip-count-aware HLO text analyzer.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a `lax.scan`
+over 60 layers under-counts flops and collective bytes by 60×. This module
+re-derives the three roofline inputs from `compiled.as_text()` (the
+post-SPMD, post-fusion per-device module):
+
+  * flops            — dot/convolution ops, × while-loop trip counts
+                       (recursing into fusion bodies, where dots live);
+  * hbm_bytes        — per top-level op: operand + output bytes (fusion =
+                       one op, matching XLA's post-fusion accounting),
+                       × trip counts;
+  * collective_bytes — per collective kind, operand bytes × trip counts.
+
+Trip counts come from the while condition's comparison constant (exact for
+lax.scan/fori_loop lowerings).
+
+The analyzer is validated against ``cost_analysis()`` on scan-free graphs
+(tests/test_roofline.py) where both must agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloStats", "analyze_hlo_text"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+# ops that move no real bytes
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "tuple-select",
+}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # (kind, per-execution bytes, trip multiplier, op name) — the perf-loop
+    # profile: which collectives carry the traffic
+    top_ops: List[Tuple[str, float, float, str]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, f: float) -> "HloStats":
+        return HloStats(
+            flops=self.flops * f, hbm_bytes=self.hbm_bytes * f,
+            collective_bytes={k: v * f
+                              for k, v in self.collective_bytes.items()},
+            collective_counts={k: v * f
+                               for k, v in self.collective_counts.items()},
+            top_ops=[(k, b, t * f, n) for k, b, t, n in self.top_ops])
+
+    def __iadd__(self, o: "HloStats") -> "HloStats":
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        for k, v in o.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v
+        for k, v in o.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0.0)
+                                         + v)
+        self.top_ops.extend(o.top_ops)
+        return self
+
+    def top_collectives(self, k: int = 12) -> List[Tuple[str, float, str]]:
+        """[(kind, total bytes, op name)] sorted by traffic."""
+        rows = [(kind, b * t, name) for kind, b, t, name in self.top_ops]
+        rows.sort(key=lambda r: -r[1])
+        return rows[:k]
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(stype: str) -> float:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(stype):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(stype: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(stype)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+# ---------------------------------------------------------------------------
+# module parsing
+# ---------------------------------------------------------------------------
+
+# op line: `  %name = <type> kind(...` — the type may be a tuple with
+# embedded `/*index=N*/` comments; the kind is the first `word(` occurrence
+# (types never put a word directly before an open paren).
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DNUMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    stype: str
+    kind: str
+    rest: str       # everything after the open paren (operands + attrs)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line[0].isspace():
+            # computation headers start at column 0: `%name (args) -> ty {`
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, stype, kind = m.groups()
+            rest = line[m.end():]
+            cur.ops.append(_Op(name, stype.strip(), kind, rest))
+            cur.shapes[name] = stype
+    return comps, entry
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands appear before the first "), " attr separator; just take all
+    # %refs on the line — attr refs (calls/body/cond) are filtered by caller
+    rest_ops = rest.split("),")[0] if ")," in rest else rest.split(")")[0]
+    return _OPERAND_RE.findall(rest_ops)
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    _, out_dims = _shape_elems(op.stype)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    operands = _operand_names(op.rest)
+    if not operands:
+        return 0.0
+    lhs_shape = comp.shapes.get(operands[0], "")
+    _, lhs_dims = _shape_elems(lhs_shape)
+    m = _DNUMS_RE.search(op.rest)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    elif lhs_dims:
+        contract = lhs_dims[-1]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    # flops ≈ 2 × out_elems × (kh·kw·Cin) — parse rhs (kernel) shape
+    _, out_dims = _shape_elems(op.stype)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    operands = _operand_names(op.rest)
+    if len(operands) < 2:
+        return 0.0
+    _, k_dims = _shape_elems(comp.shapes.get(operands[1], ""))
+    if not k_dims:
+        return 0.0
+    kprod = 1
+    for d in k_dims[:-1]:       # all dims except output-feature
+        kprod *= d
+    return 2.0 * out_elems * kprod
+
+
+def _trip_count(op: _Op, comps: Dict[str, _Computation]) -> float:
+    """XLA records exact scan/fori trip counts in the while op's
+    backend_config (`"known_trip_count":{"n":N}`); fall back to the largest
+    integer constant in the condition computation."""
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return float(m.group(1))
+    cond_m = _COND_RE.search(op.rest)
+    if cond_m and cond_m.group(1) in comps:
+        best = 1
+        for cop in comps[cond_m.group(1)].ops:
+            for c in _CONST_RE.findall(cop.stype + " " + cop.rest):
+                best = max(best, int(c))
+        return float(best)
+    return 1.0
+
+
+def _analyze_comp(comp: _Computation, comps: Dict[str, _Computation],
+                  memo: Dict[str, HloStats], flops_only: bool = False
+                  ) -> HloStats:
+    key = comp.name + ("#f" if flops_only else "")
+    if key in memo:
+        return memo[key]
+    st = HloStats()
+    memo[key] = st          # break cycles defensively
+    for op in comp.ops:
+        kind = op.kind
+        if kind == "dot":
+            st.flops += _dot_flops(op, comp)
+        elif kind == "convolution":
+            st.flops += _conv_flops(op, comp)
+        if kind == "while":
+            body_m = _BODY_RE.search(op.rest)
+            trips = _trip_count(op, comps)
+            if body_m and body_m.group(1) in comps:
+                inner = _analyze_comp(comps[body_m.group(1)], comps, memo,
+                                      flops_only)
+                st += inner.scaled(trips)
+            continue
+        if kind in ("call", "conditional"):
+            for cname in _CALLS_RE.findall(op.rest) + \
+                    _OPERAND_RE.findall(op.rest.split("branch_computations")[-1]
+                                        if "branch_computations" in op.rest
+                                        else ""):
+                if cname in comps:
+                    st += _analyze_comp(comps[cname], comps, memo, flops_only)
+            continue
+        if kind == "fusion":
+            # recurse for flops only (dots hide in fusion bodies); bytes are
+            # the fusion's own operands/outputs (post-fusion accounting)
+            m = _CALLS_RE.search(op.rest)
+            if m and m.group(1) in comps:
+                st += _analyze_comp(comps[m.group(1)], comps, memo,
+                                    flops_only=True)
+        if flops_only:
+            continue
+        base = kind.replace("-start", "")
+        if base in _COLLECTIVES and not kind.endswith("-done"):
+            operands = _operand_names(op.rest)
+            b = sum(_shape_bytes(comp.shapes.get(o, ""))
+                    for o in operands)
+            if b == 0.0:        # e.g. shapes not found: use output size
+                b = _shape_bytes(op.stype)
+            # XLA:CPU promotes bf16 reductions to f32 ("..._promoted"
+            # to_apply) and reduces converts of bf16 data — TPU collectives
+            # run at the logical bf16 width, so count those bytes halved.
+            promoted = "promot" in op.rest
+            if not promoted:
+                for o in operands:
+                    prod = comp.shapes.get(o, "")
+                    if prod.strip().startswith("f32"):
+                        src = next((pp for pp in comp.ops
+                                    if pp.name == o), None)
+                        if src is not None and src.kind == "convert":
+                            ins = _operand_names(src.rest)
+                            if ins and comp.shapes.get(
+                                    ins[0], "").strip().startswith("bf16"):
+                                promoted = True
+                    break
+            if promoted:
+                b /= 2
+            st.collective_bytes[base] = st.collective_bytes.get(base, 0) + b
+            st.collective_counts[base] = st.collective_counts.get(base, 0) + 1
+            st.top_ops.append((base, b, 1.0,
+                               f"{op.name}:{op.stype[:80]}"
+                               + (" [promoted]" if promoted else "")))
+        if kind in _FREE_OPS or kind.endswith("-done"):
+            continue
+        out_b = _shape_bytes(op.stype)
+        in_b = sum(_shape_bytes(comp.shapes.get(o, ""))
+                   for o in _operand_names(op.rest))
+        st.hbm_bytes += out_b + in_b
+    memo[key] = st
+    return st
+
+
+def cpu_upcast_param_bytes(text: str) -> float:
+    """Bytes of whole-parameter bf16→f32 upcast copies in the ENTRY scope.
+
+    XLA:CPU legalizes bf16 dots by converting operands to f32; for weights
+    consumed inside a scan the convert is loop-invariant and hoisted, so the
+    compiled module carries an f32 copy of entire (bf16) parameter stacks.
+    A TPU compile runs bf16 natively on the MXU and allocates none of this.
+    The dry-run subtracts this quantity to report a TPU-faithful temp size
+    (`memory.temp_adjusted`, see DESIGN.md §2 fidelity notes).
+    """
+    comps, entry = _parse_computations(text)
+    if not entry:
+        return 0.0
+    ec = comps[entry]
+    bf16_params = {op.name for op in ec.ops
+                   if op.kind == "parameter" and
+                   op.stype.strip().startswith("bf16")}
+    total = 0.0
+    for op in ec.ops:
+        if op.kind not in ("fusion", "convert"):
+            continue
+        if not op.stype.strip().startswith("f32"):
+            continue
+        operands = _operand_names(op.rest)
+        if len(operands) != 1 or operands[0] not in bf16_params:
+            continue
+        if op.kind == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            if not (m and m.group(1) in comps):
+                continue
+            body = comps[m.group(1)].ops
+            if not all(o.kind in ("parameter", "convert", "bitcast", "copy")
+                       for o in body):
+                continue
+        total += _shape_bytes(op.stype)
+    return total
+
+
+def analyze_hlo_text(text: str) -> HloStats:
+    """Analyze one per-device HLO module (from ``compiled.as_text()``)."""
+    comps, entry = _parse_computations(text)
+    if not entry:
+        # fall back: computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+    if not entry:
+        return HloStats()
+    # called computations (while bodies, fusions) must not be double-counted:
+    # start from ENTRY only.
+    return _analyze_comp(comps[entry], comps, {})

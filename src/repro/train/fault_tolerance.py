@@ -1,0 +1,90 @@
+"""Fault-tolerance machinery for long multi-pod runs.
+
+* PreemptionGuard — SIGTERM/SIGINT → flag checked once per step → emergency
+  checkpoint before exit (maps to GCP/Borg preemption notice).
+* StragglerMonitor — per-step wall-time EWMA + deviation; flags steps beyond
+  ``threshold×`` the running mean (on real fleets this feeds the scheduler's
+  hot-spare swap; here it logs and counts).
+* retry_step — bounded retries with backoff for transient XLA/runtime errors.
+* elastic re-mesh is a property of the checkpoint format (full arrays) —
+  `train driver restores onto whatever mesh it was launched with`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, List, Optional
+
+__all__ = ["PreemptionGuard", "StragglerMonitor", "retry_step"]
+
+
+class PreemptionGuard:
+    """Installs signal handlers; `should_stop` flips on SIGTERM/SIGINT."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._signals = signals
+        self._prev = {}
+        self.should_stop = False
+
+    def _handler(self, signum, frame):
+        self.should_stop = True
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time monitor. On a fleet, `straggler_steps` triggers
+    hot-spare replacement; here it is surfaced in train logs/metrics."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup: int = 3
+
+    _mean: float = 0.0
+    _count: int = 0
+    straggler_steps: int = dataclasses.field(default=0)
+    last_flagged: Optional[int] = None
+    history: List[float] = dataclasses.field(default_factory=list)
+
+    def update(self, step: int, dt: float) -> bool:
+        """Record one step time; returns True if flagged as straggler."""
+        self.history.append(dt)
+        self._count += 1
+        if self._count <= self.warmup:
+            self._mean = dt if self._count == 1 else (
+                self._mean + (dt - self._mean) / self._count)
+            return False
+        flagged = dt > self.threshold * self._mean
+        if flagged:
+            self.straggler_steps += 1
+            self.last_flagged = step
+        else:   # stragglers don't poison the running mean
+            self._mean = (1 - self.alpha) * self._mean + self.alpha * dt
+        return flagged
+
+    @property
+    def mean_step_time(self) -> float:
+        return self._mean
+
+
+def retry_step(fn: Callable[[], Any], retries: int = 2,
+               backoff_s: float = 0.5,
+               retriable=(RuntimeError,)) -> Any:
+    """Run `fn`, retrying transient runtime failures (device OOM-transients,
+    collective timeouts on real fleets)."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except retriable:
+            if attempt == retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))

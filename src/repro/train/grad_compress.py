@@ -1,0 +1,62 @@
+"""Gradient compression with error feedback.
+
+On real hardware the compressed representation rides the data-parallel
+reduce-scatter (half/quarter wire bytes); under GSPMD the all-reduce is
+implicit in the autodiff graph, so we model the *numerics* exactly — the
+quantize→dequantize roundtrip each worker's gradient contribution undergoes —
+with an error-feedback accumulator (Seide et al. / EF-SGD) so the bias is
+compensated across steps. The roofline collective-bytes model in
+`repro.roofline` scales DP gradient traffic by `wire_bytes_per_elem / 4`
+when compression is on.
+
+Modes: "none" | "bf16" | "int8_ef" (per-tensor symmetric INT8 + EF).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_ef_state", "compress_grads", "wire_bytes_per_elem"]
+
+
+def wire_bytes_per_elem(mode: str) -> float:
+    return {"none": 4.0, "bf16": 2.0, "int8_ef": 1.0}[mode]
+
+
+def init_ef_state(params: Any, mode: str) -> Optional[Any]:
+    if mode != "int8_ef":
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q_int8(g: jax.Array) -> jax.Array:
+    """Symmetric per-tensor INT8 quantize→dequantize roundtrip."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127)
+    return q * scale
+
+
+def compress_grads(grads: Any, ef: Optional[Any], mode: str
+                   ) -> Tuple[Any, Optional[Any]]:
+    """Returns (decompressed grads as seen post-all-reduce, new EF state)."""
+    if mode == "none":
+        return grads, ef
+    if mode == "bf16":
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads), ef
+    if mode == "int8_ef":
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            sent = _q_int8(target)
+            return sent, target - sent
+        out = jax.tree_util.tree_map(one, grads, ef)
+        flat, tdef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        sent = jax.tree_util.tree_unflatten(tdef, [f[0] for f in flat])
+        new_ef = jax.tree_util.tree_unflatten(tdef, [f[1] for f in flat])
+        return sent, new_ef
+    raise ValueError(mode)

@@ -1,0 +1,186 @@
+"""Train step builder: DBB straight-through projection → forward →
+vocab-parallel CE → grads (microbatched via lax.scan) → clip → optional
+compression → optimizer update.
+
+The DBB density bound `nnz` is a static argument (top_k needs a static k);
+the driver re-builds the step when the anneal schedule moves it — at most
+`block - nnz` retraces over a run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.core.sparsity import apply_dbb_to_tree
+from repro.dist.collectives import cross_entropy
+from repro.dist.mesh_ctx import current_mesh, data_axes_of, shard_hint
+from repro.models import registry
+from repro.train import optimizer as opt_mod
+from repro.train.grad_compress import compress_grads, init_ef_state
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_eval_step", "make_loss_fn"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    ef: Any                      # error-feedback state or None
+    step: jax.Array              # scalar int32
+
+
+def init_train_state(key, run_cfg: RunConfig) -> TrainState:
+    params = registry.init_params(key, run_cfg.model)
+    init_fn, _ = opt_mod.make_optimizer(run_cfg.train)
+    return TrainState(
+        params=params,
+        opt_state=init_fn(params),
+        ef=init_ef_state(params, run_cfg.train.grad_compress),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _classification_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[:, None], axis=-1)[:, 0]
+    return (lse - ll).mean()
+
+
+def make_loss_fn(cfg: ModelConfig, nnz: Optional[int] = None,
+                 project_dbb: bool = True
+                 ) -> Callable[[Any, Dict], Tuple[jax.Array, Dict]]:
+    """loss_fn(params, batch) -> (loss, metrics). Applies the DBB STE
+    (unless the caller projects once outside, §Perf iteration 9)."""
+
+    def loss_fn(params, batch):
+        p_eff = (apply_dbb_to_tree(params, cfg.dbb, nnz=nnz)
+                 if project_dbb else params)
+        if cfg.family == "cnn":
+            logits, _ = registry.forward(p_eff, cfg, batch)
+            loss = _classification_ce(logits, batch["labels"])
+            acc = (logits.argmax(-1) == batch["labels"]).mean()
+            return loss, {"loss": loss, "acc": acc}
+        hidden, aux = registry.forward(p_eff, cfg, batch)
+        w_head = registry.lm_head_weight(p_eff, cfg)
+        loss = cross_entropy(hidden, w_head, batch["labels"],
+                             mask=batch.get("loss_mask"),
+                             vocab_parallel=cfg.parallel != "dp")
+        total = loss + cfg.moe.aux_loss_weight * aux
+        return total, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def _microbatch(batch: Dict, m: int) -> Dict:
+    def re(x):
+        b = x.shape[0]
+        return x.reshape(m, b // m, *x.shape[1:])
+    return {k: re(v) for k, v in batch.items()}
+
+
+def make_train_step(run_cfg: RunConfig, nnz: Optional[int] = None
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    cfg = run_cfg.model
+    tcfg = run_cfg.train
+    # DBB projection is hoisted out of the (micro-batched) grad graph:
+    # differentiating the loss at the *projected* params and applying the
+    # update to the dense masters IS the straight-through estimator, and
+    # projects once per step instead of once per microbatch inside the
+    # backward graph (§Perf iteration 9: −27 GB temp on qwen train_4k).
+    loss_fn = make_loss_fn(cfg, nnz=nnz, project_dbb=False)
+    _, update_fn = opt_mod.make_optimizer(tcfg)
+    sched = opt_mod.lr_schedule(tcfg)
+
+    def grads_of(params, batch):
+        m = tcfg.microbatches
+        if m <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+
+        mb = _microbatch(batch, m)
+
+        def body(carry, mbatch):
+            g_acc, met_acc = carry
+            mbatch = {k: shard_hint(v, ("pod", "data"),
+                                    *(None,) * (v.ndim - 1))
+                      for k, v in mbatch.items()}
+            (_, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            met_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), met_acc, met)
+            return (g_acc, met_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        met0 = {"loss": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32)} if cfg.family != "cnn" \
+            else {"loss": jnp.zeros((), jnp.float32),
+                  "acc": jnp.zeros((), jnp.float32)}
+        (grads, mets), _ = jax.lax.scan(body, (g0, met0), mb)
+        inv = 1.0 / m
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        mets = jax.tree_util.tree_map(lambda x: x * inv, mets)
+        return grads, mets
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        p_eff = apply_dbb_to_tree(state.params, cfg.dbb, nnz=nnz,
+                                  straight_through=False)
+        mesh = current_mesh()
+        specs = None
+        if mesh is not None:
+            from repro.dist.sharding import param_specs
+            specs = param_specs(state.params, mesh, cfg)
+
+        def constrain(tree):
+            return jax.tree_util.tree_map(
+                lambda t, s: jax.lax.with_sharding_constraint(
+                    t, jax.NamedSharding(mesh, s))
+                if hasattr(t, "shape") else t,
+                tree, specs)
+
+        if specs is not None and p_eff is not state.params:
+            # keep the projection sharded like the masters — without the
+            # constraint GSPMD gathers the model axis to run top_k
+            # (§Perf iteration 10a)
+            p_eff = constrain(p_eff)
+        grads, metrics = grads_of(p_eff, batch)
+        if specs is not None:
+            # grads resident like the params: lets XLA lower the data-axis
+            # gradient reduction of FSDP-sharded leaves as reduce-scatter
+            # instead of all-reduce + slice (§Perf iteration 13 — the
+            # expert-grad reductions were 4.2 GB/layer at full d on kimi)
+            grads = constrain(grads)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tcfg.grad_clip)
+        grads, new_ef = compress_grads(grads, state.ef, tcfg.grad_compress)
+        updates, new_opt = update_fn(grads, state.opt_state, state.params,
+                                     state.step)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32)
+                          + u.astype(jnp.float32)).astype(p.dtype),
+            state.params, updates)
+        metrics = dict(metrics, grad_norm=gnorm, lr=sched(state.step))
+        return TrainState(params=new_params, opt_state=new_opt, ef=new_ef,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(run_cfg: RunConfig, nnz: Optional[int] = None):
+    loss_fn = make_loss_fn(run_cfg.model, nnz=nnz)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,186 @@
+"""Optimizers from scratch (no optax in this environment): AdamW, Adafactor
+(factored second moment — required to fit arctic-480b / kimi-k2 optimizer
+state on 512 chips, DESIGN.md §6), SGD-momentum; warmup+cosine LR schedule;
+global-norm clipping; optional DBB-mask-frozen updates."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+__all__ = ["make_optimizer", "lr_schedule", "global_norm", "clip_by_global_norm"]
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    base, warm, total = cfg.learning_rate, cfg.warmup_steps, max(cfg.steps, 1)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm_lr = base * (step + 1) / max(warm, 1)
+        t = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        cos_lr = base * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warm, warm_lr, cos_lr)
+
+    return fn
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros((), jnp.float32)
+
+
+def clip_by_global_norm(tree: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw(cfg: TrainConfig, b1=0.9, b2=0.95, eps=1e-8):
+    sched = lr_schedule(cfg)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr = sched(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            u = mh / (jnp.sqrt(vh) + eps)
+            if p.ndim >= 2:          # decoupled decay, matrices only
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        flat, tdef = jax.tree_util.tree_flatten(out, is_leaf=lambda x:
+                                                isinstance(x, tuple))
+        ups = jax.tree_util.tree_unflatten(tdef, [f[0] for f in flat])
+        m = jax.tree_util.tree_unflatten(tdef, [f[1] for f in flat])
+        v = jax.tree_util.tree_unflatten(tdef, [f[2] for f in flat])
+        return ups, {"m": m, "v": v}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored for >=2D leaves
+# ---------------------------------------------------------------------------
+
+def _adafactor(cfg: TrainConfig, eps1=1e-30, eps2=1e-3, clip_thr=1.0,
+               beta2_cap=0.999):
+    sched = lr_schedule(cfg)
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree_util.tree_map(st, params,
+                                            is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-0.8)
+        beta2 = jnp.minimum(beta2, beta2_cap)
+        lr = sched(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                    eps1)[..., None]          # [..., 1, 1]
+                u = (g * jax.lax.rsqrt(vr[..., None] / denom)
+                     * jax.lax.rsqrt(vc[..., None, :]))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_thr)
+            # relative step size
+            p32 = p.astype(jnp.float32)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(p32 * p32)))
+            upd_ = -lr * scale * u
+            if p.ndim >= 2 and cfg.weight_decay:
+                upd_ = upd_ - lr * cfg.weight_decay * p32
+            return upd_.astype(p.dtype), ns
+
+        is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree_util.tree_map(
+            upd, grads, state["s"], params,
+            is_leaf=lambda x: is_state(x))
+        flat, tdef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        ups = jax.tree_util.tree_unflatten(tdef, [f[0] for f in flat])
+        ns = jax.tree_util.tree_unflatten(tdef, [f[1] for f in flat])
+        return ups, {"s": ns}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# SGD-momentum
+# ---------------------------------------------------------------------------
+
+def _sgd(cfg: TrainConfig, momentum=0.9):
+    sched = lr_schedule(cfg)
+
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            u = -lr * (m + cfg.weight_decay * p.astype(jnp.float32)
+                       if p.ndim >= 2 else m)
+            return u.astype(p.dtype), m
+
+        out = jax.tree_util.tree_map(upd, grads, state["mom"], params)
+        flat, tdef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        ups = jax.tree_util.tree_unflatten(tdef, [f[0] for f in flat])
+        m = jax.tree_util.tree_unflatten(tdef, [f[1] for f in flat])
+        return ups, {"mom": m}
+
+    return init, update
+
+
+def make_optimizer(cfg: TrainConfig):
+    """Returns (init_fn, update_fn): update(grads, state, params, step) ->
+    (updates, new_state). Updates are *deltas* (add to params)."""
+    if cfg.optimizer == "adamw":
+        return _adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return _adafactor(cfg)
+    if cfg.optimizer == "sgd":
+        return _sgd(cfg)
+    raise ValueError(cfg.optimizer)

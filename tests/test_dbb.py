@@ -1,0 +1,136 @@
+"""DBB format invariants: projection, pack/unpack, footprint, STE."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.config import DbbConfig
+from repro.core.dbb import (DbbWeight, dbb_footprint_bytes, dbb_mask,
+                            dbb_project, dense_footprint_bytes, pack_dbb,
+                            unpack_dbb, validate_dbb)
+from repro.core.sparsity import (apply_dbb_to_tree, dbb_schedule_nnz,
+                                 ste_dbb, tree_sparsity_report)
+
+hypothesis.settings.register_profile(
+    "fast", max_examples=25, deadline=None)
+hypothesis.settings.load_profile("fast")
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestMaskAndProject:
+    def test_nnz_bound_holds(self):
+        w = _rand((64, 16))
+        m = dbb_mask(w, 8, 3)
+        per_block = np.asarray(m).reshape(8, 8, 16).sum(axis=1)
+        assert per_block.max() <= 3
+
+    def test_keeps_largest_magnitude(self):
+        w = jnp.array([[0.1], [5.0], [0.2], [4.0], [0.01], [3.0], [0.0],
+                       [0.3]])
+        m = np.asarray(dbb_mask(w, 8, 3))[:, 0]
+        assert list(np.nonzero(m)[0]) == [1, 3, 5]
+
+    def test_dense_backward_compat(self):
+        """nnz == block must be the identity (paper: 'fully backwards
+        compatible with dense models')."""
+        w = _rand((32, 8))
+        np.testing.assert_array_equal(dbb_project(w, 8, 8), w)
+
+    def test_projection_idempotent(self):
+        w = _rand((64, 32))
+        p1 = dbb_project(w, 8, 4)
+        p2 = dbb_project(p1, 8, 4)
+        np.testing.assert_allclose(p1, p2, atol=0)
+
+    @given(st.integers(1, 8), st.integers(1, 6), st.integers(1, 5))
+    def test_property_nnz_bound(self, nnz, kb, n):
+        block = 8
+        nnz = min(nnz, block)
+        w = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(kb * 7 + n), (kb * block, n)))
+        m = np.asarray(dbb_mask(jnp.asarray(w), block, nnz))
+        assert m.reshape(kb, block, n).sum(axis=1).max() <= nnz
+
+    def test_bad_dims_raise(self):
+        with pytest.raises(ValueError):
+            dbb_mask(_rand((33, 4)), 8, 4)
+        with pytest.raises(ValueError):
+            dbb_mask(_rand((32, 4)), 8, 9)
+
+
+class TestPackUnpack:
+    @given(st.integers(0, 10), st.integers(1, 8))
+    def test_roundtrip(self, seed, nnz):
+        w = _rand((64, 24), seed)
+        p = pack_dbb(w, 8, nnz)
+        np.testing.assert_allclose(np.asarray(unpack_dbb(p)),
+                                   np.asarray(dbb_project(w, 8, nnz)),
+                                   rtol=1e-6)
+        ok, msg = validate_dbb(p)
+        assert ok, msg
+
+    def test_roundtrip_sparse_input(self):
+        """Blocks with fewer than nnz nonzeros pack canonically."""
+        w = np.zeros((16, 4), np.float32)
+        w[1, 0] = 2.0
+        w[9, 2] = -3.0
+        p = pack_dbb(jnp.asarray(w), 8, 4)
+        np.testing.assert_allclose(np.asarray(unpack_dbb(p)), w)
+        assert validate_dbb(p)[0]
+
+    def test_bitmask_popcount_le_nnz(self):
+        p = pack_dbb(_rand((128, 8)), 8, 4)
+        bm = np.asarray(p.bitmask)
+        pop = np.zeros_like(bm)
+        for t in range(8):
+            pop += (bm >> t) & 1
+        assert pop.max() <= 4
+
+    def test_footprint_matches_paper(self):
+        """B=8, k=4, INT8: 62.5% of dense == the paper's 37.5% saving."""
+        dense = dense_footprint_bytes(4096, 4096, 1)
+        packed = dbb_footprint_bytes(4096, 4096, 8, 4, 1)
+        assert packed / dense == pytest.approx(0.625)
+        cfg = DbbConfig(block=8, nnz=4)
+        assert cfg.weight_footprint_ratio == pytest.approx(0.625)
+
+
+class TestSTE:
+    def test_forward_is_projection(self):
+        w = _rand((32, 8))
+        np.testing.assert_allclose(np.asarray(ste_dbb(w, 8, 2)),
+                                   np.asarray(dbb_project(w, 8, 2)))
+
+    def test_gradient_is_straight_through(self):
+        w = _rand((32, 8))
+        g = jax.grad(lambda w: (ste_dbb(w, 8, 2) ** 2).sum())(w)
+        # straight-through: dL/dw = dL/dw_proj exactly (identity jacobian)
+        g_ref = 2 * dbb_project(w, 8, 2)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-6)
+
+    def test_schedule_anneals(self):
+        cfg = DbbConfig(enabled=True, block=8, nnz=4)
+        ks = [dbb_schedule_nnz(cfg, s, start=10, ramp=20)
+              for s in (0, 9, 10, 20, 30, 100)]
+        assert ks[0] == ks[1] == 8
+        assert ks[-1] == 4
+        assert all(a >= b for a, b in zip(ks, ks[1:]))
+
+    def test_apply_to_tree_respects_eligibility(self):
+        cfg = DbbConfig(enabled=True, block=8, nnz=4, apply_to=("mlp",))
+        tree = {"mlp": {"wi": {"w": _rand((64, 32))}},
+                "attn": {"q_proj": {"w": _rand((64, 32))}},
+                "norm": {"scale": jnp.ones((64,))}}
+        out = apply_dbb_to_tree(tree, cfg)
+        assert np.mean(np.asarray(out["mlp"]["wi"]["w"]) == 0) >= 0.49
+        np.testing.assert_array_equal(out["attn"]["q_proj"]["w"],
+                                      tree["attn"]["q_proj"]["w"])
+        rep = tree_sparsity_report(out, cfg)
+        assert any("mlp" in k for k in rep)

@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps per the brief."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dbb import pack_dbb, dbb_project
+from repro.kernels.dbb_gemm.ops import dbb_gemm, dbb_gemm_packed
+from repro.kernels.dbb_gemm.ref import (dbb_gemm_ref,
+                                        dbb_gemm_ref_from_packed,
+                                        decompress_ref)
+from repro.kernels.sta_gemm.ops import sta_gemm
+from repro.kernels.sta_gemm.ref import sta_gemm_ref
+
+
+def _rand(shape, seed, dtype):
+    k = jax.random.PRNGKey(seed)
+    if dtype == jnp.int8:
+        return jax.random.randint(k, shape, -127, 128, jnp.int32).astype(
+            jnp.int8)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+_SHAPES = [
+    (8, 128, 128),       # single tile
+    (128, 128, 128),
+    (256, 384, 256),     # multi-tile every axis
+    (100, 200, 72),      # ragged (padding path)
+    (1, 128, 512),       # decode-like row
+    (512, 1024, 256),    # deep K
+]
+
+
+class TestStaGemm:
+    @pytest.mark.parametrize("m,k,n", _SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_matches_oracle(self, m, k, n, dtype):
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, dtype)
+        got = sta_gemm(x, w)
+        want = sta_gemm_ref(x, w)
+        assert got.dtype == want.dtype
+        if dtype == jnp.int8:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            # tolerance scales with K: blocked accumulation reorders sums
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                atol=2e-2 if dtype == jnp.bfloat16 else 1e-4 * (k ** 0.5))
+
+    def test_batched_input(self):
+        x = _rand((2, 4, 128), 0, jnp.float32)
+        w = _rand((128, 64), 1, jnp.float32)
+        got = sta_gemm(x, w)
+        assert got.shape == (2, 4, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_int8_accumulates_int32(self):
+        """INT8 operands, INT32 accumulation — the paper's datapath."""
+        x = jnp.full((8, 512), 127, jnp.int8)
+        w = jnp.full((512, 128), 127, jnp.int8)
+        y = sta_gemm(x, w)
+        assert y.dtype == jnp.int32
+        assert int(y[0, 0]) == 127 * 127 * 512      # would overflow INT16
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 128, 128), (16, 256, 128),
+                                          (64, 128, 256)])
+    def test_block_shape_sweep(self, bm, bk, bn):
+        x = _rand((64, 512), 2, jnp.float32)
+        w = _rand((512, 256), 3, jnp.float32)
+        got = sta_gemm(x, w, block_m=bm, block_k=bk, block_n=bn)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestDbbGemm:
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 128), (64, 256, 128),
+                                       (128, 512, 256), (1, 128, 128)])
+    @pytest.mark.parametrize("block,nnz", [(8, 4), (8, 2), (8, 8), (16, 4)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_matches_oracle(self, m, k, n, block, nnz, dtype):
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, dtype)
+        p = pack_dbb(w.astype(jnp.float32), block, nnz)
+        vals = p.values.astype(dtype)
+        mask = p.bitmask
+        got = dbb_gemm(x, vals, mask, block=block, nnz=nnz)
+        want = dbb_gemm_ref(x, vals, mask.astype(jnp.int32), block=block,
+                            nnz=nnz)
+        if dtype == jnp.int8:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                atol=3e-2 if dtype == jnp.bfloat16 else 1e-4 * (k ** 0.5))
+
+    def test_oracle_equals_semantic_reference(self):
+        """kernel ref == unpack-then-matmul == project-then-matmul."""
+        w = _rand((256, 64), 5, jnp.float32)
+        x = _rand((32, 256), 6, jnp.float32)
+        p = pack_dbb(w, 8, 4)
+        y1 = dbb_gemm_ref_from_packed(x, p)
+        y2 = x @ dbb_project(w, 8, 4)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+        y3 = dbb_gemm_packed(x, p)
+        np.testing.assert_allclose(np.asarray(y3), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_decompress_ref_roundtrip(self):
+        w = _rand((128, 32), 7, jnp.float32)
+        p = pack_dbb(w, 8, 4)
+        np.testing.assert_allclose(
+            np.asarray(decompress_ref(p.values, p.bitmask.astype(jnp.int32),
+                                      block=8, nnz=4)),
+            np.asarray(dbb_project(w, 8, 4)), rtol=1e-6)
+
+    def test_dense_compat_full_nnz(self):
+        """nnz == block: the DBB kernel must reproduce the dense GEMM
+        (paper §IV-B backward compatibility)."""
+        w = _rand((128, 64), 8, jnp.float32)
+        x = _rand((16, 128), 9, jnp.float32)
+        p = pack_dbb(w, 8, 8)
+        np.testing.assert_allclose(np.asarray(dbb_gemm_packed(x, p)),
+                                   np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+    def test_per_channel_scale(self):
+        w = _rand((128, 64), 10, jnp.float32)
+        x = _rand((16, 128), 11, jnp.float32)
+        scale = jnp.linspace(0.5, 2.0, 64)
+        p = pack_dbb(w, 8, 4, scale=scale)
+        got = dbb_gemm_packed(x, p)
+        want = (x @ dbb_project(w, 8, 4)) * scale[None, :]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

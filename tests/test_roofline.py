@@ -1,0 +1,125 @@
+"""HLO analyzer: must agree with XLA cost_analysis on scan-free graphs and
+correct it (trip-count multiplication) on scanned ones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (HW_V5E, model_flops_per_step,
+                                     roofline_terms)
+from repro.roofline.hlo import analyze_hlo_text
+
+
+def _compile(fn, *sds):
+    return jax.jit(fn).lower(*sds).compile()
+
+
+SDS = jax.ShapeDtypeStruct
+
+
+def test_matches_cost_analysis_scan_free():
+    def f(x, w1, w2):
+        return jnp.maximum(x @ w1, 0) @ w2
+
+    c = _compile(f, SDS((64, 128), jnp.float32), SDS((128, 256), jnp.float32),
+                 SDS((256, 64), jnp.float32))
+    st = analyze_hlo_text(c.as_text())
+    ca = c.cost_analysis()
+    assert st.flops == pytest.approx(ca["flops"], rel=0.05)
+
+
+def test_scan_multiplies_by_trip_count():
+    L = 8
+
+    def layer(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(layer, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(L):
+            x, _ = layer(x, ws[i])
+        return x
+
+    xs = SDS((32, 64), jnp.float32)
+    ws = SDS((L, 64, 64), jnp.float32)
+    st_scan = analyze_hlo_text(_compile(scanned, xs, ws).as_text())
+    st_unroll = analyze_hlo_text(_compile(unrolled, xs, ws).as_text())
+    assert st_scan.flops == pytest.approx(st_unroll.flops, rel=0.02)
+    # and ~L× what cost_analysis reports for the scanned module
+    ca = _compile(scanned, xs, ws).cost_analysis()
+    assert st_scan.flops > 0.9 * L * 2 * 32 * 64 * 64
+
+
+def test_nested_scan():
+    def inner(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    def outer(x, ws):
+        return jax.lax.scan(lambda c, w: (inner(c, w), None), x, ws)[0]
+
+    xs = SDS((16, 32), jnp.float32)
+    ws = SDS((3, 5, 32, 32), jnp.float32)   # 3 outer × 5 inner
+    st = analyze_hlo_text(_compile(outer, xs, ws).as_text())
+    want = 3 * 5 * 2 * 16 * 32 * 32
+    assert st.flops == pytest.approx(want, rel=0.02)
+
+
+def test_dot_general_batched_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    st = analyze_hlo_text(
+        _compile(f, SDS((4, 8, 16), jnp.float32),
+                 SDS((4, 16, 32), jnp.float32)).as_text())
+    assert st.flops == pytest.approx(2 * 4 * 8 * 16 * 32, rel=0.01)
+
+
+def test_bytes_match_cost_analysis_scan_free():
+    def f(x, w):
+        return x @ w
+
+    c = _compile(f, SDS((128, 256), jnp.float32), SDS((256, 128), jnp.float32))
+    st = analyze_hlo_text(c.as_text())
+    ca = c.cost_analysis()
+    assert st.hbm_bytes == pytest.approx(ca["bytes accessed"], rel=0.1)
+
+
+def test_roofline_terms_math():
+    from repro.roofline.hlo import HloStats
+    st = HloStats(flops=197e12, hbm_bytes=819e9,
+                  collective_bytes={"all-reduce": 100e9},
+                  collective_counts={"all-reduce": 1})
+    t = roofline_terms(st, model_flops_per_device=197e12 / 2,
+                       io_bytes_per_device=819e9 / 2)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.memory_unfused_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)   # 100e9 / (50e9*4/2)
+    assert t.bottleneck in ("compute", "collective")
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_per_step():
+    assert model_flops_per_step(1_000_000, 2048, train=True) == \
+        6 * 1_000_000 * 2048
+    assert model_flops_per_step(1_000_000, 16, train=False) == \
+        2 * 1_000_000 * 16
+
+
+def test_collective_parse_from_psum_graph():
+    """A hand-built shard_map psum must surface as all-reduce bytes.
+    Runs in-process only if >1 device; otherwise exercises the text parser
+    on a synthetic module."""
+    text = """
+HloModule test, num_partitions=4
+
+ENTRY %main (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  ROOT %ar = f32[128,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[1,4]<=[4], to_apply=%add
+}
+"""
+    st = analyze_hlo_text(text)
+    assert st.collective_bytes.get("all-reduce") == 128 * 64 * 4
+    assert st.collective_counts.get("all-reduce") == 1
