@@ -1,0 +1,109 @@
+"""A/B harness: fused GEMM epilogue vs. separate epilogue passes.
+
+For each benchmark shape the unfused variant runs the kernel to a raw
+accumulator and applies scale/bias/activation as separate jitted XLA ops —
+one extra read+write of the [M, N] output through HBM. The fused variant
+applies the same epilogue inside the kernel's final-K store (DESIGN.md §7).
+
+Reported per shape: best-of-N wall time for both variants, the speedup, and
+the bytes-model estimate of the HBM traffic the fusion removes
+(2 · M · N · itemsize: one read + one write of the intermediate). On a real
+TPU the wall-time gap approaches the bytes model for memory-bound decode
+shapes; on the CPU interpret backend the numbers are correctness-grade
+only, so `run()` verifies numerical parity strictly (assert) but reports
+a fused-slower-than-unfused outcome as a WARNING rather than failing —
+interpret-mode timing noise is not a regression signal.
+
+Run:  PYTHONPATH=src python -m benchmarks.fused_epilogue [--fast]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _best_of(fn, n: int = 5) -> float:
+    jax.block_until_ready(fn())            # compile + warmup
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# (M, K, N): decode-like row, serving mid-batch, square training tile
+SHAPES = [
+    (8, 1024, 1024),
+    (128, 1024, 4096),
+    (512, 512, 512),
+]
+FAST_SHAPES = [(8, 256, 256), (64, 256, 512)]
+
+
+def bench_shape(m: int, k: int, n: int, act: str = "silu",
+                dtype=jnp.float32, repeats: int = 5) -> dict:
+    from repro.kernels.epilogue import apply_act
+    from repro.kernels.sta_gemm.ops import sta_gemm
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype)
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    scale = jnp.linspace(0.5, 2.0, n)
+
+    fused = jax.jit(lambda: sta_gemm(x, w, bias, scale, act=act))
+
+    @jax.jit
+    def unfused():
+        y = sta_gemm(x, w)                       # raw accumulator to HBM
+        y = y.astype(jnp.float32) * scale[None, :] + bias[None, :]
+        return apply_act(y, act).astype(x.dtype)  # second pass over [M, N]
+
+    np.testing.assert_allclose(np.asarray(fused(), np.float32),
+                               np.asarray(unfused(), np.float32),
+                               rtol=5e-3, atol=5e-3)
+    t_fused = _best_of(fused, repeats)
+    t_unfused = _best_of(unfused, repeats)
+    saved = 2 * m * n * jnp.dtype(dtype).itemsize   # read+write removed
+    return {"shape": (m, k, n), "act": act,
+            "fused_s": t_fused, "unfused_s": t_unfused,
+            "speedup": t_unfused / t_fused,
+            "hbm_bytes_saved": int(saved)}
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    shapes = FAST_SHAPES if fast else SHAPES
+    rows = [bench_shape(*s) for s in shapes]
+    if not quiet:
+        print(f"{'M,K,N':>18s} {'act':>5s} {'fused':>10s} {'unfused':>10s} "
+              f"{'speedup':>8s} {'HBM saved':>10s}")
+        for r in rows:
+            m, k, n = r["shape"]
+            print(f"{m:>6d},{k:>5d},{n:>5d} {r['act']:>5s} "
+                  f"{r['fused_s'] * 1e3:9.2f}ms {r['unfused_s'] * 1e3:9.2f}ms "
+                  f"{r['speedup']:7.2f}x {r['hbm_bytes_saved'] / 2 ** 20:8.2f}MB")
+        worse = [r for r in rows if r["speedup"] < 0.9]
+        if worse:
+            print(f"WARNING: fused slower than unfused on {len(worse)} "
+                  "shape(s) — interpret-mode noise or a regression")
+        else:
+            print("fused <= unfused on all benchmark shapes "
+                  "(HBM round-trip eliminated)")
+    return {"rows": rows}
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

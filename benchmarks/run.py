@@ -21,14 +21,17 @@ def main(argv=None) -> int:
                     help="section names to skip")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig4_layers, fig5_sweep, roofline_bench,
-                            table1_dbb_accuracy, table2_efficiency)
+    from benchmarks import (fig4_layers, fig5_sweep, fused_epilogue,
+                            roofline_bench, table1_dbb_accuracy,
+                            table2_efficiency)
 
     sections = [
         ("table2_efficiency (paper Table II)",
          lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", lambda: fig5_sweep.run()),
         ("fig4_layers (paper Fig. 4)", lambda: fig4_layers.run()),
+        ("fused_epilogue (STA/DBB fused epilogue A/B)",
+         lambda: fused_epilogue.run(fast=args.fast)),
         ("table1_dbb_accuracy (paper Table I)",
          lambda: table1_dbb_accuracy.run(steps=30 if args.fast else 60)),
         ("roofline (dry-run artifacts)", lambda: roofline_bench.run()),

@@ -141,6 +141,12 @@ class ModelConfig:
     # numerics
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    # GEMM routing: "xla" = plain matmuls (GSPMD-shardable, default);
+    # "pallas" = single-device hot GEMMs go through the STA/DBB Pallas
+    # kernels with the fused bias/activation/requant epilogue (DESIGN.md §7).
+    # Distributed meshes always fall back to "xla" — the kernels are not
+    # shard_map-aware.
+    gemm_impl: str = "xla"
     remat: str = "auto"             # auto | none | full — auto picks by size
     # distribution: "tp" = tensor-parallel over the model axis;
     # "dp" = the model axis joins batch parallelism (params replicated +

@@ -6,13 +6,18 @@ split into ``B×1`` blocks along K. DBB bounds the non-zeros per block:
 is constrained — the positions are free, which is why accuracy holds
 (paper Table I) while hardware utilization is guaranteed a-priori.
 
-Storage format (paper: "simple bitmask compression"):
-  values  [K//B * k, N]  the (up to) k surviving values per block, in block
-                         order, index-sorted, zero-padded when a block has
-                         fewer than k non-zeros
+Storage format (paper: "simple bitmask compression"; DESIGN.md §2):
+  values  [K//B * k, N]  the (up to) k surviving values per block, slot-major
+                         (row kb*k + s holds slot s of block kb), index-
+                         sorted, zero-padded when a block has fewer than k
+                         non-zeros
+  bitmask [K//B, N]      uint32, bit ``pos`` set ⇔ dense row kb*B + pos kept
+                         — what the Pallas kernels and `decompress_ref`
+                         consume (rank(pos) = popcount of the lower bits
+                         recovers the slot)
   indices [K//B * k, N]  block-local positions (0..B-1) of each value, int32
-  bitmask [K//B, N]      uint32 bit i set ⇔ position i kept (diagnostics +
-                         footprint accounting; the kernels consume indices)
+                         — diagnostics/validation only; the serving format
+                         drops them (4 B/value vs the 1 mask byte per block)
 
 For B=8, k=4, INT8: (4 value bytes + 1 mask byte) / 8 bytes = 62.5% of dense
 ⇒ the paper's 37.5% weight-memory reduction.
@@ -132,7 +137,13 @@ def pack_dbb(
     w: jax.Array, block: int = 8, nnz: int = 4,
     scale: Optional[jax.Array] = None,
 ) -> DbbWeight:
-    """Compress ``W[K, N]`` to the DBB format (projects first if needed)."""
+    """Compress ``W[K, N]`` to the DBB format (projects first if needed).
+
+    Returns a `DbbWeight` with ``values [K/B·k, N]`` (slot-major),
+    ``bitmask [K/B, N]`` and diagnostic ``indices [K/B·k, N]`` — the layout
+    contract in DESIGN.md §2, shared with `kernels.dbb_gemm`. K must divide
+    by ``block``; N is unconstrained here (kernels pad it).
+    """
     k_dim, n = w.shape
     _check_dims(k_dim, block, nnz)
     kb = k_dim // block
@@ -156,7 +167,9 @@ def pack_dbb(
 
 
 def unpack_dbb(p: DbbWeight) -> jax.Array:
-    """Decompress to dense ``[K, N]`` (the kernels' on-chip analogue)."""
+    """Decompress a `DbbWeight` to dense ``[K, N]`` and apply the
+    per-channel scale if present — the host-side analogue of the kernels'
+    in-VMEM decompression (DESIGN.md §2)."""
     kb, n, k = p.num_blocks, p.n_dim, p.nnz
     vals = p.values.reshape(kb, k, n).transpose(0, 2, 1)      # [Kb, N, k]
     idx = p.indices.reshape(kb, k, n).transpose(0, 2, 1)      # [Kb, N, k]

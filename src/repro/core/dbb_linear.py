@@ -46,16 +46,30 @@ def decompress_xla(p: DbbWeight, dtype=None) -> jax.Array:
     return w.astype(dtype) if dtype is not None else w
 
 
-def dbb_linear_apply(x: jax.Array, w, *, impl: str = "xla",
-                     out_dtype=None) -> jax.Array:
-    """``x @ w`` where w is dense or a DbbWeight, routed by impl."""
+def dbb_linear_apply(x: jax.Array, w, bias=None, *, act: str = "none",
+                     impl: str = "xla", out_dtype=None) -> jax.Array:
+    """``act(x @ w + bias)`` where w is dense or a DbbWeight, routed by impl.
+
+    impl="pallas" fuses bias/act (and the DbbWeight per-channel scale) into
+    the kernel epilogue — one HBM store of the finished output (DESIGN.md
+    §7). The XLA path applies them as separate ops after the matmul, which
+    GSPMD can shard.
+    """
     if isinstance(w, DbbWeight):
         if impl == "pallas":
-            return dbb_gemm_packed(x, w, out_dtype=out_dtype)
+            return dbb_gemm_packed(x, w, bias, act=act, out_dtype=out_dtype)
         dense = decompress_xla(w, dtype=x.dtype)
         y = x @ dense
-        return y.astype(out_dtype) if out_dtype is not None else y
-    y = x @ w.astype(x.dtype)
+    else:
+        if impl == "pallas":
+            from repro.kernels.sta_gemm.ops import sta_gemm
+            return sta_gemm(x, w.astype(x.dtype), bias, act=act,
+                            out_dtype=out_dtype)
+        y = x @ w.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    from repro.kernels.epilogue import apply_act
+    y = apply_act(y, act)
     return y.astype(out_dtype) if out_dtype is not None else y
 
 

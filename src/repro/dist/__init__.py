@@ -1,0 +1,10 @@
+"""Distribution layer: mesh context, sharding rules, collectives, pipeline.
+
+mesh_ctx:    the session-wide mesh contextvar (`use_mesh` / `current_mesh`)
+             plus divisibility-safe sharding hints.
+sharding:    PartitionSpec inference for param / optimizer / cache / batch
+             trees (Megatron TP rules + ZeRO/FSDP data-axis sharding).
+collectives: vocab-parallel embedding + cross-entropy (the two ops whose
+             naive forms materialize vocab-sized tensors), dense oracles.
+pipeline:    GPipe-style microbatch pipeline over a mesh axis.
+"""

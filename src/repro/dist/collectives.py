@@ -1,0 +1,158 @@
+"""Vocab-parallel collectives + dense oracles.
+
+The two ops whose naive forms materialize [tokens, V] tensors are the
+embedding gather and the LM-head cross-entropy. Both get shard_map
+implementations that keep the vocab axis sharded over "model": each shard
+works on its vocab slice and one psum combines the scalars — unsharded
+logits never exist (DESIGN.md §6 discusses why this matters at V ≥ 100k).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+from repro.dist.mesh_ctx import current_mesh
+
+__all__ = ["dense_ce", "dense_ce_chunked", "vocab_parallel_ce",
+           "vocab_parallel_embed", "cross_entropy"]
+
+
+def _masked_mean(nll: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    if mask is None:
+        return nll.mean()
+    m = mask.astype(jnp.float32)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def dense_ce(h: jax.Array, w: jax.Array, labels: jax.Array,
+             mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean CE with full [.., V] logits. h [B,S,d] · w [d,V]."""
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return _masked_mean(lse - ll, mask)
+
+
+def dense_ce_chunked(h: jax.Array, w: jax.Array, labels: jax.Array,
+                     mask: Optional[jax.Array] = None,
+                     rows: int = 8192) -> jax.Array:
+    """CE with token-chunked logits (§Perf: live logits capped at
+    [rows, V]); each chunk is rematerialized in the backward pass, so
+    gradients are bit-identical to `dense_ce` up to reduction order."""
+    b, s, d = h.shape
+    t = b * s
+    hf = h.reshape(t, d)
+    lf = labels.reshape(t)
+    mf = (jnp.ones((t,), jnp.float32) if mask is None
+          else mask.reshape(t).astype(jnp.float32))
+    # pad the token axis up to a rows multiple (mask 0 ⇒ zero contribution)
+    # rather than searching for a divisor — a prime t would otherwise
+    # collapse to one chunk and materialize the full [t, V] logits, the
+    # exact blow-up this path exists to cap
+    rows_eff = min(rows, t)
+    t_pad = -(-t // rows_eff) * rows_eff
+    if t_pad != t:
+        hf = jnp.pad(hf, ((0, t_pad - t), (0, 0)))
+        lf = jnp.pad(lf, (0, t_pad - t))
+        mf = jnp.pad(mf, (0, t_pad - t))
+    n_chunks = t_pad // rows_eff
+
+    @jax.checkpoint
+    def one(carry, xs):
+        hc, lc, mc = xs
+        logits = hc.astype(jnp.float32) @ w.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        nll_sum, m_sum = carry
+        return (nll_sum + ((lse - ll) * mc).sum(), m_sum + mc.sum()), None
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        one, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hf.reshape(n_chunks, rows_eff, d),
+         lf.reshape(n_chunks, rows_eff),
+         mf.reshape(n_chunks, rows_eff)))
+    return nll_sum / jnp.maximum(m_sum, 1.0)
+
+
+def vocab_parallel_ce(h: jax.Array, w: jax.Array, labels: jax.Array,
+                      mesh, mask: Optional[jax.Array] = None) -> jax.Array:
+    """CE with the head weight column-sharded over "model": each shard
+    computes its vocab slice's partial logsumexp and the label logit when
+    the label lands in its slice; two scalar psums combine them."""
+    tp = mesh.shape["model"]
+    v = w.shape[-1]
+    v_loc = v // tp
+
+    def shard_fn(hl, wl, lab, m):
+        idx = jax.lax.axis_index("model")
+        logits = hl.astype(jnp.float32) @ wl.astype(jnp.float32)
+        # global logsumexp = logsumexp over per-shard logsumexps. The
+        # gathered piece is [tp, ...] scalars-per-token — tiny — and
+        # all_gather (unlike pmax) differentiates cleanly on every jax.
+        lse_loc = jax.nn.logsumexp(logits, axis=-1)
+        lse = jax.nn.logsumexp(
+            jax.lax.all_gather(lse_loc, "model"), axis=0)
+        # label logit: owned by exactly one shard
+        lab_loc = lab - idx * v_loc
+        in_range = (lab_loc >= 0) & (lab_loc < v_loc)
+        safe = jnp.clip(lab_loc, 0, v_loc - 1)
+        ll_loc = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        ll = jax.lax.psum(jnp.where(in_range, ll_loc, 0.0), "model")
+        return _masked_mean(lse - ll, m)
+
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    return shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(None, "model"), P(), P()),
+        out_specs=P(),
+        check_vma=False)(h, w, labels, mask)
+
+
+def vocab_parallel_embed(table: jax.Array, tokens: jax.Array, dtype,
+                         mesh) -> jax.Array:
+    """Row-sharded embedding gather: each shard serves the tokens that fall
+    in its vocab slice, one psum assembles the [B, S, d] output — the
+    [V, d] table is never all-gathered."""
+    tp = mesh.shape["model"]
+    v = table.shape[0]
+    v_loc = v // tp
+
+    def shard_fn(tl, toks):
+        idx = jax.lax.axis_index("model")
+        loc = toks - idx * v_loc
+        in_range = (loc >= 0) & (loc < v_loc)
+        safe = jnp.clip(loc, 0, v_loc - 1)
+        emb = tl[safe].astype(jnp.float32)
+        emb = jnp.where(in_range[..., None], emb, 0.0)
+        return jax.lax.psum(emb, "model")
+
+    out = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P("model", None), P()),
+        out_specs=P(),
+        check_vma=False)(table, tokens)
+    return out.astype(dtype)
+
+
+def cross_entropy(hidden: jax.Array, w_head: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  vocab_parallel: bool = True) -> jax.Array:
+    """LM-head CE dispatcher: vocab-parallel when a mesh with a non-trivial
+    model axis is live and the vocab divides; token-chunked dense when the
+    full logits tensor would be large; plain dense otherwise."""
+    mesh = current_mesh()
+    v = w_head.shape[-1]
+    if (vocab_parallel and mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1 and v % mesh.shape["model"] == 0):
+        return vocab_parallel_ce(hidden, w_head, labels, mesh, mask)
+    tokens = 1
+    for s in labels.shape:
+        tokens *= s
+    if tokens * v > (1 << 28):          # cap live logits at ~1 GB f32
+        return dense_ce_chunked(hidden, w_head, labels, mask)
+    return dense_ce(hidden, w_head, labels, mask)

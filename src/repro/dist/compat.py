@@ -1,0 +1,23 @@
+"""jax version compatibility shims for the distribution layer.
+
+The codebase targets the current jax naming (``jax.shard_map`` with
+``check_vma``); older jaxlibs (like this container's 0.4.x) ship it as
+``jax.experimental.shard_map.shard_map`` with ``check_rep``. One wrapper
+keeps every call site on the new spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental location, check_vma spelled check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

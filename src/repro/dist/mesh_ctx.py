@@ -1,0 +1,74 @@
+"""Session-wide mesh context.
+
+A single contextvar holds the live `jax.sharding.Mesh`; model code asks
+`current_mesh()` at trace time and lowers to the matching collectives /
+sharding constraints. Keeping it out of function signatures lets the same
+model code serve single-device tests, GSPMD, and explicit shard_map paths.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "current_mesh", "data_axes_of", "axis_size",
+           "shard_hint"]
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Make `mesh` the session mesh for the dynamic extent of the block."""
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes, in mesh order ("pod" before "data")."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis under the current mesh (1 when absent)."""
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def shard_hint(x: jax.Array, *entries) -> jax.Array:
+    """Divisibility-safe `with_sharding_constraint`.
+
+    One entry per leading dim of ``x`` (missing entries = None): an axis
+    name, a tuple of axis names, or None. Axes absent from the live mesh
+    are dropped; a dim that doesn't divide the requested axis product falls
+    back to replication instead of erroring. No-op without a mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, e in zip(x.shape, entries + (None,) * (x.ndim - len(entries))):
+        axes = tuple(a for a in ((e,) if isinstance(e, str) else (e or ()))
+                     if a in mesh.axis_names)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if axes and n > 1 and dim % n == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

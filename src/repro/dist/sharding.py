@@ -1,0 +1,252 @@
+"""PartitionSpec inference for param / optimizer / cache / batch trees.
+
+Rules (DESIGN.md §6):
+  * Megatron TP over the "model" axis — column-parallel up-projections
+    (q/k/v_proj, wi, wg: last dim), row-parallel down-projections
+    (o_proj, wo: second-to-last dim), vocab-parallel embedding rows and
+    LM-head columns, expert-parallel MoE stacks (the E dim).
+  * ZeRO/FSDP over the batch axes ("pod", "data") — every leaf at or above
+    `FSDP_MIN_SHARD_ELEMS` additionally shards one free dim; small leaves
+    (norm scales, biases) stay replicated, keeping their collectives off
+    the critical path.
+  * Every rule is divisibility-guarded: a dim that doesn't divide the axis
+    product falls back to replication, never errors (the tests assert this
+    invariant over every assigned architecture × production mesh).
+  * `cfg.parallel == "dp"`: the model axis carries no TP and instead joins
+    ZeRO, so parameters shard over data×model.
+
+DBB-packed leaves (`core.dbb.DbbWeight`) inherit their parent's rule: for a
+logical [K, N] weight, `values`/`indices`/`bitmask` keep N last and the
+compressed K second-to-last, so column rules shard their last dim and row
+rules their second-to-last; per-channel `scale` follows N.
+
+Specs are pure data — only `mesh.shape` (axis→size mapping) and
+`mesh.axis_names` are consulted, so spec-level tests run with fake meshes
+and zero devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.dist.mesh_ctx import data_axes_of
+
+__all__ = [
+    "FSDP_MIN_SHARD_ELEMS", "param_specs", "opt_state_specs_like",
+    "cache_specs", "batch_specs", "zero_spec", "named_sharding_tree",
+]
+
+# leaves below this size stay replicated under ZeRO/FSDP (norm scales,
+# biases, small stacks — their all-gathers would cost more than the
+# memory saved). 8M elems ≈ 32 MB f32.
+FSDP_MIN_SHARD_ELEMS = 1 << 23
+
+_COLUMN = {"q_proj", "k_proj", "v_proj", "wi", "wg"}
+_ROW = {"o_proj", "wo"}
+_PACKED_FIELDS = {"values", "indices", "bitmask", "scale"}
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "name"):
+            out.append(str(e.name))
+        elif hasattr(e, "idx"):
+            out.append(str(e.idx))
+    return tuple(out)
+
+
+def _axprod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _batch_axes(mesh, batch: int):
+    """Longest prefix of the batch axes whose product divides `batch`
+    (None when even the first axis doesn't divide)."""
+    daxes = data_axes_of(mesh)
+    for k in range(len(daxes), 0, -1):
+        if batch % _axprod(mesh, daxes[:k]) == 0:
+            return daxes[:k] if k > 1 else daxes[0]
+    return None
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh,
+              min_elems: Optional[int] = FSDP_MIN_SHARD_ELEMS,
+              axes: Optional[Tuple[str, ...]] = None) -> P:
+    """Add ZeRO/FSDP batch-axis sharding to one leaf's spec.
+
+    Leaves smaller than `min_elems` (or min_elems=None) are untouched.
+    Scans free (None) dims from the last backwards and assigns the longest
+    suffix of `axes` (default: the mesh's batch axes) whose product divides
+    that dim — suffix-first so a partial fit still sheds the "data" axis.
+    """
+    if min_elems is None:
+        return spec
+    size = 1
+    for s in shape:
+        size *= s
+    if size < min_elems:
+        return spec
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    used = set()
+    for e in entries:
+        for a in (e,) if isinstance(e, str) else (e or ()):
+            used.add(a)
+    cand = tuple(a for a in (axes if axes is not None else data_axes_of(mesh))
+                 if a in mesh.axis_names and a not in used)
+    if not cand:
+        return spec
+    for dim in reversed(range(len(shape))):
+        if entries[dim] is not None:
+            continue
+        for k in range(len(cand)):
+            sub = cand[k:]
+            if shape[dim] % _axprod(mesh, sub) == 0 and _axprod(mesh, sub) > 1:
+                entries[dim] = sub if len(sub) > 1 else sub[0]
+                return P(*entries)
+    return spec
+
+
+def param_specs(params: Any, mesh, cfg: ModelConfig,
+                fsdp_min_shard_elems: Optional[int] = FSDP_MIN_SHARD_ELEMS
+                ) -> Any:
+    """PartitionSpec tree mirroring `params` (arrays/SDS → P leaves)."""
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    tp_on = tp > 1 and cfg.parallel != "dp" and cfg.family != "cnn"
+    zero_axes = data_axes_of(mesh)
+    if cfg.parallel == "dp" and "model" in mesh.axis_names:
+        zero_axes = zero_axes + ("model",)
+
+    def leaf_spec(path, leaf):
+        if not hasattr(leaf, "shape") or getattr(leaf, "ndim", 0) == 0:
+            return P()
+        names = _names(path)
+        nameset = set(names)
+        field = names[-1] if names else ""
+        nd = leaf.ndim
+        spec = [None] * nd
+
+        if tp_on:
+            if "experts" in nameset and nd >= 3:
+                if leaf.shape[-3] % tp == 0:
+                    spec[-3] = "model"
+            elif "embed" in nameset and field == "table":
+                if leaf.shape[0] % tp == 0:
+                    spec[0] = "model"          # vocab-parallel rows
+            elif "lm_head" in nameset:
+                if field in {"w"} | _PACKED_FIELDS and \
+                        leaf.shape[-1] % tp == 0:
+                    spec[-1] = "model"         # vocab-parallel columns
+            elif nameset & _COLUMN:
+                if field in {"w", "b"} | _PACKED_FIELDS and \
+                        leaf.shape[-1] % tp == 0:
+                    spec[-1] = "model"
+            elif nameset & _ROW:
+                if (field in ("w", "values", "indices", "bitmask")
+                        and nd >= 2 and leaf.shape[-2] % tp == 0):
+                    spec[-2] = "model"
+        return zero_spec(P(*spec), leaf.shape, mesh,
+                         min_elems=fsdp_min_shard_elems, axes=zero_axes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def _pad_spec(spec: P, nd: int) -> Tuple:
+    t = tuple(spec)
+    return t + (None,) * (nd - len(t))
+
+
+def opt_state_specs_like(opt_state: Any, params: Any, pspecs: Any,
+                         mesh) -> Any:
+    """Specs for an optimizer-state tree derived from the param specs.
+
+    Same-shape moments (adamw m/v, sgd mom, error-feedback) copy the param
+    spec. Adafactor factored stats follow the param's surviving axes:
+    ``vr`` (shape[:-1]) keeps the leading entries, ``vc``
+    (shape[:-2] + shape[-1:]) keeps leading + last. Scalars replicate.
+    """
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    by_path: Dict[str, Tuple[Any, P]] = {}
+    specs_by_path = {_names(path): s for path, s in flat_s}
+    for path, leaf in flat_p:
+        by_path[_names(path)] = (leaf, specs_by_path.get(_names(path), P()))
+
+    def _is_factored(x):
+        return isinstance(x, dict) and ("vr" in x or "v" in x) and all(
+            hasattr(v, "shape") for v in x.values())
+
+    def sub_specs(key: str, subtree: Any) -> Any:
+        def visit(path, leaf):
+            pnames = _names(path)
+            hit = by_path.get(pnames)
+            if _is_factored(leaf):
+                if hit is None:
+                    return {k: P() for k in leaf}
+                p_leaf, spec = hit
+                full = _pad_spec(spec, p_leaf.ndim)
+                out = {}
+                if "vr" in leaf:
+                    out["vr"] = P(*full[:-1])
+                if "vc" in leaf:
+                    out["vc"] = P(*(full[:-2] + full[-1:]))
+                if "v" in leaf:
+                    out["v"] = P(*full)
+                return out
+            if not hasattr(leaf, "shape") or leaf.ndim == 0:
+                return P()
+            if hit is not None and hit[0].shape == leaf.shape:
+                return hit[1]
+            return P()
+
+        return jax.tree_util.tree_map_with_path(
+            visit, subtree, is_leaf=lambda x: _is_factored(x))
+
+    return {k: sub_specs(k, v) for k, v in opt_state.items()}
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, seq: int) -> Dict:
+    """Specs for the decode cache tree of `cfg` (same keys as init_cache):
+    the batch dim shards over the batch axes, everything else replicates."""
+    from repro.models import registry             # lazy: avoid import cycle
+    ba = _batch_axes(mesh, batch)
+    sds = jax.eval_shape(lambda: registry.init_cache(cfg, batch, seq))
+
+    def visit(path, leaf):
+        names = _names(path)
+        if names and names[-1] == "length":
+            return P(ba)
+        # stacked [L, B, ...] state: batch at dim 1
+        return P(None, ba, *([None] * (leaf.ndim - 2)))
+
+    return jax.tree_util.tree_map_with_path(visit, sds)
+
+
+def batch_specs(cfg: ModelConfig, mesh, global_batch: int, seq: int) -> Dict:
+    """Specs for every step-input key (callers .get() what they need);
+    batch dim over the batch axes, sequence/feature dims replicated."""
+    ba = _batch_axes(mesh, global_batch)
+    return {
+        "tokens": P(ba, None),
+        "labels": P(ba, None),
+        "loss_mask": P(ba, None),
+        "embeds": P(ba, None, None),
+        "prefix_embeds": P(ba, None, None),
+        "images": P(ba, None, None, None),
+    }
+
+
+def named_sharding_tree(spec_tree: Any, mesh) -> Any:
+    """P tree → NamedSharding tree (leaves that aren't P pass through)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

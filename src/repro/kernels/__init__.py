@@ -1,5 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-sta_gemm: dense Tensor-PE-tiled GEMM (output-stationary VMEM accumulation).
-dbb_gemm: DBB structured-sparse GEMM with on-chip bitmask decompression.
+sta_gemm:  dense Tensor-PE-tiled GEMM (output-stationary VMEM accumulation).
+dbb_gemm:  DBB structured-sparse GEMM with on-chip bitmask decompression.
+epilogue:  fused bias/activation/requant applied in the final-K store of
+           both kernels (DESIGN.md §7).
+autotune:  measured (bm, bk, bn) block-shape selection with a persistent
+           on-disk cache (DESIGN.md §7).
 """
+from repro.kernels.epilogue import Epilogue, apply_epilogue
+
+__all__ = ["Epilogue", "apply_epilogue"]

@@ -1,0 +1,201 @@
+"""Measured (bm, bk, bn) block-shape autotuner with a persistent cache
+(DESIGN.md §7).
+
+`core.sta.choose_block_shape` is an analytical prior: it honors MXU/VREG
+alignment and the VMEM footprint model but never looks at the clock. This
+module turns it into a *measured* choice: generate a small candidate
+neighborhood around the heuristic (half/double each block dim), drop
+everything that violates alignment or the VMEM budget, time each survivor
+on the real kernel, and memoize the winner.
+
+Cache key: (kernel, M, K, N, dtype, epilogue-tag, backend). Results persist
+in a JSON table (default ``~/.cache/repro/autotune.json``, override with
+``REPRO_AUTOTUNE_CACHE``) so the sweep cost is paid once per shape per
+machine. Set ``REPRO_AUTOTUNE=1`` to let the GEMM wrappers consult the
+autotuner instead of the static heuristic; without the env var (and without
+an explicit ``autotune=True``) behaviour is unchanged.
+
+Measurement happens eagerly at trace time — the wrappers call in with
+concrete (M, K, N), the tuner runs the candidate kernels on synthetic
+operands outside the enclosing jit, and only the winning static shape is
+baked into the traced computation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import StaConfig
+from repro.core.sta import LANE, SUBLANE, VMEM_BYTES, choose_block_shape
+
+__all__ = [
+    "autotune_enabled", "cache_path", "candidate_block_shapes",
+    "autotune_block_shape", "clear_memory_cache",
+]
+
+BlockShape = Tuple[int, int, int]
+
+# in-memory layer over the on-disk table; maps cache-file path -> table
+_MEM: Dict[str, Dict[str, List[int]]] = {}
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "0").lower() not in (
+        "", "0", "false", "no")
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+def clear_memory_cache() -> None:
+    _MEM.clear()
+
+
+def _load(path: str) -> Dict[str, List[int]]:
+    if path not in _MEM:
+        table: Dict[str, List[int]] = {}
+        try:
+            with open(path) as f:
+                table = {k: list(map(int, v)) for k, v in json.load(f).items()}
+        except (OSError, ValueError):
+            pass
+        _MEM[path] = table
+    return _MEM[path]
+
+
+def _save(path: str, table: Dict[str, List[int]]) -> None:
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(table, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)          # atomic: a crash never corrupts
+    except OSError:
+        pass                           # cache is an optimization, never fatal
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _footprint(bm: int, bk: int, bn: int, itemsize: int) -> int:
+    """Same VMEM working-set model as choose_block_shape: two operand tiles
+    plus the f32/int32 accumulator tile."""
+    return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+
+def candidate_block_shapes(m: int, k: int, n: int,
+                           cfg: Optional[StaConfig] = None,
+                           itemsize: int = 2,
+                           align_k: int = LANE,
+                           max_candidates: int = 8) -> List[BlockShape]:
+    """Heuristic choice + its half/double neighborhood, constraint-filtered.
+
+    align_k: extra K-tile alignment (the DBB kernel needs bk % B == 0 on top
+    of the LANE quantum; pass lcm(LANE, B) — callers pass LANE for dense).
+    Constraints: bm % SUBLANE == 0, bn % LANE == 0, bk % align_k == 0,
+    footprint ≤ VMEM/2, no block larger than the padded problem dim.
+    """
+    cfg = cfg or StaConfig()
+    base = choose_block_shape(m, k, n, cfg, itemsize=itemsize)
+    mp = _round_up(max(m, 1), SUBLANE)
+    kp = _round_up(max(k, 1), align_k)
+    np_ = _round_up(max(n, 1), LANE)
+
+    def clamp(v: int, quantum: int, hi: int) -> int:
+        return max(quantum, min(_round_up(v, quantum), _round_up(hi, quantum)))
+
+    bm0, bk0, bn0 = base
+    cands: List[BlockShape] = []
+    for fm in (1.0, 0.5, 2.0):
+        for fk in (1.0, 0.5, 2.0):
+            for fn in (1.0, 0.5, 2.0):
+                bm = clamp(int(bm0 * fm), SUBLANE, mp)
+                bk = clamp(int(bk0 * fk), align_k, kp)
+                bn = clamp(int(bn0 * fn), LANE, np_)
+                c = (bm, bk, bn)
+                if c in cands:
+                    continue
+                if _footprint(bm, bk, bn, itemsize) > VMEM_BYTES // 2:
+                    continue
+                cands.append(c)
+    if not cands:                       # over-constrained: trust the prior
+        cands = [base]
+    return cands[:max_candidates]
+
+
+def _measure(fn: Callable[[], object], repeats: int = 3) -> float:
+    """Best-of-N wall time of fn(), compile/warmup excluded."""
+    import jax
+    jax.block_until_ready(fn())         # warmup (compile / first trace)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_block_shape(
+    kernel_name: str,
+    m: int, k: int, n: int, dtype,
+    make_fn: Callable[[BlockShape], Callable[[], object]],
+    *,
+    epilogue_tag: str = "none",
+    candidates: Optional[Sequence[BlockShape]] = None,
+    cfg: Optional[StaConfig] = None,
+    itemsize: int = 2,
+    align_k: int = LANE,
+    repeats: int = 3,
+    path: Optional[str] = None,
+    measure: bool = True,
+) -> BlockShape:
+    """Return the fastest measured (bm, bk, bn) for this GEMM shape.
+
+    make_fn(shape) must return a zero-arg callable that runs the kernel once
+    with that block shape (on synthetic operands) and returns its output.
+    Winners are memoized in memory and on disk; a cache hit never measures.
+
+    measure=False (caller is inside a jit trace, where kernels can't
+    execute): cache lookup only — a miss returns the analytical prior and
+    caches nothing, so a later eager call can still tune the shape.
+    """
+    import jax
+    path = path or cache_path()
+    key = "|".join(str(p) for p in (
+        kernel_name, m, k, n, np.dtype(dtype).name, epilogue_tag,
+        jax.default_backend()))
+    table = _load(path)
+    hit = table.get(key)
+    if hit is not None:
+        return tuple(hit)  # type: ignore[return-value]
+
+    if candidates is None:
+        candidates = candidate_block_shapes(
+            m, k, n, cfg, itemsize=itemsize, align_k=align_k)
+    if not measure:
+        return candidates[0]            # the choose_block_shape prior
+    best_shape, best_t = candidates[0], float("inf")
+    for shape in candidates:
+        try:
+            t = _measure(make_fn(shape), repeats=repeats)
+        except Exception:               # a candidate the backend rejects
+            continue
+        if t < best_t:
+            best_shape, best_t = shape, t
+    if best_t == float("inf"):
+        # every candidate failed to run: fall back to the analytical prior
+        # and do NOT cache — caching would pin a known-failing shape until
+        # the user deletes the file
+        return best_shape
+    table[key] = list(best_shape)
+    _save(path, table)
+    return best_shape

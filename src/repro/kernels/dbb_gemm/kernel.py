@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import CompilerParams, acc_dtype_for, pltpu, popcount_u32
+from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
 __all__ = ["dbb_gemm_pallas"]
 
@@ -54,8 +55,12 @@ def _decompress_tile(vals, mask, *, block: int, nnz: int):
     return dense.reshape(nb * block, bn)
 
 
-def _dbb_gemm_kernel(x_ref, v_ref, m_ref, o_ref, acc_ref, *,
-                     n_k: int, block: int, nnz: int, out_dtype):
+def _dbb_gemm_kernel(x_ref, v_ref, m_ref, *refs, n_k: int, block: int,
+                     nnz: int, out_dtype, epilogue: Epilogue):
+    refs = list(refs)
+    bias_ref = refs.pop(0) if epilogue.has_bias else None
+    scale_ref = refs.pop(0) if epilogue.has_scale else None
+    o_ref, acc_ref = refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -70,14 +75,20 @@ def _dbb_gemm_kernel(x_ref, v_ref, m_ref, o_ref, acc_ref, *,
 
     @pl.when(k == n_k - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        o_ref[...] = apply_epilogue(
+            acc_ref[...], epilogue, out_dtype,
+            bias=bias_ref[...] if bias_ref is not None else None,
+            scale=scale_ref[...] if scale_ref is not None else None)
 
 
 def dbb_gemm_pallas(
     x: jax.Array,          # [M, K]
     values: jax.Array,     # [K//B * k, N] compressed non-zeros (slot-major)
     bitmask: jax.Array,    # [K//B, N] int32 (low `block` bits used)
+    bias: jax.Array = None,    # [1, N] f32 (epilogue.has_bias)
+    scale: jax.Array = None,   # [1, N] f32 (epilogue.has_scale)
     *,
+    epilogue: Epilogue = Epilogue(),
     block: int = 8,
     nnz: int = 4,
     block_m: int = 128,
@@ -86,7 +97,17 @@ def dbb_gemm_pallas(
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """``x @ unpack(values, bitmask)`` with on-chip DBB decompression."""
+    """``x @ unpack(values, bitmask)`` with on-chip DBB decompression and an
+    optional fused bias/activation/requant epilogue in the final-K store.
+
+    Shape contract (DESIGN.md §2): for dense contraction dim K and DBB
+    geometry (B=block, k=nnz), the weight stream is
+        values  [K/B · k, N]  slot-major (row kb·k + s = slot s of block kb)
+        bitmask [K/B, N]      int32, bit ``pos`` set ⇔ dense row
+                              kb·B + pos is kept
+    K must divide by block_k and block_k by B, so every K tile covers whole
+    DBB blocks.
+    """
     m, k_dim = x.shape
     kc, n = values.shape
     nb_total = k_dim // block
@@ -97,26 +118,41 @@ def dbb_gemm_pallas(
 
     acc_dtype = acc_dtype_for(x.dtype)
     if out_dtype is None:
-        out_dtype = acc_dtype if x.dtype == jnp.int8 else x.dtype
+        out_dtype = default_out_dtype(x.dtype, epilogue)
     n_k = k_dim // block_k
     nb_tile = block_k // block            # blocks per K tile
     bkc = nb_tile * nnz                   # compressed rows per K tile
 
+    operands = [x, values, bitmask]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bkc, block_n), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((nb_tile, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    row_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+    if epilogue.has_bias:
+        assert bias is not None and bias.shape == (1, n), (
+            "bias must be [1, N]", None if bias is None else bias.shape, n)
+        operands.append(bias)
+        in_specs.append(row_spec)
+    if epilogue.has_scale:
+        assert scale is not None and scale.shape == (1, n), (
+            "scale must be [1, N]", None if scale is None else scale.shape, n)
+        operands.append(scale)
+        in_specs.append(row_spec)
+
     grid = (m // block_m, n // block_n, n_k)
     kernel = functools.partial(_dbb_gemm_kernel, n_k=n_k, block=block,
-                               nnz=nnz, out_dtype=out_dtype)
+                               nnz=nnz, out_dtype=out_dtype,
+                               epilogue=epilogue)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bkc, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((nb_tile, block_n), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), acc_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, values, bitmask)
+    )(*operands)

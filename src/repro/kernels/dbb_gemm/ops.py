@@ -4,12 +4,28 @@
 format); `dbb_gemm` takes raw (values, bitmask). Both pad M to the block
 grid and fall back to the oracle when `use_kernel=False`.
 
+Shape contract (DESIGN.md §2): for a dense weight ``W[K, N]`` and DBB
+geometry (B=block, k=nnz),
+    values  [K/B · k, N]  surviving values, slot-major per block
+                          (row kb·k + s holds slot s of block kb)
+    bitmask [K/B, N]      bit ``pos`` set ⇔ dense row kb·B + pos kept
 K and N must already be block-aligned — weights are packed offline, and
 every assigned architecture's matmul dims are multiples of 128.
+
+The fused epilogue (bias / activation / scale, DESIGN.md §7) runs inside
+the kernel's final-K store; `dbb_gemm_packed` folds the per-out-channel
+quant scale of the packed weight into that epilogue, so dequantization no
+longer costs a second pass over the [M, N] output in HBM.
+
+Like `sta_gemm`, the public wrapper is a plain function that resolves the
+block shape (measured autotuning needs concrete operands — inside an
+enclosing jit the tuner degrades to cache lookup + heuristic) and then
+dispatches to the inner jit'd implementation.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -19,45 +35,37 @@ from repro.core.dbb import DbbWeight
 from repro.kernels.common import default_interpret, round_up
 from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
 from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
+from repro.kernels.epilogue import Epilogue, as_row
 
 __all__ = ["dbb_gemm", "dbb_gemm_packed"]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block", "nnz", "block_m", "block_k", "block_n",
+    static_argnames=("act", "block", "nnz", "block_m", "block_k", "block_n",
                      "out_dtype", "interpret", "use_kernel"))
-def dbb_gemm(
-    x: jax.Array,          # [..., K]
-    values: jax.Array,     # [K//B * k, N]
-    bitmask: jax.Array,    # [K//B, N] integer
-    *,
-    block: int = 8,
-    nnz: int = 4,
-    block_m: int = 128,
-    block_k: int = 128,
-    block_n: int = 128,
-    out_dtype=None,
-    interpret: Optional[bool] = None,
-    use_kernel: bool = True,
-) -> jax.Array:
-    if interpret is None:
-        interpret = default_interpret()
+def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
+                   block_m, block_k, block_n, out_dtype, interpret,
+                   use_kernel):
+    epilogue = Epilogue(act=act, has_bias=bias is not None,
+                        has_scale=scale is not None)
     *batch, k_dim = x.shape
     n = values.shape[1]
     x2 = x.reshape(-1, k_dim)
     m = x2.shape[0]
     mask_i32 = bitmask.astype(jnp.int32)
+    bias_r = as_row(bias, n) if bias is not None else None
+    scale_r = as_row(scale, n) if scale is not None else None
 
     if not use_kernel:
         y = dbb_gemm_ref(x2, values, mask_i32, block=block, nnz=nnz,
+                         epilogue=epilogue, bias=bias_r, scale=scale_r,
                          out_dtype=out_dtype)
         return y.reshape(*batch, n)
 
     assert k_dim % block == 0, (k_dim, block)
     bm = min(block_m, round_up(m, 8))
-    bk = min(round_up(block_k, block) // block * block, block_k) or block
-    bk = max(block, bk // block * block)
+    bk = max(block, block_k // block * block)   # floor-align K tile to B
     bn = min(block_n, round_up(n, 128))
     # pad every axis to its block grid: M rows (zeros), K by whole DBB
     # blocks (zero value-rows + zero mask-rows), N by zero columns
@@ -74,20 +82,121 @@ def dbb_gemm(
     if np_ != n:
         vp = jnp.pad(vp, ((0, 0), (0, np_ - n)))
         mp_arr = jnp.pad(mp_arr, ((0, 0), (0, np_ - n)))
-    y = dbb_gemm_pallas(xp, vp, mp_arr, block=block, nnz=nnz,
+    if bias_r is not None and np_ != n:
+        bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
+    if scale_r is not None and np_ != n:
+        scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
+    y = dbb_gemm_pallas(xp, vp, mp_arr, bias_r, scale_r, epilogue=epilogue,
+                        block=block, nnz=nnz,
                         block_m=bm, block_k=bk, block_n=bn,
                         out_dtype=out_dtype, interpret=interpret)
     return y[:m, :n].reshape(*batch, n)
 
 
-def dbb_gemm_packed(x: jax.Array, p: DbbWeight, *, out_dtype=None,
+def dbb_gemm(
+    x: jax.Array,          # [..., K]
+    values: jax.Array,     # [K//B * k, N]
+    bitmask: jax.Array,    # [K//B, N] integer
+    bias: Optional[jax.Array] = None,    # [N] f32 — fused epilogue
+    scale: Optional[jax.Array] = None,   # scalar/[N] f32 — fused epilogue
+    *,
+    act: str = "none",
+    block: int = 8,
+    nnz: int = 4,
+    block_m: int = 0,          # 0 = unpinned (heuristic or autotuner)
+    block_k: int = 0,
+    block_n: int = 0,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """DBB structured-sparse GEMM: ``x @ unpack(values, bitmask)``.
+
+    Shapes (DESIGN.md §2): ``x [..., K]``; ``values [K/B·k, N]`` slot-major
+    compressed non-zeros; ``bitmask [K/B, N]`` integer, bit ``pos`` set ⇔
+    dense row kb·B + pos kept. K must divide by ``block``; M and N pad to
+    the block grid. ``bias``/``scale``/``act`` fuse into the kernel's
+    final-K store exactly as in `sta_gemm`.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    bm0, bk0, bn0 = block_m or 128, block_k or 128, block_n or 128
+    if use_kernel:
+        if autotune is None:
+            # caller-pinned block shapes win over the tuner (0-sentinel
+            # convention, mirrors sta_gemm)
+            from repro.kernels.autotune import autotune_enabled
+            autotune = (not (block_m or block_k or block_n)
+                        and autotune_enabled())
+        if autotune:
+            *batch, k_dim = x.shape
+            m = math.prod(batch) if batch else 1
+            epi = Epilogue(act=act, has_bias=bias is not None,
+                           has_scale=scale is not None)
+            measure = not isinstance(x, jax.core.Tracer)
+            bm0, bk0, bn0 = _autotuned_shape(
+                m, k_dim, values.shape[1], x.dtype, epi, out_dtype,
+                interpret, block=block, nnz=nnz, measure=measure)
+    return _dbb_gemm_impl(x, values, bitmask, bias, scale, act=act,
+                          block=block, nnz=nnz, block_m=bm0, block_k=bk0,
+                          block_n=bn0, out_dtype=out_dtype,
+                          interpret=interpret, use_kernel=use_kernel)
+
+
+def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
+                     *, block, nnz, measure):
+    """Measured (bm, bk, bn) for the DBB kernel (bk also B-aligned)."""
+    import numpy as np
+    from repro.core.sta import LANE
+    from repro.kernels import autotune
+
+    align_k = LANE * block // math.gcd(LANE, block)
+
+    def make_fn(shape):
+        bm, bk, bn = shape
+        mp = round_up(m, bm)
+        kp = round_up(k_dim, bk)
+        np_ = round_up(n, bn)
+        rng = np.random.default_rng(0)
+        if np.dtype(dtype) == np.int8:
+            x = jnp.asarray(rng.integers(-127, 128, (mp, kp)), jnp.int8)
+            vals = jnp.asarray(
+                rng.integers(-127, 128, (kp // block * nnz, np_)), jnp.int8)
+        else:
+            x = jnp.asarray(rng.standard_normal((mp, kp)), dtype)
+            vals = jnp.asarray(
+                rng.standard_normal((kp // block * nnz, np_)), dtype)
+        mask = jnp.full((kp // block, np_), (1 << nnz) - 1, jnp.int32)
+        bias = jnp.zeros((1, np_), jnp.float32) if epilogue.has_bias else None
+        scale = jnp.ones((1, np_), jnp.float32) if epilogue.has_scale else None
+        return lambda: dbb_gemm_pallas(
+            x, vals, mask, bias, scale, epilogue=epilogue, block=block,
+            nnz=nnz, block_m=bm, block_k=bk, block_n=bn,
+            out_dtype=out_dtype, interpret=interpret)
+
+    tag = f"{epilogue.tag()}>{jnp.dtype(out_dtype).name if out_dtype else 'auto'}"
+    name = f"dbb_gemm_b{block}k{nnz}" + ("_interp" if interpret else "")
+    return autotune.autotune_block_shape(
+        name, m, k_dim, n, dtype, make_fn,
+        epilogue_tag=tag,
+        itemsize=np.dtype(dtype).itemsize, align_k=align_k, measure=measure)
+
+
+def dbb_gemm_packed(x: jax.Array, p: DbbWeight,
+                    bias: Optional[jax.Array] = None, *,
+                    act: str = "none", out_dtype=None,
                     interpret: Optional[bool] = None,
                     use_kernel: bool = True, **block_kw) -> jax.Array:
-    """GEMM against a packed DbbWeight; applies the per-channel quant scale."""
-    y = dbb_gemm(x, p.values, p.bitmask, block=p.block, nnz=p.nnz,
+    """GEMM against a packed DbbWeight.
+
+    The per-out-channel quant scale (if any) is *fused into the kernel
+    epilogue* together with the optional bias and activation — the
+    pre-dequant [M, N] accumulator never round-trips through HBM.
+    """
+    scale = p.scale
+    y = dbb_gemm(x, p.values, p.bitmask, bias, scale,
+                 act=act, block=p.block, nnz=p.nnz,
                  out_dtype=out_dtype, interpret=interpret,
                  use_kernel=use_kernel, **block_kw)
-    if p.scale is not None:
-        y = (y.astype(jnp.float32) * p.scale).astype(
-            out_dtype if out_dtype is not None else y.dtype)
     return y

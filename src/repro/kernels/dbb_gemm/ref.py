@@ -1,11 +1,15 @@
-"""Pure-jnp oracle for the DBB GEMM kernel: decompress densely, then matmul."""
+"""Pure-jnp oracle for the DBB GEMM kernel: decompress densely, then matmul,
+then the same fused epilogue the kernel applies in VMEM."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight, unpack_dbb
 from repro.kernels.common import acc_dtype_for
+from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
 __all__ = ["dbb_gemm_ref", "decompress_ref"]
 
@@ -30,15 +34,19 @@ def decompress_ref(values: jax.Array, bitmask: jax.Array, *,
 
 
 def dbb_gemm_ref(x: jax.Array, values: jax.Array, bitmask: jax.Array, *,
-                 block: int, nnz: int, out_dtype=None) -> jax.Array:
+                 block: int, nnz: int,
+                 epilogue: Epilogue = Epilogue(),
+                 bias: Optional[jax.Array] = None,
+                 scale: Optional[jax.Array] = None,
+                 out_dtype=None) -> jax.Array:
     acc = acc_dtype_for(x.dtype)
     if out_dtype is None:
-        out_dtype = acc if x.dtype == jnp.int8 else x.dtype
+        out_dtype = default_out_dtype(x.dtype, epilogue)
     w = decompress_ref(values, bitmask, block=block, nnz=nnz).astype(x.dtype)
     y = jax.lax.dot_general(
         x, w, dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=acc)
-    return y.astype(out_dtype)
+    return apply_epilogue(y, epilogue, out_dtype, bias=bias, scale=scale)
 
 
 def dbb_gemm_ref_from_packed(x: jax.Array, p: DbbWeight,

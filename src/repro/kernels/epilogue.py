@@ -1,0 +1,146 @@
+"""Fused GEMM epilogue: bias + activation + INT8 requantization (DESIGN.md §7).
+
+The paper keeps the whole MAC→accumulate→writeback path on-chip; S2TA
+(arXiv:2107.07983) extends that by fusing the requant logic into the PE
+datapath. The TPU analogue: once the output-stationary accumulator tile has
+seen its last K step, the epilogue runs *in VMEM on the VPU* before the one
+store to HBM. Without fusion every consumer re-reads the [M, N] accumulator
+from HBM to add a bias, apply an activation, or requantize — for the
+memory-bound decode GEMMs that extra round-trip is pure roofline loss
+(2·M·N·itemsize bytes per epilogue op).
+
+One `Epilogue` spec + one `apply_epilogue` function are shared by the Pallas
+kernels (applied to the accumulator tile in the final-K store) and the jnp
+oracles (applied to the full accumulator), so fused/unfused parity is
+structural, not coincidental.
+
+Operation order (fixed; matches the INT8 serving datapath in core/quant.py):
+
+    acc                     int32 (int8 operands) or f32
+    1. scale   y = acc * scale        f32, per-out-channel [N] or scalar —
+                                      dequant (x_s·w_s) and requant (1/y_s)
+                                      multipliers, folded into one operand
+                                      by the caller
+    2. bias    y = y + bias           f32 [N], in post-scale (output) units
+    3. act     y = act(y)             relu | gelu (tanh approx) | silu
+    4. store   round+clip to ±127 when the output dtype is int8,
+               plain dtype cast otherwise
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Epilogue", "apply_epilogue", "apply_act", "default_out_dtype",
+           "as_row", "ACTIVATIONS"]
+
+ACTIVATIONS = ("none", "relu", "gelu", "silu")
+
+_ACT_FNS = {
+    "relu": lambda y: jnp.maximum(y, 0),
+    "gelu": lambda y: jax.nn.gelu(y, approximate=True),
+    "silu": jax.nn.silu,
+}
+
+_INT8_MAX = 127.0
+
+
+def apply_act(y: jax.Array, act: str) -> jax.Array:
+    """Apply one of ACTIVATIONS by name — the single dispatch shared by the
+    kernel epilogue and every XLA fallback path, so fused and unfused
+    routes cannot drift."""
+    if act == "none":
+        return y
+    if act not in _ACT_FNS:
+        raise ValueError(f"act={act!r} not in {ACTIVATIONS}")
+    return _ACT_FNS[act](y)
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Static description of the fused epilogue (hashable — jit-static).
+
+    The spec carries only *flags*; the runtime tensors (bias [N] f32,
+    scale [N] or scalar f32) travel as ordinary kernel operands so one
+    compiled kernel serves any bias/scale values.
+
+    act:       one of ACTIVATIONS, applied after scale+bias.
+    has_bias:  a bias operand is present.
+    has_scale: a scale operand is present (per-channel dequant and/or
+               scalar requant multiplier, pre-folded by the caller).
+    """
+    act: str = "none"
+    has_bias: bool = False
+    has_scale: bool = False
+
+    def __post_init__(self):
+        if self.act not in ACTIVATIONS:
+            raise ValueError(
+                f"act={self.act!r} not in {ACTIVATIONS}")
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.act == "none" and not self.has_bias
+                and not self.has_scale)
+
+    def tag(self) -> str:
+        """Stable string key (autotune cache, benchmark labels)."""
+        parts = [self.act]
+        if self.has_bias:
+            parts.append("bias")
+        if self.has_scale:
+            parts.append("scale")
+        return "+".join(parts)
+
+
+def apply_epilogue(acc: jax.Array, spec: Epilogue, out_dtype,
+                   bias: Optional[jax.Array] = None,
+                   scale: Optional[jax.Array] = None) -> jax.Array:
+    """Accumulator tile/tensor → output tile/tensor of ``out_dtype``.
+
+    acc:   [..., N] int32 or f32 accumulator values.
+    bias:  broadcastable-to-acc f32 (row vector [1, N] inside kernels).
+    scale: broadcastable-to-acc f32, or None.
+
+    Math runs in f32 as soon as any float op is involved; a pure ReLU on an
+    int32 accumulator stays exact in int32 (max(acc, 0)).
+    """
+    out_dtype = jnp.dtype(out_dtype)
+    assert spec.has_bias == (bias is not None), (spec, bias is None)
+    assert spec.has_scale == (scale is not None), (spec, scale is None)
+    y = acc
+    if spec.has_scale:
+        y = y.astype(jnp.float32) * scale.astype(jnp.float32)
+    if spec.has_bias:
+        y = y.astype(jnp.float32) + bias.astype(jnp.float32)
+    if spec.act == "relu":
+        y = _ACT_FNS["relu"](y)                     # dtype-preserving, exact
+    elif spec.act != "none":
+        y = _ACT_FNS[spec.act](y.astype(jnp.float32))
+    if out_dtype == jnp.int8:
+        y = jnp.clip(jnp.round(y.astype(jnp.float32)),
+                     -_INT8_MAX, _INT8_MAX)
+    return y.astype(out_dtype)
+
+
+def default_out_dtype(operand_dtype, spec: Epilogue = Epilogue()) -> jnp.dtype:
+    """Output-dtype policy shared by kernels, refs, and ops wrappers:
+    int8 operands emit the raw INT32 accumulator unless a dequant scale is
+    fused (then f32); float operands keep their dtype."""
+    if jnp.dtype(operand_dtype) == jnp.int8:
+        return jnp.dtype(jnp.float32 if spec.has_scale else jnp.int32)
+    return jnp.dtype(operand_dtype)
+
+
+def as_row(a, n: int) -> jax.Array:
+    """Normalize a scalar / [N] / [1, N] epilogue operand to the [1, N] f32
+    row vector the kernels consume (shared by both ops wrappers)."""
+    a = jnp.asarray(a, jnp.float32)
+    if a.ndim == 0:
+        a = a.reshape(1, 1)
+    if a.ndim == 1:
+        a = a.reshape(1, -1)
+    return jnp.broadcast_to(a, (1, n))

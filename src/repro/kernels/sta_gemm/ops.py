@@ -1,12 +1,22 @@
 """Jit'd public wrapper around the STA GEMM kernel.
 
-Handles batch dims, padding to block multiples, dtype policy, and the
-CPU-interpret fallback. Block shapes default to `core.sta.choose_block_shape`
-so the Tensor-PE geometry config drives the tiling.
+Handles batch dims, padding to block multiples, dtype policy, the fused
+bias/activation/requant epilogue, and the CPU-interpret fallback. Block
+shapes default to `core.sta.choose_block_shape` (the Tensor-PE geometry
+prior); with ``REPRO_AUTOTUNE=1`` (or ``autotune=True``) the measured
+autotuner in `kernels.autotune` picks them instead.
+
+Structure note: `sta_gemm` itself is a *plain* function that resolves the
+block shape, then dispatches to the inner jit'd `_sta_gemm_impl` with the
+shape as static args. The tuner must run real kernels on the clock, which
+is only possible with concrete (non-tracer) operands — when `sta_gemm` is
+called inside an enclosing jit, the tuner degrades to a cache lookup and
+the analytical prior (never a measurement, never a bogus cache write).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -15,47 +25,130 @@ import jax.numpy as jnp
 from repro.config import StaConfig
 from repro.core.sta import choose_block_shape
 from repro.kernels.common import default_interpret, round_up
+from repro.kernels.epilogue import Epilogue, as_row, default_out_dtype
 from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
 from repro.kernels.sta_gemm.ref import sta_gemm_ref
 
 __all__ = ["sta_gemm"]
 
 
+def _autotuned_shape(m: int, k: int, n: int, dtype, epilogue: Epilogue,
+                     out_dtype, interpret: bool, cfg: StaConfig,
+                     measure: bool) -> Tuple[int, int, int]:
+    """Measured block shape for this GEMM (memoized on disk). With
+    measure=False (tracer operands) only the cache is consulted."""
+    import numpy as np
+    from repro.kernels import autotune
+
+    def make_fn(shape):
+        bm, bk, bn = shape
+        mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+        rng = np.random.default_rng(0)
+        if np.dtype(dtype) == np.int8:
+            x = jnp.asarray(rng.integers(-127, 128, (mp, kp)), jnp.int8)
+            w = jnp.asarray(rng.integers(-127, 128, (kp, np_)), jnp.int8)
+        else:
+            x = jnp.asarray(rng.standard_normal((mp, kp)), dtype)
+            w = jnp.asarray(rng.standard_normal((kp, np_)), dtype)
+        bias = jnp.zeros((1, np_), jnp.float32) if epilogue.has_bias else None
+        scale = jnp.ones((1, np_), jnp.float32) if epilogue.has_scale else None
+        return lambda: sta_gemm_pallas(
+            x, w, bias, scale, epilogue=epilogue, block_m=bm, block_k=bk,
+            block_n=bn, out_dtype=out_dtype, interpret=interpret)
+
+    # out_dtype changes the store bandwidth (int32 vs int8 requant) and
+    # interpret-mode timings are meaningless for compiled runs — both key
+    # the cache
+    tag = f"{epilogue.tag()}>{jnp.dtype(out_dtype).name if out_dtype else 'auto'}"
+    return autotune.autotune_block_shape(
+        "sta_gemm" + ("_interp" if interpret else ""), m, k, n, dtype,
+        make_fn, epilogue_tag=tag, cfg=cfg,
+        itemsize=np.dtype(dtype).itemsize, measure=measure)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_k", "block_n", "out_dtype",
+    static_argnames=("act", "block_m", "block_k", "block_n", "out_dtype",
                      "interpret", "use_kernel"))
+def _sta_gemm_impl(x, w, bias, scale, *, act, block_m, block_k, block_n,
+                   out_dtype, interpret, use_kernel):
+    epilogue = Epilogue(act=act, has_bias=bias is not None,
+                        has_scale=scale is not None)
+    *batch, k = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bias_r = as_row(bias, n) if bias is not None else None
+    scale_r = as_row(scale, n) if scale is not None else None
+
+    if not use_kernel:
+        y = sta_gemm_ref(x2, w, epilogue=epilogue, bias=bias_r,
+                         scale=scale_r, out_dtype=out_dtype)
+        return y.reshape(*batch, n)
+
+    bm, bk, bn = block_m, block_k, block_n
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x2
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    if bias_r is not None and np_ != n:
+        bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
+    if scale_r is not None and np_ != n:
+        scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
+    y = sta_gemm_pallas(xp, wp, bias_r, scale_r, epilogue=epilogue,
+                        block_m=bm, block_k=bk, block_n=bn,
+                        out_dtype=out_dtype, interpret=interpret)
+    y = y[:m, :n]
+    return y.reshape(*batch, n)
+
+
 def sta_gemm(
     x: jax.Array,                # [..., K]
     w: jax.Array,                # [K, N]
+    bias: Optional[jax.Array] = None,    # [N] f32 — fused epilogue
+    scale: Optional[jax.Array] = None,   # scalar/[N] f32 — fused epilogue
     *,
+    act: str = "none",
     block_m: int = 0,
     block_k: int = 0,
     block_n: int = 0,
     out_dtype=None,
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
+    autotune: Optional[bool] = None,
 ) -> jax.Array:
-    """Dense GEMM through the STA Pallas kernel (oracle fallback optional)."""
+    """Dense GEMM through the STA Pallas kernel (oracle fallback optional),
+    with the bias/act/requant epilogue fused into the final-K store.
+
+    Shapes: ``x [..., K] · w [K, N] → [..., N]``; any dims/dtypes — batch
+    dims flatten to M, ragged (M, K, N) pad to the block grid and slice
+    back. ``bias [N]`` f32; ``scale`` scalar or [N] f32 (multiplies the raw
+    accumulator — fold dequant × requant before the call). Output dtype
+    policy per DESIGN.md §7: int8 operands → int32 (raw) or f32 (scaled)
+    or int8 (explicit ``out_dtype`` ⇒ round+clip ±127); floats keep their
+    dtype.
+    """
     if interpret is None:
         interpret = default_interpret()
-    *batch, k = x.shape
-    n = w.shape[1]
-    x2 = x.reshape(-1, k)
-    m = x2.shape[0]
-
-    if not use_kernel:
-        y = sta_gemm_ref(x2, w, out_dtype=out_dtype)
-        return y.reshape(*batch, n)
-
-    cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
-                    block_n=block_n or 128)
-    bm, bk, bn = choose_block_shape(m, k, n, cfg,
-                                    itemsize=x.dtype.itemsize)
-    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
-    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x2
-    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
-    y = sta_gemm_pallas(xp, wp, block_m=bm, block_k=bk, block_n=bn,
-                        out_dtype=out_dtype, interpret=interpret)
-    y = y[:m, :n]
-    return y.reshape(*batch, n)
+    bm, bk, bn = 128, 128, 128
+    if use_kernel:
+        *batch, k = x.shape
+        m = math.prod(batch) if batch else 1
+        n = w.shape[1]
+        cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
+                        block_n=block_n or 128)
+        if autotune is None:
+            from repro.kernels.autotune import autotune_enabled
+            autotune = (not (block_m or block_k or block_n)
+                        and autotune_enabled())
+        if autotune:
+            epi = Epilogue(act=act, has_bias=bias is not None,
+                           has_scale=scale is not None)
+            measure = not isinstance(x, jax.core.Tracer)
+            bm, bk, bn = _autotuned_shape(m, k, n, x.dtype, epi, out_dtype,
+                                          interpret, cfg, measure)
+        else:
+            bm, bk, bn = choose_block_shape(m, k, n, cfg,
+                                            itemsize=x.dtype.itemsize)
+    return _sta_gemm_impl(x, w, bias, scale, act=act, block_m=bm,
+                          block_k=bk, block_n=bn, out_dtype=out_dtype,
+                          interpret=interpret, use_kernel=use_kernel)

@@ -1,21 +1,29 @@
-"""Pure-jnp oracle for the STA dense GEMM kernel."""
+"""Pure-jnp oracle for the STA dense GEMM kernel (fused epilogue included)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import acc_dtype_for
+from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
 __all__ = ["sta_gemm_ref"]
 
 
-def sta_gemm_ref(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
-    """``x @ w`` with the same accumulation semantics as the kernel:
-    INT8×INT8→INT32 on the integer datapath, f32 accumulation otherwise."""
+def sta_gemm_ref(x: jax.Array, w: jax.Array, *,
+                 epilogue: Epilogue = Epilogue(),
+                 bias: Optional[jax.Array] = None,
+                 scale: Optional[jax.Array] = None,
+                 out_dtype=None) -> jax.Array:
+    """``x @ w`` with the same accumulation semantics as the kernel
+    (INT8×INT8→INT32 on the integer datapath, f32 accumulation otherwise),
+    followed by the identical `apply_epilogue` the kernel runs in VMEM."""
     acc = acc_dtype_for(x.dtype)
     if out_dtype is None:
-        out_dtype = acc if x.dtype == jnp.int8 else x.dtype
+        out_dtype = default_out_dtype(x.dtype, epilogue)
     y = jax.lax.dot_general(
         x, w, dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=acc)
-    return y.astype(out_dtype)
+    return apply_epilogue(y, epilogue, out_dtype, bias=bias, scale=scale)

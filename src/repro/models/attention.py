@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh
 from repro.models.common import apply_rope, linear_init, normal_init
 
@@ -260,7 +261,7 @@ def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
                                         tiled=True)
         return jax.lax.psum(y, "model")               # bf16 boundary reduce
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(xspec, wspecs),
         out_specs=xspec,

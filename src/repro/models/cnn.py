@@ -19,8 +19,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
 from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
-from repro.kernels.sta_gemm.ops import sta_gemm
-from repro.models.common import normal_init
+from repro.models.common import linear_apply, normal_init
 
 __all__ = ["cnn_init", "cnn_apply", "im2col"]
 
@@ -41,12 +40,17 @@ def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
     return patches.reshape(b, ho, wo, kh * kw * c)
 
 
-def _matmul(x: jax.Array, w, mode: str) -> jax.Array:
+def _matmul(x: jax.Array, w, mode: str, bias=None,
+            act: str = "none") -> jax.Array:
+    """GEMM with optional fused bias/activation epilogue.
+
+    Pallas routes ("sta" / packed DbbWeight) fuse bias+act into the kernel's
+    final-K store (DESIGN.md §7); the XLA route applies them as separate ops
+    (differentiable — the training path)."""
     if isinstance(w, DbbWeight):
-        return dbb_gemm_packed(x, w)
-    if mode == "sta":
-        return sta_gemm(x, w)
-    return x @ w
+        return dbb_gemm_packed(x, w, bias, act=act)
+    p = {"w": w} if bias is None else {"w": w, "b": bias}
+    return linear_apply(p, x, act=act, fused=mode == "sta")
 
 
 def cnn_init(key, cfg: ModelConfig) -> Dict:
@@ -81,11 +85,10 @@ def cnn_apply(params: Dict, cfg: ModelConfig, images: jax.Array,
         b, h, w, c = x.shape
         cols = im2col(x, k, k)                       # [B,H,W,k*k*C]
         y = _matmul(cols.reshape(b * h * w, -1), params[f"conv{i}"]["w"],
-                    matmul)
-        y = y.reshape(b, h, w, cout) + params[f"conv{i}"]["b"]
-        y = jax.nn.relu(y)
+                    matmul, bias=params[f"conv{i}"]["b"], act="relu")
+        y = y.reshape(b, h, w, cout)
         x = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     b = x.shape[0]
     flat = x.reshape(b, -1)
-    return _matmul(flat, params["fc"]["w"], matmul) + params["fc"]["b"]
+    return _matmul(flat, params["fc"]["w"], matmul, bias=params["fc"]["b"])

@@ -12,7 +12,7 @@ from repro.config import ModelConfig
 __all__ = [
     "Initializer", "normal_init", "zeros_init", "norm_apply", "norm_init",
     "rope_freqs", "apply_rope", "embed_init", "embed_apply", "linear_init",
-    "dtype_of",
+    "linear_apply", "use_fused_gemm", "dtype_of",
 ]
 
 
@@ -45,6 +45,37 @@ def linear_init(key, d_in: int, d_out: int, dtype,
     if bias:
         p["b"] = jnp.zeros((d_out,), dtype)
     return p
+
+
+def use_fused_gemm(cfg: ModelConfig) -> bool:
+    """Whether the single-device fused Pallas GEMM path is active: requires
+    ``cfg.gemm_impl == "pallas"`` AND no live device mesh — the kernels are
+    not shard_map-aware, so any distributed layout stays on XLA matmuls."""
+    if cfg.gemm_impl != "pallas":
+        return False
+    from repro.dist.mesh_ctx import current_mesh
+    return current_mesh() is None
+
+
+def linear_apply(p: Dict, x: jax.Array, *, act: str = "none",
+                 fused: bool = False) -> jax.Array:
+    """``act(x @ w + b)`` for a `linear_init` param dict.
+
+    fused=True routes through the STA Pallas kernel with bias+activation
+    applied in the final-K store (DESIGN.md §7) — the pre-activation
+    [M, N] tensor never round-trips through HBM. fused=False is the plain
+    XLA path (shardable, differentiable — use for training / GSPMD).
+    """
+    w = p["w"].astype(x.dtype)
+    b = p.get("b")
+    if fused:
+        from repro.kernels.sta_gemm.ops import sta_gemm
+        return sta_gemm(x, w, b, act=act, out_dtype=x.dtype)
+    y = x @ w
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    from repro.kernels.epilogue import apply_act
+    return apply_act(y, act)
 
 
 # ---------------------------------------------------------------------------

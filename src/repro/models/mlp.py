@@ -18,8 +18,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh, data_axes_of
-from repro.models.common import linear_init
+from repro.models.common import linear_init, use_fused_gemm
 
 __all__ = ["mlp_init", "mlp_apply"]
 
@@ -57,8 +58,25 @@ def _tp_size(mesh) -> int:
     return mesh.shape["model"]
 
 
+def _mlp_fused(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Single-device serving path: every GEMM through the STA Pallas kernel,
+    the activation fused into the up-projection's final-K store (DESIGN.md
+    §7) — the [tokens, d_ff] pre-activation never round-trips through HBM.
+    Gated MLPs fuse the act into the gate GEMM and multiply elementwise."""
+    from repro.kernels.sta_gemm.ops import sta_gemm
+    h = sta_gemm(x, p["wi"]["w"].astype(x.dtype),
+                 act="none" if cfg.mlp_gated else cfg.act,
+                 out_dtype=x.dtype)
+    if cfg.mlp_gated:
+        h = sta_gemm(x, p["wg"]["w"].astype(x.dtype), act=cfg.act,
+                     out_dtype=x.dtype) * h
+    return sta_gemm(h, p["wo"]["w"].astype(x.dtype), out_dtype=x.dtype)
+
+
 def _mlp_dense(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     from jax.ad_checkpoint import checkpoint_name
+    if use_fused_gemm(cfg):
+        return _mlp_fused(p, cfg, x)
     act = _ACTS[cfg.act]
     # named for the selective-remat policy (§Perf iteration 8): saving the
     # two fat up-projections skips their recompute in the backward pass at
@@ -103,7 +121,7 @@ def mlp_apply(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
                                             tiled=True)
             return jax.lax.psum(y, "model")  # bf16 boundary reduce
 
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=mesh,
             in_specs=(xspec, wspecs),
             out_specs=xspec,

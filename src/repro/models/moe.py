@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh, data_axes_of
 from repro.models.common import linear_init, normal_init
 from repro.models.mlp import _ACTS, mlp_apply, mlp_init, seq_parallel_ok
@@ -206,7 +207,7 @@ def moe_apply(p: Dict, cfg: ModelConfig, x: jax.Array
 
         ba = daxes if daxes else None
         batch_spec = P(ba, "model", None) if sp else P(ba)
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(batch_spec, P(), P("model")),
             out_specs=(batch_spec, P()),

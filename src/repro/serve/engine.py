@@ -3,8 +3,11 @@
 Weights may be DBB-packed (`core.dbb_linear.pack_tree`): HBM residency stays
 at the compressed 62.5% and the dense form is materialized transiently inside
 the jitted step (`maybe_decompress_tree`) — the XLA analogue of the STA-DBB
-on-chip decompress (DESIGN.md §2). On a single device the hot GEMMs can
-route through the Pallas `dbb_gemm` kernel instead.
+on-chip decompress (DESIGN.md §2). On a single device
+(`ModelConfig.gemm_impl = "pallas"`) the hot GEMMs route through the Pallas
+kernels with the fused bias/activation/requant epilogue instead
+(DESIGN.md §7) — the MLP up-projections fuse their activation and the LM
+head goes through `sta_gemm`.
 
 `make_decode_step` / `make_prefill_step` produce the exact functions the
 multi-pod dry-run lowers for the ``decode_*`` / ``prefill_*`` / ``long_*``
@@ -28,11 +31,25 @@ __all__ = ["make_decode_step", "make_prefill_step", "ServeEngine",
            "greedy_from_hidden"]
 
 
-def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array) -> jax.Array:
+def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array,
+                       impl: str = "xla") -> jax.Array:
     """hidden [B, 1, d] → greedy next token [B]. The [B, V] logits are tiny
-    (one position); vocab stays sharded under GSPMD."""
-    logits = hidden[:, -1].astype(jnp.float32) @ w_head.astype(jnp.float32)
+    (one position); vocab stays sharded under GSPMD. impl="pallas" routes
+    the head GEMM through the fused STA kernel (single device only)."""
+    h = hidden[:, -1].astype(jnp.float32)
+    if impl == "pallas":
+        from repro.kernels.sta_gemm.ops import sta_gemm
+        logits = sta_gemm(h, w_head.astype(jnp.float32))
+    else:
+        logits = h @ w_head.astype(jnp.float32)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _gemm_impl(cfg: ModelConfig) -> str:
+    """Resolve the engine's GEMM route (single predicate shared with the
+    model layer: Pallas only without a live mesh)."""
+    from repro.models.common import use_fused_gemm
+    return "pallas" if use_fused_gemm(cfg) else "xla"
 
 
 def _decompress_non_layer(params, cfg: ModelConfig):
@@ -54,7 +71,8 @@ def make_decode_step(cfg: ModelConfig):
     def step(params, cache, tokens):
         p = _decompress_non_layer(params, cfg)
         hidden, new_cache = registry.decode_step(p, cfg, tokens, cache)
-        nxt = greedy_from_hidden(hidden, registry.lm_head_weight(p, cfg))
+        nxt = greedy_from_hidden(hidden, registry.lm_head_weight(p, cfg),
+                                 impl=_gemm_impl(cfg))
         return nxt, new_cache
 
     return step
@@ -72,7 +90,8 @@ def make_prefill_step(cfg: ModelConfig):
             prefix_embeds=batch.get("prefix_embeds"),
             cache=cache)
         nxt = greedy_from_hidden(hidden[:, -1:],
-                                 registry.lm_head_weight(p, cfg))
+                                 registry.lm_head_weight(p, cfg),
+                                 impl=_gemm_impl(cfg))
         return nxt, new_cache
 
     return step

@@ -59,6 +59,12 @@ def make_loss_fn(cfg: ModelConfig, nnz: Optional[int] = None,
     """loss_fn(params, batch) -> (loss, metrics). Applies the DBB STE
     (unless the caller projects once outside, §Perf iteration 9)."""
 
+    # training always differentiates the forward; the fused Pallas GEMMs
+    # (gemm_impl="pallas") have no VJP and would also drop the named remat
+    # saves — force the XLA route for the loss graph (DESIGN.md §7)
+    if cfg.gemm_impl != "xla":
+        cfg = cfg.replace(gemm_impl="xla")
+
     def loss_fn(params, batch):
         p_eff = (apply_dbb_to_tree(params, cfg.dbb, nnz=nnz)
                  if project_dbb else params)

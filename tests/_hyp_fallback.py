@@ -1,0 +1,56 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The CI image pins hypothesis (requirements.txt), but the minimal container
+only ships jax/numpy/pytest. Property tests still run here: `given` expands
+each strategy into a small deterministic sample set and calls the test over
+(a capped number of) combinations — strictly weaker than hypothesis's
+search, but the invariants are still exercised and collection never breaks.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+_MAX_EXAMPLES = 25
+
+
+class _IntRange:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def samples(self):
+        span = self.hi - self.lo
+        vals = {self.lo, self.hi, self.lo + span // 2,
+                self.lo + span // 3, self.lo + 2 * span // 3}
+        return sorted(v for v in vals if self.lo <= v <= self.hi)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _IntRange:
+        return _IntRange(min_value, max_value)
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args):          # args = (self,) for methods, () plain
+            combos = list(itertools.product(
+                *(s.samples() for s in strategies)))
+            stride = max(1, len(combos) // _MAX_EXAMPLES)
+            for combo in combos[::stride][:_MAX_EXAMPLES]:
+                fn(*args, *combo)
+        # NOT functools.wraps: pytest would introspect the wrapped
+        # signature and treat the strategy params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(*_a, **_k):             # decorator-compatible no-op
+    def deco(fn):
+        return fn
+    return deco

@@ -1,11 +1,19 @@
 """DBB format invariants: projection, pack/unpack, footprint, STE."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "fast", max_examples=25, deadline=None)
+    hypothesis.settings.load_profile("fast")
+except ModuleNotFoundError:      # bare container: deterministic fallback
+    from _hyp_fallback import given, st
 
 from repro.config import DbbConfig
 from repro.core.dbb import (DbbWeight, dbb_footprint_bytes, dbb_mask,
@@ -13,10 +21,6 @@ from repro.core.dbb import (DbbWeight, dbb_footprint_bytes, dbb_mask,
                             unpack_dbb, validate_dbb)
 from repro.core.sparsity import (apply_dbb_to_tree, dbb_schedule_nnz,
                                  ste_dbb, tree_sparsity_report)
-
-hypothesis.settings.register_profile(
-    "fast", max_examples=25, deadline=None)
-hypothesis.settings.load_profile("fast")
 
 
 def _rand(shape, seed=0):

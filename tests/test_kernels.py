@@ -1,5 +1,5 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
-shape/dtype sweeps per the brief."""
+shape/dtype sweeps per the brief and fused-epilogue parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +10,7 @@ from repro.kernels.dbb_gemm.ops import dbb_gemm, dbb_gemm_packed
 from repro.kernels.dbb_gemm.ref import (dbb_gemm_ref,
                                         dbb_gemm_ref_from_packed,
                                         decompress_ref)
+from repro.kernels.epilogue import ACTIVATIONS, Epilogue
 from repro.kernels.sta_gemm.ops import sta_gemm
 from repro.kernels.sta_gemm.ref import sta_gemm_ref
 
@@ -129,6 +130,8 @@ class TestDbbGemm:
                                    np.asarray(x @ w), rtol=1e-5, atol=1e-5)
 
     def test_per_channel_scale(self):
+        """The packed per-channel scale is fused into the kernel epilogue —
+        result must equal the post-hoc multiply it replaced."""
         w = _rand((128, 64), 10, jnp.float32)
         x = _rand((16, 128), 11, jnp.float32)
         scale = jnp.linspace(0.5, 2.0, 64)
@@ -137,3 +140,84 @@ class TestDbbGemm:
         want = (x @ dbb_project(w, 8, 4)) * scale[None, :]
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestFusedEpilogue:
+    """Fused bias/activation/requant in the final-K store vs references."""
+
+    @pytest.mark.parametrize("act", ACTIVATIONS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_sta_fused_matches_ref(self, act, dtype):
+        m, k, n = 100, 256, 72                       # ragged: padding path
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, dtype)
+        bias = _rand((n,), 2, jnp.float32)
+        scale = jnp.linspace(0.25, 1.5, n)
+        got = sta_gemm(x, w, bias, scale, act=act)
+        want = sta_gemm(x, w, bias, scale, act=act, use_kernel=False)
+        assert got.dtype == want.dtype
+        rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=rtol, atol=rtol)
+
+    @pytest.mark.parametrize("act", ACTIVATIONS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_dbb_fused_matches_ref(self, act, dtype):
+        m, k, n = 32, 256, 128
+        x = _rand((m, k), 3, dtype)
+        w = _rand((k, n), 4, jnp.float32)
+        p = pack_dbb(w, 8, 4)
+        vals = p.values.astype(dtype)
+        bias = _rand((n,), 5, jnp.float32)
+        scale = jnp.linspace(0.25, 1.5, n)
+        got = dbb_gemm(x, vals, p.bitmask, bias, scale, act=act,
+                       block=8, nnz=4)
+        want = dbb_gemm(x, vals, p.bitmask, bias, scale, act=act,
+                        block=8, nnz=4, use_kernel=False)
+        assert got.dtype == want.dtype
+        rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=rtol, atol=rtol)
+
+    def test_int8_requant_store(self):
+        """INT8 requantization: scale+clip applied in the store, result is
+        bit-exact vs the hand-computed round/clip."""
+        x = _rand((16, 128), 6, jnp.int8)
+        w = _rand((128, 128), 7, jnp.int8)
+        s = jnp.float32(2e-3)
+        got = sta_gemm(x, w, scale=s, act="relu", out_dtype=jnp.int8)
+        assert got.dtype == jnp.int8
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        want = jnp.clip(jnp.round(jnp.maximum(
+            acc.astype(jnp.float32) * s, 0)), -127, 127).astype(jnp.int8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_relu_on_int32_accumulator_is_exact(self):
+        """ReLU alone on the INT8→INT32 path must stay on the integer
+        datapath (no float round-trip)."""
+        x = jnp.full((8, 512), 127, jnp.int8)
+        w = jnp.full((512, 128), -127, jnp.int8)
+        y = sta_gemm(x, w, act="relu")
+        assert y.dtype == jnp.int32
+        assert int(np.asarray(y).max()) == 0
+        y2 = sta_gemm(x, -w, act="relu")
+        assert int(np.asarray(y2)[0, 0]) == 127 * 127 * 512
+
+    def test_bias_only_batched(self):
+        x = _rand((2, 4, 128), 8, jnp.float32)
+        w = _rand((128, 64), 9, jnp.float32)
+        bias = _rand((64,), 10, jnp.float32)
+        got = sta_gemm(x, w, bias)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(x @ w + bias[None, None, :]),
+            rtol=1e-4, atol=1e-4)
+
+    def test_epilogue_spec_validation(self):
+        with pytest.raises(ValueError):
+            Epilogue(act="tanh")
+        assert Epilogue().is_identity
+        assert Epilogue(act="silu", has_bias=True).tag() == "silu+bias"

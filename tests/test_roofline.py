@@ -14,6 +14,12 @@ def _compile(fn, *sds):
     return jax.jit(fn).lower(*sds).compile()
 
 
+def _cost(compiled) -> dict:
+    """compiled.cost_analysis(): dict on current jax, [dict] on 0.4.x."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 SDS = jax.ShapeDtypeStruct
 
 
@@ -24,7 +30,7 @@ def test_matches_cost_analysis_scan_free():
     c = _compile(f, SDS((64, 128), jnp.float32), SDS((128, 256), jnp.float32),
                  SDS((256, 64), jnp.float32))
     st = analyze_hlo_text(c.as_text())
-    ca = c.cost_analysis()
+    ca = _cost(c)
     assert st.flops == pytest.approx(ca["flops"], rel=0.05)
 
 
@@ -82,7 +88,7 @@ def test_bytes_match_cost_analysis_scan_free():
 
     c = _compile(f, SDS((128, 256), jnp.float32), SDS((256, 128), jnp.float32))
     st = analyze_hlo_text(c.as_text())
-    ca = c.cost_analysis()
+    ca = _cost(c)
     assert st.hbm_bytes == pytest.approx(ca["bytes accessed"], rel=0.1)
 
 

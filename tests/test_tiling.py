@@ -1,0 +1,140 @@
+"""Tiling layer: block-shape heuristic, MXU utilization, and the measured
+autotuner (candidate generation, cache behavior, wiring into the ops)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import StaConfig
+from repro.core.sta import (LANE, MXU_DIM, SUBLANE, VMEM_BYTES,
+                            choose_block_shape, mxu_utilization)
+from repro.kernels import autotune
+
+
+class TestChooseBlockShape:
+    def test_defaults_aligned(self):
+        bm, bk, bn = choose_block_shape(1024, 4096, 4096, StaConfig())
+        assert bm % SUBLANE == 0 and bk % LANE == 0 and bn % LANE == 0
+        assert (bm, bk, bn) == (128, 128, 128)
+
+    def test_small_m_shrinks_bm(self):
+        bm, _, _ = choose_block_shape(1, 4096, 4096, StaConfig())
+        assert bm == SUBLANE                  # decode row: one sublane
+
+    def test_small_problem_clamps_every_dim(self):
+        bm, bk, bn = choose_block_shape(4, 64, 32, StaConfig())
+        assert bm == SUBLANE and bk == LANE and bn == LANE
+
+    def test_vmem_budget_shrinks_k_first(self):
+        """Oversized blocks shrink K before M (K streams, M is batch)."""
+        cfg = StaConfig(block_m=1024, block_k=65536, block_n=1024)
+        bm, bk, bn = choose_block_shape(1024, 65536, 1024, cfg, itemsize=4)
+        footprint = (bm * bk + bk * bn) * 4 + bm * bn * 4
+        assert footprint <= VMEM_BYTES // 2
+        assert bk < 65536                     # K took the cut
+        assert bn == 1024                     # N kept lane-aligned width
+
+    def test_respects_itemsize(self):
+        cfg = StaConfig(block_m=2048, block_k=8192, block_n=2048)
+        f32 = choose_block_shape(2048, 8192, 2048, cfg, itemsize=4)
+        i8 = choose_block_shape(2048, 8192, 2048, cfg, itemsize=1)
+        def fp(s, i):
+            return (s[0] * s[1] + s[1] * s[2]) * i + s[0] * s[2] * 4
+        assert fp(f32, 4) <= VMEM_BYTES // 2
+        assert fp(i8, 1) <= VMEM_BYTES // 2
+        # int8 affords at-least-as-big tiles in every dim
+        assert all(a >= b for a, b in zip(i8, f32))
+
+
+class TestMxuUtilization:
+    def test_aligned_is_one(self):
+        assert mxu_utilization(256, 512, 128) == 1.0
+
+    def test_padding_waste(self):
+        # 1 row in a 128-row MXU pass: 1/128 utilization
+        assert mxu_utilization(1, 128, 128) == pytest.approx(1 / 128)
+        got = mxu_utilization(100, 200, 72)
+        want = (100 * 200 * 72) / (128 * 256 * 128)
+        assert got == pytest.approx(want)
+
+    def test_monotone_in_alignment(self):
+        assert mxu_utilization(127, 128, 128) < mxu_utilization(128, 128, 128)
+
+
+class TestAutotune:
+    def test_candidates_constraint_filtered(self):
+        cands = autotune.candidate_block_shapes(64, 512, 256, itemsize=4)
+        assert cands, "no candidates"
+        base = choose_block_shape(64, 512, 256, StaConfig(), itemsize=4)
+        assert cands[0] == base               # heuristic prior leads
+        for bm, bk, bn in cands:
+            assert bm % SUBLANE == 0 and bn % LANE == 0 and bk % LANE == 0
+            assert (bm * bk + bk * bn) * 4 + bm * bn * 4 <= VMEM_BYTES // 2
+
+    def test_align_k_honored(self):
+        cands = autotune.candidate_block_shapes(64, 768, 256, itemsize=1,
+                                                align_k=384)
+        assert all(bk % 384 == 0 for _, bk, _ in cands)
+
+    def test_measures_once_then_caches(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "autotune.json")
+        autotune.clear_memory_cache()
+        calls = []
+
+        def make_fn(shape):
+            def fn():
+                calls.append(shape)
+                return jnp.zeros(())
+            return fn
+
+        pick = autotune.autotune_block_shape(
+            "test_kernel", 64, 256, 128, jnp.float32, make_fn,
+            candidates=[(8, 128, 128), (64, 128, 128)], repeats=1, path=path)
+        assert pick in [(8, 128, 128), (64, 128, 128)]
+        assert calls, "no measurements on a cold cache"
+        assert os.path.exists(path)
+        table = json.load(open(path))
+        assert list(table.values()) == [list(pick)]
+
+        # warm cache (same process): no new measurements
+        n_before = len(calls)
+        pick2 = autotune.autotune_block_shape(
+            "test_kernel", 64, 256, 128, jnp.float32, make_fn,
+            candidates=[(8, 128, 128), (64, 128, 128)], repeats=1, path=path)
+        assert pick2 == pick and len(calls) == n_before
+
+        # cold process (memory cleared): served from disk, still no timing
+        autotune.clear_memory_cache()
+        pick3 = autotune.autotune_block_shape(
+            "test_kernel", 64, 256, 128, jnp.float32, make_fn,
+            candidates=[(8, 128, 128), (64, 128, 128)], repeats=1, path=path)
+        assert pick3 == pick and len(calls) == n_before
+
+    def test_distinct_keys_per_epilogue_and_dtype(self, tmp_path):
+        path = str(tmp_path / "autotune.json")
+        autotune.clear_memory_cache()
+        mk = lambda shape: (lambda: jnp.zeros(()))
+        for tag, dt in (("none", jnp.float32), ("silu+bias", jnp.float32),
+                        ("none", jnp.int8)):
+            autotune.autotune_block_shape(
+                "k", 8, 128, 128, dt, mk, epilogue_tag=tag,
+                candidates=[(8, 128, 128)], repeats=1, path=path)
+        assert len(json.load(open(path))) == 3
+
+    def test_end_to_end_through_sta_gemm(self, tmp_path, monkeypatch):
+        """REPRO_AUTOTUNE=1 routes sta_gemm through the tuner and the result
+        still matches XLA."""
+        path = str(tmp_path / "autotune.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+        autotune.clear_memory_cache()
+        from repro.kernels.sta_gemm.ops import sta_gemm
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 256), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+        y = sta_gemm(x, w)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+        assert os.path.exists(path) and json.load(open(path))
