@@ -1,0 +1,138 @@
+"""A/B harness: implicit-GEMM conv (fused im2col in-kernel, DESIGN.md §8)
+vs the materialized-im2col lowering it replaces.
+
+For each conv shape the *materialized* variant runs exactly the pre-PR-2
+`models/cnn.py` path — `im2col` writes the [B·Ho·Wo, kh·kw·C] patch
+matrix, then `sta_gemm` consumes it with the fused epilogue — and the
+*implicit* variant runs `conv_gemm`, whose K loop gathers the patch tiles
+from the NHWC block in VMEM, so the patch matrix never exists in HBM.
+
+Reported per shape: best-of-N wall time for both variants, the speedup,
+and the peak-activation-bytes model: the materialized path's live set is
+input + patch matrix + output, the implicit path's is padded input +
+output — the difference is the kh·kw× im2col blowup the paper's mobile
+setting cannot afford. Numerical parity is asserted strictly; on the CPU
+interpret backend wall times are correctness-grade, so a slower-implicit
+outcome prints a WARNING rather than failing.
+
+Run:  PYTHONPATH=src python -m benchmarks.conv_gemm [--fast]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _best_of(fn, n: int = 5) -> float:
+    jax.block_until_ready(fn())            # compile + warmup
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# (name, B, H, W, Cin, Cout, k, stride) — mobile-CNN inference shapes
+SHAPES = [
+    ("cifar_conv2", 8, 32, 32, 64, 64, 3, 1),
+    ("blk2_conv2",  2, 28, 28, 128, 128, 3, 1),
+    ("stride2",     4, 32, 32, 32, 64, 3, 2),
+]
+FAST_SHAPES = [
+    ("small_3x3",   2, 16, 16, 32, 32, 3, 1),
+    ("small_s2",    2, 16, 16, 16, 32, 3, 2),
+]
+
+
+def bench_shape(name: str, b: int, h: int, w: int, c: int, n: int, k: int,
+                stride: int, repeats: int = 5) -> dict:
+    from repro.kernels.conv_gemm.ops import conv_gemm, out_spatial
+    from repro.kernels.conv_gemm.ref import im2col
+    from repro.kernels.sta_gemm.ops import sta_gemm
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, h, w, c), jnp.float32)
+    wm = jax.random.normal(jax.random.fold_in(key, 1), (k * k * c, n),
+                           jnp.float32) * 0.1
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (n,), jnp.float32)
+
+    implicit = jax.jit(
+        lambda x: conv_gemm(x, wm, bias, kh=k, kw=k, stride=stride,
+                            act="relu"))
+
+    @jax.jit
+    def materialized(x):
+        cols = im2col(x, k, k, stride)          # the HBM patch matrix
+        bb, ho, wo, kd = cols.shape
+        y = sta_gemm(cols.reshape(-1, kd), wm, bias, act="relu")
+        return y.reshape(bb, ho, wo, n)
+
+    y_imp = implicit(x)
+    y_mat = materialized(x)
+    np.testing.assert_allclose(np.asarray(y_imp), np.asarray(y_mat),
+                               rtol=1e-4, atol=1e-4)
+
+    t_imp = _best_of(lambda: implicit(x), repeats)
+    t_mat = _best_of(lambda: materialized(x), repeats)
+
+    ho, _, _ = out_spatial(h, k, stride, "SAME")
+    wo, _, _ = out_spatial(w, k, stride, "SAME")
+    itemsize = 4
+    in_b = b * h * w * c * itemsize
+    pad_in_b = b * ((ho - 1) * stride + k) * ((wo - 1) * stride + k) \
+        * c * itemsize
+    cols_b = b * ho * wo * k * k * c * itemsize
+    out_b = b * ho * wo * n * itemsize
+    return {
+        "name": name,
+        "shape": {"B": b, "H": h, "W": w, "Cin": c, "Cout": n, "k": k,
+                  "stride": stride},
+        "implicit_s": t_imp,
+        "materialized_s": t_mat,
+        "speedup": t_mat / t_imp,
+        "peak_act_bytes_implicit": pad_in_b + out_b,
+        "peak_act_bytes_materialized": in_b + cols_b + out_b,
+        "act_saving": 1 - (pad_in_b + out_b) / (in_b + cols_b + out_b),
+        "im2col_bytes_avoided": cols_b,
+    }
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    shapes = FAST_SHAPES if fast else SHAPES
+    rows = [bench_shape(*s) for s in shapes]
+    if not quiet:
+        print(f"{'layer':>12s} {'implicit':>10s} {'im2col+GEMM':>12s} "
+              f"{'speedup':>8s} {'peak act (imp/mat)':>22s} {'saving':>7s}")
+        for r in rows:
+            print(f"{r['name']:>12s} {r['implicit_s'] * 1e3:9.2f}ms "
+                  f"{r['materialized_s'] * 1e3:11.2f}ms "
+                  f"{r['speedup']:7.2f}x "
+                  f"{r['peak_act_bytes_implicit'] / 2**20:9.2f}MB/"
+                  f"{r['peak_act_bytes_materialized'] / 2**20:6.2f}MB "
+                  f"{r['act_saving']:6.1%}")
+        worse = [r for r in rows if r["speedup"] < 1.0]
+        if worse:
+            print(f"WARNING: implicit slower than materialized on "
+                  f"{len(worse)} shape(s) — interpret-mode noise or a "
+                  "regression")
+        else:
+            print("implicit-GEMM beats the materialized-im2col path on all "
+                  "benchmark shapes (patch matrix never hits HBM)")
+    return {"rows": rows}
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,8 +6,14 @@ conv1 dense). We reproduce both halves:
   * the analytical-model efficiency per layer (same methodology as Table II,
     with the layer's measured activation sparsity), and
   * the TPU-side counterpart: dense vs DBB GEMM through the Pallas kernels
-    on the exact layer shapes, reporting HBM weight-traffic reduction and
-    MXU utilization (the quantities the TPU adaptation actually improves).
+    on the exact layer shapes, reporting HBM weight-traffic reduction, MXU
+    utilization, and — for the conv layers — the activation-HBM blowup the
+    *implicit-GEMM* conv route (kernels.conv_gemm, DESIGN.md §8) avoids by
+    never materializing the im2col patch matrix.
+
+The numerical verify step runs the implicit-GEMM conv kernel (dense and
+DBB-compressed weight stream) against the explicit im2col + GEMM lowering
+on a real 3×3 layer geometry.
 """
 from __future__ import annotations
 
@@ -20,28 +26,41 @@ import numpy as np
 from repro.core.area_model import DesignPoint, evaluate_design
 from repro.core.dbb import dbb_footprint_bytes, dense_footprint_bytes, pack_dbb
 from repro.core.sta import mxu_utilization
-from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
-from repro.kernels.sta_gemm.ops import sta_gemm
+from repro.kernels.conv_gemm.ops import conv_gemm, conv_gemm_packed
+from repro.kernels.conv_gemm.ref import im2col
 
 # ResNet50_v1 representative layers (paper Fig. 4), im2col GEMM shapes:
-# (name, M = H*W spatial, K = kh*kw*Cin, N = Cout, act_sparsity)
+# (name, M = H*W spatial, K = kh*kw*Cin, N = Cout, act_sparsity) plus the
+# conv geometry (H, W, Cin, kh, stride) the GEMM was lowered from — None
+# for the fc layer, which is a plain GEMM.
 RESNET50_LAYERS = [
-    ("conv1",            12544, 147,  64, 0.00),   # stays dense (paper)
-    ("blk1/unit1/conv2",  3136, 576,  64, 0.39),
-    ("blk1/unit3/conv3",  3136, 64 * 9, 256, 0.50),
-    ("blk2/unit2/conv2",   784, 1152, 128, 0.55),
-    ("blk3/unit4/conv2",   196, 2304, 256, 0.65),
-    ("blk4/unit1/conv2",    49, 4608, 512, 0.72),
-    ("fc1000",               1, 2048, 1000, 0.75),
+    ("conv1",            12544, 147,  64, 0.00, (224, 224, 3, 7, 2)),
+    ("blk1/unit1/conv2",  3136, 576,  64, 0.39, (56, 56, 64, 3, 1)),
+    ("blk1/unit3/conv3",  3136, 64 * 9, 256, 0.50, (56, 56, 64, 3, 1)),
+    ("blk2/unit2/conv2",   784, 1152, 128, 0.55, (28, 28, 128, 3, 1)),
+    ("blk3/unit4/conv2",   196, 2304, 256, 0.65, (14, 14, 256, 3, 1)),
+    ("blk4/unit1/conv2",    49, 4608, 512, 0.72, (7, 7, 512, 3, 1)),
+    ("fc1000",               1, 2048, 1000, 0.75, None),
 ]
 
 _B, _NNZ = 8, 3        # 1x8 DBB at 62.5% sparse weights (paper Fig. 4)
 
 
+def _conv_act_bytes(geom, itemsize: int = 1):
+    """(im2col_bytes, implicit_bytes): the patch matrix the explicit
+    lowering writes to HBM vs the padded input the implicit kernel reads
+    in place (per image, INT8 serving bytes)."""
+    h, w, c, k, s = geom
+    ho, wo = -(-h // s), -(-w // s)
+    im2col_b = ho * wo * k * k * c * itemsize
+    implicit_b = ((ho - 1) * s + k) * ((wo - 1) * s + k) * c * itemsize
+    return im2col_b, implicit_b
+
+
 def run(quiet: bool = False, verify: bool = True) -> dict:
     base = evaluate_design(DesignPoint("SA 1x1x1", "sa"), act_sparsity=0.5)
     rows = []
-    for name, m, k, n, act_sp in RESNET50_LAYERS:
+    for name, m, k, n, act_sp, geom in RESNET50_LAYERS:
         dense_here = name == "conv1"
         d = (DesignPoint("STA 4x8x4", "sta", a=4, b=8, c=4) if dense_here
              else DesignPoint("STA-DBB 4x8x4", "sta_dbb", a=4, b=8, c=4,
@@ -62,28 +81,44 @@ def run(quiet: bool = False, verify: bool = True) -> dict:
                "weight_bytes_dbb": w_dbb,
                "hbm_weight_saving": round(1 - w_dbb / w_dense, 4),
                "mxu_util": round(mxu_utilization(m, k, n), 3)}
+        if geom is not None:
+            i2c_b, impl_b = _conv_act_bytes(geom)
+            row["act_bytes_im2col"] = i2c_b
+            row["act_bytes_implicit"] = impl_b
+            row["im2col_blowup"] = round(i2c_b / impl_b, 2)
         rows.append(row)
 
-    if verify:   # numerical check of the kernel pair on one real layer shape
-        name, m, k, n, _ = RESNET50_LAYERS[2]
-        kp = ((k + _B - 1) // _B) * _B
+    if verify:
+        # implicit-GEMM conv kernel vs the explicit im2col + GEMM lowering
+        # on a blk2-style geometry (28×28×64 → 128, 3×3), dense and DBB
+        h = w = 28
+        cin, cout, k = 64, 128, 3
         key = jax.random.PRNGKey(0)
-        x = jax.random.normal(key, (256, kp), jnp.float32)
-        w = jax.random.normal(jax.random.fold_in(key, 1), (kp, n), jnp.float32)
-        p = pack_dbb(w, _B, _NNZ)
-        y_dense = sta_gemm(x, w)
-        y_dbb = dbb_gemm_packed(x, p)
+        x = jax.random.normal(key, (1, h, w, cin), jnp.float32)
+        wm = jax.random.normal(jax.random.fold_in(key, 1),
+                               (k * k * cin, cout), jnp.float32)
+        cols = im2col(x, k, k)
+        ref = (cols.reshape(-1, k * k * cin) @ wm).reshape(1, h, w, cout)
+        got = conv_gemm(x, wm, kh=k, kw=k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
         from repro.core.dbb import dbb_project
-        ref = x @ dbb_project(w, _B, _NNZ)
-        np.testing.assert_allclose(np.asarray(y_dbb), np.asarray(ref),
+        p = pack_dbb(wm, _B, _NNZ)
+        got_dbb = conv_gemm_packed(x, p, kh=k, kw=k)
+        ref_dbb = (cols.reshape(-1, k * k * cin)
+                   @ dbb_project(wm, _B, _NNZ)).reshape(1, h, w, cout)
+        np.testing.assert_allclose(np.asarray(got_dbb), np.asarray(ref_dbb),
                                    rtol=1e-4, atol=1e-4)
 
     if not quiet:
         for r in rows:
+            blow = (f" im2col_blowup {r['im2col_blowup']:5.2f}x"
+                    if "im2col_blowup" in r else "")
             print(f"{r['layer']:20s} M{r['M']:6d} K{r['K']:5d} N{r['N']:5d} "
                   f"area_eff {r['area_eff']:5.2f}x power_eff "
                   f"{r['power_eff']:5.2f}x  hbm_w_saving "
-                  f"{r['hbm_weight_saving']:6.1%} mxu {r['mxu_util']:.2f}")
+                  f"{r['hbm_weight_saving']:6.1%} mxu {r['mxu_util']:.2f}"
+                  f"{blow}")
     return {"layers": rows}
 
 

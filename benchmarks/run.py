@@ -1,6 +1,12 @@
 """Benchmark aggregator: one section per paper artifact.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--out DIR]
+
+Every section returns a JSON-serializable dict; the kernel-perf sections
+(implicit-GEMM conv A/B + fused-epilogue A/B) are written to
+``BENCH_conv.json`` so the perf trajectory is machine-readable run-over-run
+(CI runs ``--smoke``, which executes only those two sections on reduced
+shapes and still emits the file).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -9,46 +15,72 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
+
+# sections whose rows land in BENCH_conv.json (the perf trajectory file)
+_PERF_SECTIONS = ("conv_gemm", "fused_epilogue")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel-perf sections only, reduced shapes "
+                         "(CI mode); still writes BENCH_conv.json")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_conv.json")
     args = ap.parse_args(argv)
+    fast = args.fast or args.smoke
 
-    from benchmarks import (fig4_layers, fig5_sweep, fused_epilogue,
-                            roofline_bench, table1_dbb_accuracy,
-                            table2_efficiency)
+    from benchmarks import (conv_gemm, fig4_layers, fig5_sweep,
+                            fused_epilogue, roofline_bench,
+                            table1_dbb_accuracy, table2_efficiency)
 
     sections = [
-        ("table2_efficiency (paper Table II)",
-         lambda: table2_efficiency.run()),
-        ("fig5_sweep (paper Fig. 5)", lambda: fig5_sweep.run()),
-        ("fig4_layers (paper Fig. 4)", lambda: fig4_layers.run()),
+        ("conv_gemm (implicit vs materialized im2col)",
+         "conv_gemm", lambda: conv_gemm.run(fast=fast)),
         ("fused_epilogue (STA/DBB fused epilogue A/B)",
-         lambda: fused_epilogue.run(fast=args.fast)),
-        ("table1_dbb_accuracy (paper Table I)",
-         lambda: table1_dbb_accuracy.run(steps=30 if args.fast else 60)),
-        ("roofline (dry-run artifacts)", lambda: roofline_bench.run()),
+         "fused_epilogue", lambda: fused_epilogue.run(fast=fast)),
+        ("table2_efficiency (paper Table II)",
+         "table2_efficiency", lambda: table2_efficiency.run()),
+        ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
+         lambda: fig5_sweep.run()),
+        ("fig4_layers (paper Fig. 4)", "fig4_layers",
+         lambda: fig4_layers.run()),
+        ("table1_dbb_accuracy (paper Table I)", "table1_dbb_accuracy",
+         lambda: table1_dbb_accuracy.run(steps=30 if fast else 60)),
+        ("roofline (dry-run artifacts)", "roofline",
+         lambda: roofline_bench.run()),
     ]
-    failures = []
-    for name, fn in sections:
+    if args.smoke:
+        sections = [s for s in sections if s[1] in _PERF_SECTIONS]
+
+    failures, results = [], {}
+    for name, key, fn in sections:
         if any(s in name for s in args.skip):
             print(f"\n=== {name}: SKIPPED ===")
             continue
         print(f"\n=== {name} ===")
         t0 = time.time()
         try:
-            fn()
+            results[key] = fn()
             print(f"--- ok in {time.time() - t0:.1f}s")
         except Exception:
             failures.append(name)
             traceback.print_exc()
+
+    perf = {k: results[k] for k in _PERF_SECTIONS if k in results}
+    if perf:
+        path = os.path.join(args.out, "BENCH_conv.json")
+        with open(path, "w") as f:
+            json.dump(perf, f, indent=1, sort_keys=True)
+        print(f"\nwrote {path}")
+
     if failures:
         print(f"\nFAILED sections: {failures}")
         return 1

@@ -2,8 +2,11 @@
 
   1. build a DBB-sparse weight and run the two Pallas GEMMs (STA dense /
      STA-DBB compressed) against their oracles;
-  2. train the paper's 5-layer ConvNet analogue with annealed DBB pruning;
-  3. pack the trained weights to the DBB serving format (the STA-DBB
+  2. run a conv layer through the *implicit-GEMM* kernel — the im2col
+     patch matrix is gathered in-kernel in VMEM, never materialized in
+     HBM (DESIGN.md §8) — and check it against the explicit lowering;
+  3. train the paper's 5-layer ConvNet analogue with annealed DBB pruning;
+  4. pack the trained weights to the DBB serving format (the STA-DBB
      memory layout) and report the footprint saving.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -38,7 +41,27 @@ np.testing.assert_allclose(np.asarray(y_sparse),
                            rtol=1e-4, atol=1e-4)
 print("dbb_gemm matches project-then-matmul oracle")
 
-print("\n== 2. DBB-sparse training (paper §V-A) ==")
+print("\n== 2. implicit-GEMM conv (fused im2col in-kernel) ==")
+from repro.kernels.conv_gemm.ops import conv_gemm, conv_gemm_packed
+from repro.kernels.conv_gemm.ref import im2col
+
+xc = jax.random.normal(jax.random.fold_in(key, 2), (2, 16, 16, 8))
+wc = jax.random.normal(jax.random.fold_in(key, 3), (3 * 3 * 8, 32)) * 0.1
+y_conv = conv_gemm(xc, wc, kh=3, kw=3)          # patch gather in VMEM
+cols = im2col(xc, 3, 3)                          # the tensor the kernel avoids
+y_ref = (cols.reshape(-1, 72) @ wc).reshape(2, 16, 16, 32)
+np.testing.assert_allclose(np.asarray(y_conv), np.asarray(y_ref),
+                           rtol=1e-4, atol=1e-4)
+pc = pack_dbb(wc, block=8, nnz=4)
+y_conv_dbb = conv_gemm_packed(xc, pc, kh=3, kw=3)   # compressed weights too
+np.testing.assert_allclose(
+    np.asarray(y_conv_dbb),
+    np.asarray((cols.reshape(-1, 72) @ dbb_project(wc, 8, 4))
+               .reshape(2, 16, 16, 32)), rtol=1e-4, atol=1e-4)
+print(f"implicit-GEMM conv matches im2col+GEMM; skipped materializing "
+      f"{cols.size * 4} B of patches ({cols.size // xc.size}x the input)")
+
+print("\n== 3. DBB-sparse training (paper §V-A) ==")
 cfg = get_config("convnet-dbb", smoke=True)
 rc = RunConfig(model=cfg, train=TrainConfig(
     steps=40, learning_rate=3e-3, log_every=10,
@@ -47,7 +70,7 @@ state, hist = train_loop(rc, ShapeSpec("t", 16, 32, "train"))
 print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
       f"final NNZ bound {hist[-1]['nnz']}/8")
 
-print("\n== 3. pack to serving format ==")
+print("\n== 4. pack to serving format ==")
 dense_bytes = tree_footprint_bytes(state.params)
 proj = apply_dbb_to_tree(state.params, cfg.dbb, straight_through=False)
 packed = pack_tree(proj, cfg.dbb)

@@ -2,10 +2,13 @@
 
 sta_gemm:  dense Tensor-PE-tiled GEMM (output-stationary VMEM accumulation).
 dbb_gemm:  DBB structured-sparse GEMM with on-chip bitmask decompression.
+conv_gemm: implicit-GEMM convolution — the im2col patch tile is gathered
+           in-kernel from the NHWC activation block in VMEM, never
+           materialized in HBM (DESIGN.md §8); dense and DBB variants.
 epilogue:  fused bias/activation/requant applied in the final-K store of
-           both kernels (DESIGN.md §7).
-autotune:  measured (bm, bk, bn) block-shape selection with a persistent
-           on-disk cache (DESIGN.md §7).
+           all kernels (DESIGN.md §7).
+autotune:  measured block/tile-shape selection with a persistent on-disk
+           cache (DESIGN.md §7) — conv shapes key under their own op tag.
 """
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 

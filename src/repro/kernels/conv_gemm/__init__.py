@@ -1,0 +1,4 @@
+from repro.kernels.conv_gemm.ops import (conv_gemm, conv_gemm_dbb,
+                                         conv_gemm_packed)
+
+__all__ = ["conv_gemm", "conv_gemm_dbb", "conv_gemm_packed"]

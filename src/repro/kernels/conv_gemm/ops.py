@@ -1,0 +1,373 @@
+"""Jit'd public wrappers around the implicit-GEMM conv kernels.
+
+`conv_gemm` consumes a dense weight matrix ``[kh·kw·C, N]`` (the exact
+layout the explicit im2col path uses), `conv_gemm_dbb` the raw DBB stream
+(values, bitmask), and `conv_gemm_packed` a `core.dbb.DbbWeight` with its
+per-out-channel quant scale folded into the fused epilogue — mirroring
+`sta_gemm` / `dbb_gemm` / `dbb_gemm_packed` one-for-one.
+
+The wrappers own everything the kernel contract excludes: SAME/VALID pad
+arithmetic (XLA semantics: lo = total//2), bottom-row padding so the
+output-row count divides the row tile, N padding to the lane grid,
+f32 coercion of the epilogue operands, and the oracle fallback
+(``use_kernel=False`` → `conv_gemm_ref`, the explicit im2col + GEMM path).
+
+Tile selection follows the GEMM wrappers' split: the public functions are
+*plain* (they resolve (th, bn) eagerly — the measured autotuner needs
+concrete operands) and dispatch to an inner jit'd impl with the tiles as
+static args. The autotuner memoizes under its own op tag
+(``conv_gemm`` / ``conv_gemm_dbb_b{B}k{k}``) keyed by the implied GEMM
+shape (M = B·Ho·Wo, K = kh·kw·C, N) plus the conv geometry in the
+epilogue tag, so conv entries never collide with plain GEMM entries.
+
+VMEM guard: the kernel keeps one whole padded image resident per grid
+step, which is the right trade for mobile-CNN activations (≤ a few MiB)
+but not for arbitrary inputs — images whose block footprint exceeds the
+VMEM budget silently take the oracle path instead (numerically identical,
+just materialized).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dbb import DbbWeight
+from repro.core.sta import VMEM_BYTES
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.conv_gemm.kernel import (conv_gemm_dbb_pallas,
+                                            conv_gemm_pallas)
+from repro.kernels.conv_gemm.ref import conv_gemm_dbb_ref, conv_gemm_ref
+from repro.kernels.epilogue import Epilogue, as_row
+
+__all__ = ["conv_gemm", "conv_gemm_dbb", "conv_gemm_packed", "out_spatial"]
+
+
+def out_spatial(size: int, k: int, stride: int, padding: str
+                ) -> Tuple[int, int, int]:
+    """(out, pad_lo, pad_hi) for one spatial dim — XLA SAME/VALID rules."""
+    if padding == "VALID":
+        return max(0, (size - k) // stride + 1), 0, 0
+    if padding != "SAME":
+        raise ValueError(f"padding={padding!r} not in ('SAME', 'VALID')")
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return out, total // 2, total - total // 2
+
+
+def _vmem_fits(hp: int, wp: int, c: int, kw: int, th: int, wo: int, bn: int,
+               itemsize: int, dbb: bool = False) -> bool:
+    """Image block + one weight K tile (+ its decompressed copy for the
+    DBB variant) + accumulator + output tile."""
+    w_tile = kw * c * bn * itemsize
+    foot = (hp * wp * c * itemsize            # resident image
+            + w_tile                          # weight K tile [kw·C, bn]
+            + (w_tile if dbb else 0)          # in-VMEM decompressed dense
+            + th * wo * bn * 4                # accumulator scratch
+            + th * wo * bn * 4)               # output tile
+    return foot <= VMEM_BYTES // 2
+
+
+def _default_tiles(ho: int, wo: int) -> Tuple[int, int]:
+    """th so the M tile th·Wo lands near 128 rows; bn = one lane tile."""
+    th = max(1, min(ho, -(-128 // max(wo, 1))))
+    return th, 128
+
+
+def _pad_cols(a: Optional[jax.Array], extra: int) -> Optional[jax.Array]:
+    """Zero-pad the last dim of a 2-D operand (weights / bias / scale /
+    bitmask share the N-padding treatment)."""
+    if a is None or extra == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, extra)))
+
+
+def _synth(shape, dtype, rng) -> jax.Array:
+    """Synthetic autotune operand matching the caller's dtype regime."""
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.asarray(rng.integers(-127, 128, shape), jnp.int8)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _pad_input(x: jax.Array, kh: int, kw: int, stride: int, padding: str,
+               th: int) -> Tuple[jax.Array, int, int, int]:
+    """Spatially pad/crop x to the kernel contract. Returns
+    (xp [B, Hp, Wp, C], ho, wo, hot) with Hp = (hot-1)·s + kh and
+    Wp = (wo-1)·s + kw; rows past ho are zero-padding (sliced off after)."""
+    b, h, w, c = x.shape
+    ho, pt, pb = out_spatial(h, kh, stride, padding)
+    wo, pl_, pr = out_spatial(w, kw, stride, padding)
+    hot = round_up(max(ho, 1), th)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    # crop VALID leftovers, then pad the bottom out to the row-tile grid
+    xp = xp[:, :(ho - 1) * stride + kh, :(wo - 1) * stride + kw, :]
+    extra = (hot - 1) * stride + kh - xp.shape[1]
+    if extra > 0:
+        xp = jnp.pad(xp, ((0, 0), (0, extra), (0, 0), (0, 0)))
+    return xp, ho, wo, hot
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "act", "th", "bn",
+                     "out_dtype", "interpret", "use_kernel"))
+def _conv_gemm_impl(x, w, bias, scale, *, kh, kw, stride, padding, act, th,
+                    bn, out_dtype, interpret, use_kernel):
+    epilogue = Epilogue(act=act, has_bias=bias is not None,
+                        has_scale=scale is not None)
+    n = w.shape[1]
+    bias_r = as_row(bias, n) if bias is not None else None
+    scale_r = as_row(scale, n) if scale is not None else None
+
+    if not use_kernel:
+        return conv_gemm_ref(x, w, kh=kh, kw=kw, stride=stride,
+                             padding=padding, epilogue=epilogue, bias=bias_r,
+                             scale=scale_r, out_dtype=out_dtype)
+
+    xp, ho, wo, hot = _pad_input(x, kh, kw, stride, padding, th)
+    np_ = round_up(n, bn)
+    wp = _pad_cols(w, np_ - n)
+    bias_r = _pad_cols(bias_r, np_ - n)
+    scale_r = _pad_cols(scale_r, np_ - n)
+    y = conv_gemm_pallas(xp, wp, bias_r, scale_r, kh=kh, kw=kw,
+                         stride=stride, th=th, block_n=bn, epilogue=epilogue,
+                         out_dtype=out_dtype, interpret=interpret)
+    return y[:, :ho, :, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "act", "block", "nnz",
+                     "th", "bn", "out_dtype", "interpret", "use_kernel"))
+def _conv_gemm_dbb_impl(x, values, bitmask, bias, scale, *, kh, kw, stride,
+                        padding, act, block, nnz, th, bn, out_dtype,
+                        interpret, use_kernel):
+    epilogue = Epilogue(act=act, has_bias=bias is not None,
+                        has_scale=scale is not None)
+    n = values.shape[1]
+    mask_i32 = bitmask.astype(jnp.int32)
+    bias_r = as_row(bias, n) if bias is not None else None
+    scale_r = as_row(scale, n) if scale is not None else None
+
+    if not use_kernel:
+        return conv_gemm_dbb_ref(x, values, mask_i32, kh=kh, kw=kw,
+                                 stride=stride, padding=padding, block=block,
+                                 nnz=nnz, epilogue=epilogue, bias=bias_r,
+                                 scale=scale_r, out_dtype=out_dtype)
+
+    xp, ho, wo, hot = _pad_input(x, kh, kw, stride, padding, th)
+    np_ = round_up(n, bn)
+    vp = _pad_cols(values, np_ - n)
+    mp = _pad_cols(mask_i32, np_ - n)
+    bias_r = _pad_cols(bias_r, np_ - n)
+    scale_r = _pad_cols(scale_r, np_ - n)
+    y = conv_gemm_dbb_pallas(xp, vp, mp, bias_r, scale_r, kh=kh, kw=kw,
+                             stride=stride, th=th, block=block, nnz=nnz,
+                             block_n=bn, epilogue=epilogue,
+                             out_dtype=out_dtype, interpret=interpret)
+    return y[:, :ho, :, :n]
+
+
+def _resolve_tiles(x, n: int, kh: int, kw: int, stride: int, padding: str,
+                   epilogue: Epilogue, out_dtype, interpret: bool,
+                   rows_per_tile: int, block_n: int, autotune,
+                   kernel_tag: str, make_fn, dbb: bool = False
+                   ) -> Tuple[int, int, bool]:
+    """(th, bn, kernel_ok): measured or heuristic tiles + the VMEM guard.
+
+    make_fn(shape=(th, ·, bn)) → zero-arg kernel runner on synthetic
+    operands (the autotuner's measurement hook)."""
+    b, h, w_dim, c = x.shape
+    ho, pt, pb = out_spatial(h, kh, stride, padding)
+    wo, _, _ = out_spatial(w_dim, kw, stride, padding)
+    th0, bn0 = _default_tiles(ho, wo)
+    th = rows_per_tile or th0
+    bn = block_n or bn0
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if autotune is None:
+        from repro.kernels.autotune import autotune_enabled
+        autotune = (not (rows_per_tile or block_n)) and autotune_enabled()
+    if autotune:
+        from repro.kernels import autotune as at
+        kdim = kh * kw * c
+        cands = []
+        for tc in (th0, max(1, th0 // 2), min(ho, th0 * 2),
+                   min(ho, th0 * 4)):
+            for bnc in (128, 256):
+                if bnc > round_up(n, 128):
+                    continue
+                cand = (tc, kw * c, bnc)
+                hp_c = (round_up(ho, tc) - 1) * stride + kh
+                wp_c = (wo - 1) * stride + kw
+                if not _vmem_fits(hp_c, wp_c, c, kw, tc, wo, bnc, itemsize,
+                                  dbb):
+                    continue
+                if cand not in cands:
+                    cands.append(cand)
+        if cands:
+            tag = (f"conv{kh}x{kw}s{stride}p{padding[0]}wo{wo}|"
+                   f"{epilogue.tag()}>"
+                   f"{jnp.dtype(out_dtype).name if out_dtype else 'auto'}")
+            measure = not isinstance(x, jax.core.Tracer)
+            shape = at.autotune_block_shape(
+                kernel_tag, b * ho * wo, kdim, n, x.dtype, make_fn,
+                epilogue_tag=tag, candidates=cands, itemsize=itemsize,
+                measure=measure)
+            th, _, bn = shape
+    th = max(1, min(th, max(ho, 1)))
+    hp = (round_up(max(ho, 1), th) - 1) * stride + kh
+    wp = (wo - 1) * stride + kw
+    kernel_ok = _vmem_fits(hp, wp, c, kw, th, wo, bn, itemsize, dbb)
+    return th, bn, kernel_ok
+
+
+def conv_gemm(
+    x: jax.Array,              # [B, H, W, C] NHWC
+    w: jax.Array,              # [kh*kw*C, N] spatial-major, channel-minor
+    bias: Optional[jax.Array] = None,    # [N] f32 — fused epilogue
+    scale: Optional[jax.Array] = None,   # scalar/[N] f32 — fused epilogue
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+    rows_per_tile: int = 0,    # 0 = unpinned (heuristic or autotuner)
+    block_n: int = 0,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """Implicit-GEMM convolution: ``conv2d(x, w) (+bias, act, requant)`` →
+    [B, Ho, Wo, N], with the im2col patch matrix gathered in-kernel
+    (DESIGN.md §8) — it never exists in HBM.
+
+    ``w`` is the GEMM weight matrix of the explicit lowering
+    ([kh·kw·C, N], spatial-major, channel-minor — `conv_gemm.ref.im2col`
+    order); bias/scale/act fuse into the final-K store exactly as in
+    `sta_gemm`. ``use_kernel=False`` runs the explicit im2col + GEMM
+    oracle instead (the pre-PR-2 path).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    # Epilogue contract: bias/scale rows are f32 regardless of param dtype
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+    assert w.shape[0] == kh * kw * x.shape[-1], (w.shape, kh, kw, x.shape)
+    th, bn, kernel_ok = 1, 128, False
+    if use_kernel:
+        epi = Epilogue(act=act, has_bias=bias is not None,
+                       has_scale=scale is not None)
+        n = w.shape[1]
+
+        def make_fn(shape):
+            tc, _, bnc = shape
+            import numpy as np
+            rng = np.random.default_rng(0)
+            bias_s = jnp.zeros((n,), jnp.float32) if epi.has_bias else None
+            scale_s = jnp.ones((n,), jnp.float32) if epi.has_scale else None
+            return lambda: _conv_gemm_impl(
+                _synth(x.shape, x.dtype, rng), _synth(w.shape, x.dtype, rng),
+                bias_s, scale_s, kh=kh, kw=kw, stride=stride,
+                padding=padding, act=act, th=tc, bn=bnc,
+                out_dtype=out_dtype, interpret=interpret, use_kernel=True)
+
+        th, bn, kernel_ok = _resolve_tiles(
+            x, n, kh, kw, stride, padding, epi, out_dtype,
+            interpret, rows_per_tile, block_n, autotune, "conv_gemm",
+            make_fn)
+    return _conv_gemm_impl(x, w, bias, scale, kh=kh, kw=kw, stride=stride,
+                           padding=padding, act=act, th=th, bn=bn,
+                           out_dtype=out_dtype, interpret=interpret,
+                           use_kernel=use_kernel and kernel_ok)
+
+
+def conv_gemm_dbb(
+    x: jax.Array,              # [B, H, W, C] NHWC
+    values: jax.Array,         # [kh*kw*C/B * k, N]
+    bitmask: jax.Array,        # [kh*kw*C/B, N] integer
+    bias: Optional[jax.Array] = None,
+    scale: Optional[jax.Array] = None,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+    block: int = 8,
+    nnz: int = 4,
+    rows_per_tile: int = 0,
+    block_n: int = 0,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """Implicit-GEMM conv against the raw DBB weight stream — the weight
+    bytes stay compressed in HBM and expand in VMEM per K tile.
+
+    Kernel route requires (kw·C) % block == 0 (K steps cover whole DBB
+    blocks — DESIGN.md §8); other geometries take the dense oracle."""
+    if interpret is None:
+        interpret = default_interpret()
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+    c = x.shape[-1]
+    kdim = kh * kw * c
+    assert bitmask.shape[0] * block == kdim, (bitmask.shape, kdim, block)
+    blocks_ok = (kw * c) % block == 0
+    th, bn, kernel_ok = 1, 128, False
+    if use_kernel and blocks_ok:
+        epi = Epilogue(act=act, has_bias=bias is not None,
+                       has_scale=scale is not None)
+        n = values.shape[1]
+
+        def make_fn(shape):
+            tc, _, bnc = shape
+            import numpy as np
+            rng = np.random.default_rng(0)
+            ms = jnp.full(bitmask.shape, (1 << nnz) - 1, jnp.int32)
+            bias_s = jnp.zeros((n,), jnp.float32) if epi.has_bias else None
+            scale_s = jnp.ones((n,), jnp.float32) if epi.has_scale else None
+            return lambda: _conv_gemm_dbb_impl(
+                _synth(x.shape, x.dtype, rng),
+                _synth(values.shape, values.dtype, rng), ms, bias_s, scale_s,
+                kh=kh, kw=kw, stride=stride, padding=padding, act=act,
+                block=block, nnz=nnz, th=tc, bn=bnc, out_dtype=out_dtype,
+                interpret=interpret, use_kernel=True)
+
+        th, bn, kernel_ok = _resolve_tiles(
+            x, n, kh, kw, stride, padding, epi, out_dtype,
+            interpret, rows_per_tile, block_n, autotune,
+            f"conv_gemm_dbb_b{block}k{nnz}", make_fn, dbb=True)
+    return _conv_gemm_dbb_impl(
+        x, values, bitmask, bias, scale, kh=kh, kw=kw, stride=stride,
+        padding=padding, act=act, block=block, nnz=nnz, th=th, bn=bn,
+        out_dtype=out_dtype, interpret=interpret,
+        use_kernel=use_kernel and blocks_ok and kernel_ok)
+
+
+def conv_gemm_packed(x: jax.Array, p: DbbWeight,
+                     bias: Optional[jax.Array] = None, *,
+                     kh: int, kw: int, stride: int = 1,
+                     padding: str = "SAME", act: str = "none",
+                     out_dtype=None, interpret: Optional[bool] = None,
+                     use_kernel: bool = True, **tile_kw) -> jax.Array:
+    """Implicit-GEMM conv against a packed `DbbWeight` (k_dim = kh·kw·C).
+
+    The per-out-channel quant scale (if any) fuses into the kernel epilogue
+    with the optional bias and activation, exactly like `dbb_gemm_packed`.
+    """
+    assert p.k_dim == kh * kw * x.shape[-1], (p.k_dim, kh, kw, x.shape)
+    return conv_gemm_dbb(x, p.values, p.bitmask, bias, p.scale,
+                         kh=kh, kw=kw, stride=stride, padding=padding,
+                         act=act, block=p.block, nnz=p.nnz,
+                         out_dtype=out_dtype, interpret=interpret,
+                         use_kernel=use_kernel, **tile_kw)

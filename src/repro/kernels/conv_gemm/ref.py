@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the implicit-GEMM conv kernels.
+
+The reference is the *explicit* lowering the kernel replaces: materialize
+the im2col patch matrix, run a dense (or DBB-decompressed) matmul with the
+kernel's accumulation semantics, then the identical `apply_epilogue`.
+`im2col` is the canonical patch-matrix builder for the whole repo —
+`models/cnn.py` re-exports it — so the kernel's in-VMEM gather and the
+explicit path share one K-ordering definition (spatial-major (i·kw+j),
+channel-minor).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import acc_dtype_for
+from repro.kernels.dbb_gemm.ref import decompress_ref
+from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
+
+__all__ = ["im2col", "conv_gemm_ref", "conv_gemm_dbb_ref"]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           pad: str = "SAME") -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major [C*kh*kw]; reorder to
+    # [kh*kw*C] so K blocks run over spatial-then-channel (any fixed order
+    # works for DBB; this matches the conv weight layout [kh*kw*C, N]).
+    b, ho, wo, ckk = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    patches = jnp.moveaxis(patches, -2, -1)
+    return patches.reshape(b, ho, wo, kh * kw * c)
+
+
+def conv_gemm_ref(x: jax.Array, w: jax.Array, *,
+                  kh: int, kw: int, stride: int = 1, padding: str = "SAME",
+                  epilogue: Epilogue = Epilogue(),
+                  bias: Optional[jax.Array] = None,
+                  scale: Optional[jax.Array] = None,
+                  out_dtype=None) -> jax.Array:
+    """Explicit im2col + GEMM oracle: [B, H, W, C] × [kh*kw*C, N] →
+    [B, Ho, Wo, N], same accumulation dtype and epilogue as the kernel."""
+    acc = acc_dtype_for(x.dtype)
+    if out_dtype is None:
+        out_dtype = default_out_dtype(x.dtype, epilogue)
+    cols = im2col(x, kh, kw, stride, padding)          # [B, Ho, Wo, K]
+    b, ho, wo, kdim = cols.shape
+    y = jax.lax.dot_general(
+        cols.reshape(b * ho * wo, kdim), w.astype(x.dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc)
+    y = apply_epilogue(y, epilogue, out_dtype, bias=bias, scale=scale)
+    return y.reshape(b, ho, wo, w.shape[1])
+
+
+def conv_gemm_dbb_ref(x: jax.Array, values: jax.Array, bitmask: jax.Array, *,
+                      kh: int, kw: int, stride: int = 1,
+                      padding: str = "SAME", block: int = 8, nnz: int = 4,
+                      epilogue: Epilogue = Epilogue(),
+                      bias: Optional[jax.Array] = None,
+                      scale: Optional[jax.Array] = None,
+                      out_dtype=None) -> jax.Array:
+    """DBB oracle: decompress the weight stream densely, then the explicit
+    im2col + GEMM path."""
+    w = decompress_ref(values, bitmask.astype(jnp.int32), block=block,
+                       nnz=nnz)
+    return conv_gemm_ref(x, w, kh=kh, kw=kw, stride=stride, padding=padding,
+                         epilogue=epilogue, bias=bias, scale=scale,
+                         out_dtype=out_dtype)

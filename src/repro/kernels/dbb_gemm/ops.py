@@ -121,6 +121,13 @@ def dbb_gemm(
     """
     if interpret is None:
         interpret = default_interpret()
+    # Epilogue contract (DESIGN.md §7): f32 bias/scale rows at the boundary
+    # (see sta_gemm) — param-dtype operands would fork the jit cache and
+    # quietly demote the epilogue math on bf16 trees.
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
     bm0, bk0, bn0 = block_m or 128, block_k or 128, block_n or 128
     if use_kernel:
         if autotune is None:

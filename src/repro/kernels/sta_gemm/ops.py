@@ -129,6 +129,14 @@ def sta_gemm(
     """
     if interpret is None:
         interpret = default_interpret()
+    # Epilogue contract (DESIGN.md §7): bias/scale rows are f32 no matter
+    # what dtype the caller's params are stored in (bf16 model trees hand
+    # over bf16 biases) — coerce at the boundary, before jit/tuning sees
+    # the operand, so one compiled kernel serves every param dtype.
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
     bm, bk, bn = 128, 128, 128
     if use_kernel:
         *batch, k = x.shape

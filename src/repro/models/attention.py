@@ -77,20 +77,29 @@ def _scores(q, k, cfg: ModelConfig):
 
 
 def _mask_bias(qpos, kpos, window: int) -> jax.Array:
-    """[T, S] additive bias: causal (+ optional sliding window)."""
-    m = kpos[None, :] <= qpos[:, None]
+    """Additive bias [T, S] (1-D positions) or [B, T, S] (per-row ragged
+    positions): causal (+ optional sliding window). Keys at negative
+    positions are left-padding (ragged serving batches, DESIGN.md §5) and
+    are masked out — for ordinary arange positions the term is a no-op."""
+    q = qpos[..., :, None]
+    kk = kpos[..., None, :]
+    m = (kk <= q) & (kk >= 0)
     if window > 0:
-        m &= kpos[None, :] > (qpos[:, None] - window)
+        m &= kk > (q - window)
     return jnp.where(m, 0.0, _NEG_INF)
 
 
 def _naive_attention(q, k, v, qpos, kpos, cfg: ModelConfig):
-    """q:[B,T,Hq,D] k,v:[B,S,Hkv,D]; quadratic reference path."""
+    """q:[B,T,Hq,D] k,v:[B,S,Hkv,D]; quadratic reference path.
+    qpos/kpos: [T]/[S] shared positions, or [B,T]/[B,S] per-row (ragged)."""
     b, t, hq, hd = q.shape
     hkv = k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, t, hkv, g, hd)
-    s = _scores(qg, k, cfg) + _mask_bias(qpos, kpos, cfg.sliding_window)
+    bias = _mask_bias(qpos, kpos, cfg.sliding_window)
+    if bias.ndim == 3:                     # [B,T,S] -> [B,1,1,T,S]
+        bias = bias[:, None, None]
+    s = _scores(qg, k, cfg) + bias
     p = jax.nn.softmax(s, axis=-1)
     # PV in storage dtype with f32 accumulation (flash-attention practice)
     o = jnp.einsum("bhgts,bshd->bthgd", p.astype(v.dtype), v,
@@ -149,9 +158,16 @@ def _chunked_causal_attention(q, k, v, cfg: ModelConfig, chunk: int):
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 
 
-def _attention_core(q, k, v, positions, cfg: ModelConfig) -> jax.Array:
-    """Dispatch naive vs chunked on projected q/k/v. Returns o [B,S,Hq,D]."""
+def _attention_core(q, k, v, positions, cfg: ModelConfig,
+                    ragged: bool = False) -> jax.Array:
+    """Dispatch naive vs chunked on projected q/k/v. Returns o [B,S,Hq,D].
+
+    ragged=True (per-row positions from a left-padded serving batch —
+    any batch size, including 1) forces the naive path with full batched
+    masking; the chunked path assumes one shared arange position ladder."""
     s = q.shape[1]
+    if ragged:
+        return _naive_attention(q, k, v, positions, positions, cfg)
     impl = cfg.attn_impl
     if impl == "auto":
         impl = "chunked" if s > 2 * cfg.attn_chunk else "naive"
@@ -163,8 +179,16 @@ def _attention_core(q, k, v, positions, cfg: ModelConfig) -> jax.Array:
 
 def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
                     positions: Optional[jax.Array] = None,
-                    window_override: Optional[int] = None) -> jax.Array:
-    """Full-sequence (train / prefill) attention."""
+                    window_override: Optional[int] = None,
+                    ragged: bool = False,
+                    qkv: Optional[Tuple] = None) -> jax.Array:
+    """Full-sequence (train / prefill) attention.
+
+    ragged: positions are per-row (left-padded serving batch) — bypasses
+    the chunked/TP fast paths, whose masks assume one shared ladder.
+    qkv: optionally reuse already-projected (q, k, v) for these positions
+    (prefill projects for the cache fill anyway); the TP branch ignores
+    it — its projections are shard-local by construction."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)[None, :]
@@ -174,10 +198,10 @@ def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     tp = mesh.shape["model"] if (mesh is not None
                                  and "model" in mesh.axis_names
                                  and cfg.parallel != "dp") else 1
-    if tp > 1 and cfg.num_heads % tp == 0 and s > 1:
+    if tp > 1 and cfg.num_heads % tp == 0 and s > 1 and not ragged:
         return _attention_tp(p, cfg, x, positions, mesh, tp)
-    q, k, v = _project_qkv(p, cfg, x, positions)
-    o = _attention_core(q, k, v, positions, cfg)
+    q, k, v = qkv if qkv is not None else _project_qkv(p, cfg, x, positions)
+    o = _attention_core(q, k, v, positions, cfg, ragged=ragged)
     b_, s_, hq, hd = o.shape
     y = o.reshape(b_, s_, hq * hd) @ p["o_proj"]["w"].astype(o.dtype)
     return y
@@ -286,10 +310,18 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
                            cache_k: jax.Array, cache_v: jax.Array,
                            lengths: jax.Array,
                            window_override: Optional[int] = None,
-                           ring: bool = False
+                           ring: bool = False,
+                           start: Optional[jax.Array] = None,
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode: x [B, 1, d]; cache_k/v [B, Smax, Hkv, D];
-    lengths [B] current *absolute* context lengths. Returns (y, new_k, new_v).
+    lengths [B] current *absolute* context lengths (cache slot of the new
+    token). Returns (y, new_k, new_v).
+
+    start [B] (optional): index of the first real (non-pad) cache slot per
+    row — left-padded ragged batches (DESIGN.md §5). RoPE positions shift
+    to ``lengths - start`` (the logical context length) and slots below
+    ``start`` are masked out, so a short prompt in a mixed batch decodes
+    exactly as it would solo.
 
     ring=True treats the cache as a sliding-window ring buffer of size Smax:
     the new KV lands at ``lengths % Smax`` and every slot written so far is
@@ -300,7 +332,8 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     g = hq // hkv
     smax = cache_k.shape[1]
-    q, k, v = _project_qkv(p, cfg, x, lengths[:, None])
+    rope_pos = lengths if start is None else lengths - start
+    q, k, v = _project_qkv(p, cfg, x, rope_pos[:, None])
     ins = (lengths % smax) if ring else lengths
 
     def upd(cache, new, i):
@@ -315,6 +348,8 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
         valid = kpos < jnp.minimum(lengths[:, None] + 1, smax)
     else:
         valid = kpos <= lengths[:, None]
+        if start is not None:
+            valid &= kpos >= start[:, None]      # pad slots never attended
         window = (cfg.sliding_window if window_override is None
                   else window_override)
         if window > 0:

@@ -1,12 +1,18 @@
 """The paper's own model family: small CNNs with convolution *lowered to
-GEMM* (im2col), exactly the premise of the paper ("CNN layers are typically
+GEMM*, exactly the premise of the paper ("CNN layers are typically
 implemented by lowering 2D convolution to GEMM kernels").
 
 Every conv/fc weight is a GEMM weight matrix [K, N] with K = kh·kw·c_in,
 so the DBB 8×1 blocks run along the GEMM contraction dim — the same layout
 the STA-DBB hardware consumes, and the layout `core.dbb`/`kernels.dbb_gemm`
-expect. The forward can route matmuls through the Pallas kernels
-(`matmul="sta" | "dbb"`) or plain XLA (training).
+expect.
+
+Routing (DESIGN.md §8): ``matmul="sta" | "dbb"`` lowers each conv through
+the *implicit-GEMM* Pallas kernels (`kernels.conv_gemm`) — the im2col
+patch matrix is gathered in-kernel from the NHWC block in VMEM and never
+materialized in HBM (a kh·kw× activation saving). ``use_kernel=False``
+keeps those routes on the explicit im2col + GEMM oracle, and
+``matmul="xla"`` is the plain differentiable path (training).
 """
 from __future__ import annotations
 
@@ -18,26 +24,13 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
+from repro.kernels.conv_gemm.ops import conv_gemm, conv_gemm_packed
+from repro.kernels.conv_gemm.ref import im2col  # noqa: F401 (canonical def,
+#                                                 re-exported for callers)
 from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
 from repro.models.common import linear_apply, normal_init
 
 __all__ = ["cnn_init", "cnn_apply", "im2col"]
-
-
-def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
-           pad: str = "SAME") -> jax.Array:
-    """x: [B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C]."""
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), pad,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    # conv_general_dilated_patches yields channel-major [C*kh*kw]; reorder to
-    # [kh*kw*C] so K blocks run over spatial-then-channel (any fixed order
-    # works for DBB; this matches the weight reshape below).
-    b, ho, wo, ckk = patches.shape
-    c = x.shape[-1]
-    patches = patches.reshape(b, ho, wo, c, kh * kw)
-    patches = jnp.moveaxis(patches, -2, -1)
-    return patches.reshape(b, ho, wo, kh * kw * c)
 
 
 def _matmul(x: jax.Array, w, mode: str, bias=None,
@@ -51,6 +44,18 @@ def _matmul(x: jax.Array, w, mode: str, bias=None,
         return dbb_gemm_packed(x, w, bias, act=act)
     p = {"w": w} if bias is None else {"w": w, "b": bias}
     return linear_apply(p, x, act=act, fused=mode == "sta")
+
+
+def _conv(x: jax.Array, w, bias, k: int, act: str = "relu",
+          use_kernel: bool = True) -> jax.Array:
+    """One conv layer through the implicit-GEMM kernels: dense weights take
+    the STA variant, packed `DbbWeight` the DBB variant (compressed weight
+    stream + in-VMEM decompress). use_kernel=False runs the same math via
+    the explicit im2col + GEMM oracle."""
+    if isinstance(w, DbbWeight):
+        return conv_gemm_packed(x, w, bias, kh=k, kw=k, act=act,
+                                use_kernel=use_kernel)
+    return conv_gemm(x, w, bias, kh=k, kw=k, act=act, use_kernel=use_kernel)
 
 
 def cnn_init(key, cfg: ModelConfig) -> Dict:
@@ -77,16 +82,26 @@ def cnn_init(key, cfg: ModelConfig) -> Dict:
 
 
 def cnn_apply(params: Dict, cfg: ModelConfig, images: jax.Array,
-              matmul: str = "xla") -> jax.Array:
-    """images: [B, H, W, C] -> logits [B, classes]."""
+              matmul: str = "xla", use_kernel: bool = True) -> jax.Array:
+    """images: [B, H, W, C] -> logits [B, classes].
+
+    matmul="sta"|"dbb" routes convs through the implicit-GEMM kernels (the
+    im2col tensor never exists in HBM); use_kernel=False downgrades those
+    routes to the explicit im2col + GEMM fallback. matmul="xla" is the
+    plain differentiable lowering (training)."""
     x = images
     k = cfg.cnn_kernel
     for i, cout in enumerate(cfg.cnn_channels):
-        b, h, w, c = x.shape
-        cols = im2col(x, k, k)                       # [B,H,W,k*k*C]
-        y = _matmul(cols.reshape(b * h * w, -1), params[f"conv{i}"]["w"],
-                    matmul, bias=params[f"conv{i}"]["b"], act="relu")
-        y = y.reshape(b, h, w, cout)
+        p = params[f"conv{i}"]
+        if matmul in ("sta", "dbb"):
+            y = _conv(x, p["w"], p["b"], k, act="relu",
+                      use_kernel=use_kernel)
+        else:
+            b, h, w, c = x.shape
+            cols = im2col(x, k, k)                   # [B,H,W,k*k*C]
+            y = _matmul(cols.reshape(b * h * w, -1), p["w"], matmul,
+                        bias=p["b"], act="relu")
+            y = y.reshape(b, h, w, cout)
         x = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     b = x.shape[0]

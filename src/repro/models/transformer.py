@@ -272,7 +272,11 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                 cache: Dict, embeds: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
     """One new token for every sequence. tokens: [B] (or embeds [B,1,d]).
-    Returns (hidden [B,1,d], updated cache)."""
+    Returns (hidden [B,1,d], updated cache).
+
+    If the cache carries ragged-prefill offsets (``cache["start"]``, set by
+    `prefill(start=...)`), attention masks the left-pad slots and shifts
+    RoPE positions per row (DESIGN.md §5)."""
     dtype = dtype_of(cfg)
     if embeds is not None:
         x = embeds.astype(dtype)
@@ -299,12 +303,14 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     if cfg.family == "zamba2":
         return _zamba2_decode(params, cfg, x, cache)
 
+    start = cache.get("start")
+
     def body(x, xs):
         lp, ck, cv = xs
         lp = _unpack_layer(lp, cfg)
         h = norm_apply(cfg.norm, lp["ln_attn"], x)
         y, nk, nv = attn.decode_attention_apply(lp["attn"], cfg, h, ck, cv,
-                                                cache["length"])
+                                                cache["length"], start=start)
         x = x + y
         h = norm_apply(cfg.norm, lp["ln_mlp"], x)
         if cfg.family == "moe_lm":
@@ -317,7 +323,10 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
                                          cache["v"]))
     x = norm_apply(cfg.norm, params["final_norm"], x)
-    return x, {"k": nk, "v": nv, "length": cache["length"] + 1}
+    new_cache = {"k": nk, "v": nv, "length": cache["length"] + 1}
+    if start is not None:
+        new_cache["start"] = start
+    return x, new_cache
 
 
 def _zamba2_decode(params, cfg: ModelConfig, x, cache):
@@ -369,12 +378,21 @@ def _zamba2_decode(params, cfg: ModelConfig, x, cache):
 
 
 def prefill(params: Dict, cfg: ModelConfig, tokens=None, embeds=None,
-            prefix_embeds=None, cache: Optional[Dict] = None
+            prefix_embeds=None, cache: Optional[Dict] = None,
+            start: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Dict]:
     """Full-context forward that also fills the cache (serving prefill).
 
     For attention archs this recomputes K/V per layer into the cache; for
     SSM/hybrid archs it runs the stateful forward and stores final states.
+
+    start [B] (optional): per-row count of left-pad tokens in a ragged
+    batch. Attention archs shift RoPE positions to ``t - start`` and mask
+    the pad keys so every row prefills exactly as it would solo; the
+    offsets ride in the returned cache (``cache["start"]``) for the decode
+    steps (DESIGN.md §5). SSM/hybrid archs ignore the hint — their
+    recurrent state consumes pads by construction, so ragged exactness
+    there needs right-padding + state masking (not yet implemented).
     """
     x = _embed_inputs(params, cfg, tokens, embeds, prefix_embeds)
     b, s, _ = x.shape
@@ -394,15 +412,21 @@ def prefill(params: Dict, cfg: ModelConfig, tokens=None, embeds=None,
     if cfg.family == "zamba2":
         return _zamba2_prefill(params, cfg, x, cache)
 
+    # per-row ragged positions: pads (t < start) sit at negative logical
+    # positions, which the attention mask excludes as keys
+    positions = jnp.arange(s)[None, :]
+    if start is not None:
+        positions = positions - start[:, None]
+
     def body(x, xs):
         lp, ck, cv = xs
         lp = _unpack_layer(lp, cfg)
         h = norm_apply(cfg.norm, lp["ln_attn"], x)
-        q, k, v = attn._project_qkv(lp["attn"], cfg, h,
-                                    jnp.arange(s)[None, :])
+        q, k, v = attn._project_qkv(lp["attn"], cfg, h, positions)
         nk = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
         nv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
-        y = attn.attention_apply(lp["attn"], cfg, h)
+        y = attn.attention_apply(lp["attn"], cfg, h, positions=positions,
+                                 ragged=start is not None, qkv=(q, k, v))
         x = x + y
         h = norm_apply(cfg.norm, lp["ln_mlp"], x)
         if cfg.family == "moe_lm":
@@ -415,7 +439,10 @@ def prefill(params: Dict, cfg: ModelConfig, tokens=None, embeds=None,
     x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
                                          cache["v"]))
     x = norm_apply(cfg.norm, params["final_norm"], x)
-    return x, {"k": nk, "v": nv, "length": cache["length"] + s}
+    new_cache = {"k": nk, "v": nv, "length": cache["length"] + s}
+    if start is not None:
+        new_cache["start"] = start
+    return x, new_cache
 
 
 def _zamba2_prefill(params, cfg: ModelConfig, x: jax.Array, cache: Dict

@@ -1,9 +1,13 @@
 """Serving engine: batched prefill + decode over any assigned architecture.
 
-Weights may be DBB-packed (`core.dbb_linear.pack_tree`): HBM residency stays
-at the compressed 62.5% and the dense form is materialized transiently inside
-the jitted step (`maybe_decompress_tree`) — the XLA analogue of the STA-DBB
-on-chip decompress (DESIGN.md §2). On a single device
+Weights may be DBB-packed (`core.dbb_linear.pack_tree`): the stacked layer
+weights keep their compressed 62.5% HBM residency and expand transiently
+per layer inside the jitted scan body — the XLA analogue of the STA-DBB
+on-chip decompress (DESIGN.md §2). Non-layer leaves (embedding table, LM
+head) are small and read on *every* decode step, so `ServeEngine` expands
+them once up front instead of re-decompressing per token
+(`_decompress_non_layer` stays in the step functions for callers that pass
+raw packed trees — it no-ops on pre-expanded params). On a single device
 (`ModelConfig.gemm_impl = "pallas"`) the hot GEMMs route through the Pallas
 kernels with the fused bias/activation/requant epilogue instead
 (DESIGN.md §7) — the MLP up-projections fuse their activation and the LM
@@ -79,7 +83,11 @@ def make_decode_step(cfg: ModelConfig):
 
 
 def make_prefill_step(cfg: ModelConfig):
-    """prefill(params, cache, batch) -> (first generated token [B], cache)."""
+    """prefill(params, cache, batch) -> (first generated token [B], cache).
+
+    batch may carry ``start`` [B] — per-request left-pad counts for ragged
+    batches; attention archs thread it through positions/masking and stash
+    it in the cache for the decode steps (DESIGN.md §5)."""
 
     def step(params, cache, batch):
         p = _decompress_non_layer(params, cfg)
@@ -88,7 +96,8 @@ def make_prefill_step(cfg: ModelConfig):
             tokens=batch.get("tokens"),
             embeds=batch.get("embeds"),
             prefix_embeds=batch.get("prefix_embeds"),
-            cache=cache)
+            cache=cache,
+            start=batch.get("start"))
         nxt = greedy_from_hidden(hidden[:, -1:],
                                  registry.lm_head_weight(p, cfg),
                                  impl=_gemm_impl(cfg))
@@ -103,6 +112,17 @@ class ServeEngine:
 
     Single-host: pads request batches to `max_batch`, runs one prefill then
     a decode loop; per-request early stop on `eos_id`.
+
+    Ragged batches: prompts are left-padded to the longest request and the
+    per-row pad counts travel as ``start`` offsets — attention archs mask
+    pad keys and shift RoPE positions so a short prompt in a mixed batch
+    decodes token-identically to running it solo (DESIGN.md §5). SSM
+    archs' recurrent state still consumes the pads (see `prefill`).
+
+    Packed (DBB) weights outside the layer stack — embedding table, LM
+    head — are decompressed ONCE at engine construction, not inside every
+    jitted decode step; the stacked layer weights stay compressed in HBM
+    and expand per-layer inside the scan body (§Perf iteration 17).
     """
     cfg: ModelConfig
     params: Any
@@ -110,6 +130,14 @@ class ServeEngine:
     eos_id: int = 1
 
     def __post_init__(self):
+        # hoisted non-layer decompression: pay the embed/LM-head DBB
+        # expansion once here instead of on every decode step (the inner
+        # _decompress_non_layer then no-ops — no packed non-layer leaves);
+        # drop our reference to the packed originals so they don't reside
+        # next to their dense copies for the engine's lifetime
+        self._serve_params = jax.jit(
+            lambda p: _decompress_non_layer(p, self.cfg))(self.params)
+        self.params = self._serve_params
         self._prefill = jax.jit(make_prefill_step(self.cfg))
         self._decode = jax.jit(make_decode_step(self.cfg), donate_argnums=1)
 
@@ -120,11 +148,25 @@ class ServeEngine:
         max_len = max(len(p) for p in prompts)
         total = max_len + max_new_tokens
         toks = np.zeros((self.max_batch, max_len), np.int32)
+        start = np.zeros((self.max_batch,), np.int32)
         for i, p in enumerate(prompts):
             toks[i, max_len - len(p):] = p          # left-pad
+            start[i] = max_len - len(p)
         cache = registry.init_cache(self.cfg, self.max_batch, total)
-        nxt, cache = self._prefill(self.params, cache,
-                                   {"tokens": jnp.asarray(toks)})
+        batch = {"tokens": jnp.asarray(toks)}
+        if start.any():
+            # only genuinely ragged batches pay the per-row position/mask
+            # machinery — an all-zero start would force every batched
+            # prefill onto the naive [B,S] attention path for nothing
+            batch["start"] = jnp.asarray(start)
+            if self.cfg.family in ("rwkv6", "zamba2"):
+                import warnings
+                warnings.warn(
+                    f"{self.cfg.family}: ragged batch pads feed the "
+                    "recurrent state — short prompts may decode "
+                    "differently than solo (needs right-padding + state "
+                    "masking; see transformer.prefill)", stacklevel=2)
+        nxt, cache = self._prefill(self._serve_params, cache, batch)
         outs: List[List[int]] = [[] for _ in range(b)]
         done = np.zeros(self.max_batch, bool)
         cur = nxt
@@ -136,5 +178,5 @@ class ServeEngine:
                     done[i] |= host[i] == self.eos_id
             if done[:b].all():
                 break
-            cur, cache = self._decode(self.params, cache, cur)
+            cur, cache = self._decode(self._serve_params, cache, cur)
         return outs

@@ -216,6 +216,46 @@ class TestFusedEpilogue:
             np.asarray(got), np.asarray(x @ w + bias[None, None, :]),
             rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    @pytest.mark.parametrize("has_bias,has_scale", [(True, False),
+                                                    (False, True),
+                                                    (True, True)])
+    def test_epilogue_operand_dtype_matrix(self, dtype, has_bias, has_scale):
+        """f32-coercion contract at the wrapper boundary: bias/scale handed
+        over in *param* dtype (e.g. bf16 model trees) must behave exactly
+        like pre-cast f32 operands, on both kernels, fused and unfused."""
+        m, k, n = 24, 128, 72
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, dtype)
+        op_dt = jnp.bfloat16 if dtype != jnp.int8 else jnp.float32
+        bias32 = _rand((n,), 2, jnp.float32) if has_bias else None
+        scale32 = jnp.linspace(0.25, 1.5, n) if has_scale else None
+        # param-dtype copies (bf16 values exactly representable in f32, so
+        # coercion-at-boundary must be bit-identical to f32 input)
+        bias_p = bias32.astype(op_dt) if has_bias else None
+        scale_p = scale32.astype(op_dt) if has_scale else None
+        bias_f = bias_p.astype(jnp.float32) if has_bias else None
+        scale_f = scale_p.astype(jnp.float32) if has_scale else None
+
+        got = sta_gemm(x, w, bias_p, scale_p, act="relu")
+        want = sta_gemm(x, w, bias_f, scale_f, act="relu")
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        ref = sta_gemm(x, w, bias_p, scale_p, act="relu", use_kernel=False)
+        rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=rtol, atol=rtol)
+
+        p = pack_dbb(_rand((k, n), 3, jnp.float32), 8, 4)
+        vals = p.values.astype(dtype)
+        got = dbb_gemm(x, vals, p.bitmask, bias_p, scale_p, act="relu",
+                       block=8, nnz=4)
+        want = dbb_gemm(x, vals, p.bitmask, bias_f, scale_f, act="relu",
+                        block=8, nnz=4)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
     def test_epilogue_spec_validation(self):
         with pytest.raises(ValueError):
             Epilogue(act="tanh")

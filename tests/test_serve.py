@@ -149,6 +149,88 @@ def test_int8_packed_footprint():
     assert packed_bytes / bf16_dense < 0.33
 
 
+def test_ragged_batch_matches_solo_decoding(small_lm):
+    """A short prompt in a mixed-length batch must decode token-identically
+    to running it alone: left-pad keys are masked and RoPE positions are
+    per-row shifted (the pre-fix engine attended pads as real context)."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, max_batch=4)
+    prompts = [[5, 17, 3], [9, 9, 9, 9, 1, 2], [42, 7, 13, 250, 99]]
+    batched = eng.generate(prompts, max_new_tokens=6)
+    for i, p in enumerate(prompts):
+        solo = eng.generate([p], max_new_tokens=6)[0]
+        assert batched[i] == solo, (i, batched[i], solo)
+
+
+def test_ragged_prefill_cache_carries_offsets(small_lm):
+    """prefill(start=...) stores per-row offsets in the cache and decode
+    preserves them (the decode mask needs them every step)."""
+    cfg, params = small_lm
+    import jax.numpy as jnp
+    toks = jnp.asarray([[0, 0, 5, 17], [9, 9, 9, 9]], jnp.int32)
+    start = jnp.asarray([2, 0], jnp.int32)
+    cache = registry.init_cache(cfg, 2, 8)
+    _, cache = registry.prefill(params, cfg, tokens=toks, cache=cache,
+                                start=start)
+    assert "start" in cache
+    np.testing.assert_array_equal(np.asarray(cache["start"]),
+                                  np.asarray(start))
+    _, cache2 = registry.decode_step(params, cfg, jnp.asarray([1, 2]), cache)
+    np.testing.assert_array_equal(np.asarray(cache2["start"]),
+                                  np.asarray(start))
+
+
+def test_ragged_single_row_chunked_config(small_lm):
+    """B=1 ragged prefill under a chunked-attention config must still mask
+    pads (ragged routing is flagged explicitly, not inferred from batch
+    size): last-position hidden == unpadded prefill."""
+    cfg, params = small_lm
+    import jax.numpy as jnp
+    cfg = cfg.replace(attn_impl="chunked", attn_chunk=8)
+    prompt = list(range(5, 13))                      # 8 real tokens
+    toks_pad = jnp.asarray([[0] * 8 + prompt], jnp.int32)   # s=16 (8 pads)
+    cache = registry.init_cache(cfg, 1, 20)
+    h_pad, _ = registry.prefill(params, cfg, tokens=toks_pad, cache=cache,
+                                start=jnp.asarray([8]))
+    cache2 = registry.init_cache(cfg, 1, 20)
+    h_solo, _ = registry.prefill(params, cfg,
+                                 tokens=jnp.asarray([prompt], jnp.int32),
+                                 cache=cache2)
+    np.testing.assert_allclose(np.asarray(h_pad[:, -1], np.float32),
+                               np.asarray(h_solo[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_nonlayer_decompress_hoisted(small_lm):
+    """Packed embed/LM-head leaves are expanded once at engine build —
+    the per-token decode step must see zero packed non-layer leaves —
+    and packed serving still matches projected-dense serving."""
+    cfg, params = small_lm
+    dbb = cfg.dbb.__class__(enabled=True, block=8, nnz=4)
+    cfgp = cfg.replace(dbb=dbb)
+    proj = apply_dbb_to_tree(params, dbb, straight_through=False)
+    packed = pack_tree(proj, dbb)
+    from repro.core.dbb import DbbWeight
+
+    eng = ServeEngine(cfgp, packed, max_batch=2)
+    non_layer = {k: v for k, v in eng._serve_params.items() if k != "layers"}
+    packed_left = [x for x in jax.tree_util.tree_leaves(
+        non_layer, is_leaf=lambda y: isinstance(y, DbbWeight))
+        if isinstance(x, DbbWeight)]
+    assert not packed_left, "non-layer leaves must be pre-expanded"
+    # layer stack stays compressed in HBM (per-layer expand in the scan)
+    layer_packed = [x for x in jax.tree_util.tree_leaves(
+        eng._serve_params["layers"],
+        is_leaf=lambda y: isinstance(y, DbbWeight))
+        if isinstance(x, DbbWeight)]
+    assert layer_packed, "layer stack must stay packed"
+
+    out_packed = eng.generate([[5, 17, 3, 250]], max_new_tokens=4)[0]
+    out_dense = ServeEngine(cfgp, proj, max_batch=2).generate(
+        [[5, 17, 3, 250]], max_new_tokens=4)[0]
+    assert out_packed == out_dense
+
+
 def test_ssm_engine_generates(small_lm):
     cfg = get_config("rwkv6-1.6b", smoke=True)
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
