@@ -4,9 +4,11 @@
 
 Every section returns a JSON-serializable dict; the kernel-perf sections
 (implicit-GEMM conv A/B + fused-epilogue A/B) are written to
-``BENCH_conv.json`` so the perf trajectory is machine-readable run-over-run
-(CI runs ``--smoke``, which executes only those two sections on reduced
-shapes and still emits the file).
+``BENCH_conv.json`` and the decode/serving section (continuous batching
+vs the per-token static loop + packed-weight residency, DESIGN.md §9) to
+``BENCH_decode.json`` so the perf trajectory is machine-readable
+run-over-run (CI runs ``--smoke``, which executes only those sections on
+reduced shapes and still emits both files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -22,6 +24,8 @@ import traceback
 
 # sections whose rows land in BENCH_conv.json (the perf trajectory file)
 _PERF_SECTIONS = ("conv_gemm", "fused_epilogue")
+# sections whose rows land in BENCH_decode.json (serving trajectory)
+_DECODE_SECTIONS = ("decode_serve",)
 
 
 def main(argv=None) -> int:
@@ -37,7 +41,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     fast = args.fast or args.smoke
 
-    from benchmarks import (conv_gemm, fig4_layers, fig5_sweep,
+    from benchmarks import (conv_gemm, decode_serve, fig4_layers, fig5_sweep,
                             fused_epilogue, roofline_bench,
                             table1_dbb_accuracy, table2_efficiency)
 
@@ -46,6 +50,8 @@ def main(argv=None) -> int:
          "conv_gemm", lambda: conv_gemm.run(fast=fast)),
         ("fused_epilogue (STA/DBB fused epilogue A/B)",
          "fused_epilogue", lambda: fused_epilogue.run(fast=fast)),
+        ("decode_serve (continuous batching + packed streaming decode)",
+         "decode_serve", lambda: decode_serve.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -58,7 +64,8 @@ def main(argv=None) -> int:
          lambda: roofline_bench.run()),
     ]
     if args.smoke:
-        sections = [s for s in sections if s[1] in _PERF_SECTIONS]
+        sections = [s for s in sections
+                    if s[1] in _PERF_SECTIONS + _DECODE_SECTIONS]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -80,6 +87,12 @@ def main(argv=None) -> int:
         with open(path, "w") as f:
             json.dump(perf, f, indent=1, sort_keys=True)
         print(f"\nwrote {path}")
+    dec = {k: results[k] for k in _DECODE_SECTIONS if k in results}
+    if dec:
+        path = os.path.join(args.out, "BENCH_decode.json")
+        with open(path, "w") as f:
+            json.dump(dec, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
 
     if failures:
         print(f"\nFAILED sections: {failures}")

@@ -27,12 +27,22 @@ from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
 from repro.kernels.dbb_gemm.ref import decompress_ref
 
 __all__ = ["dbb_linear_apply", "decompress_xla", "pack_tree",
-           "maybe_decompress_tree", "tree_footprint_bytes"]
+           "maybe_decompress_tree", "tree_footprint_bytes",
+           "DECOMPRESS_STATS"]
+
+# Trace-time instrumentation: every decompress_xla call (i.e. every place a
+# dense copy of a packed weight is materialized inside a jitted graph)
+# increments this counter at trace time. The decode benchmark and the
+# fast-path tests assert the counter stays flat while tracing the packed
+# streaming decode step — the structural proof that no stacked layer weight
+# ever expands to dense (DESIGN.md §9).
+DECOMPRESS_STATS = {"calls": 0}
 
 
 def decompress_xla(p: DbbWeight, dtype=None) -> jax.Array:
     """Pure-XLA decompression (GSPMD-shardable). Handles stacked leaves
     ([L, Kc, N] scan stacks and [E, Kc, N] expert stacks) by vmapping."""
+    DECOMPRESS_STATS["calls"] += 1
     def one(values, bitmask):
         return decompress_ref(values, bitmask.astype(jnp.int32),
                               block=p.block, nnz=p.nnz)

@@ -5,10 +5,16 @@ dbb_gemm:  DBB structured-sparse GEMM with on-chip bitmask decompression.
 conv_gemm: implicit-GEMM convolution — the im2col patch tile is gathered
            in-kernel from the NHWC activation block in VMEM, never
            materialized in HBM (DESIGN.md §8); dense and DBB variants.
+skinny:    skinny-M (decode-shaped, M ≤ 32) weight-streaming variants of
+           sta_gemm/dbb_gemm — resident activation block, N-major grid,
+           compressed DBB stream decompressed in VMEM (DESIGN.md §9). The
+           ops wrappers dispatch to these automatically for small M.
 epilogue:  fused bias/activation/requant applied in the final-K store of
            all kernels (DESIGN.md §7).
 autotune:  measured block/tile-shape selection with a persistent on-disk
-           cache (DESIGN.md §7) — conv shapes key under their own op tag.
+           cache (DESIGN.md §7) — conv and skinny shapes key under their
+           own op tags, with M bucketed so decode (M=1-32) and prefill
+           (M=512+) shapes never share an entry.
 """
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 

@@ -8,7 +8,15 @@ neighborhood around the heuristic (half/double each block dim), drop
 everything that violates alignment or the VMEM budget, time each survivor
 on the real kernel, and memoize the winner.
 
-Cache key: (kernel, M, K, N, dtype, epilogue-tag, backend). Results persist
+Cache key: (kernel, bucket(M), K, N, dtype, epilogue-tag, backend). M is
+*bucketed* (`m_bucket`): decode steps walk M through 1..32 as the serving
+batch fills and prefill sees 512+, and keying on the exact M would re-tune
+(and re-store) a near-identical kernel for every batch size. Buckets are
+powers of two up to 512, then multiples of 512 — so decode (M=1-32) and
+prefill (M=512+) shapes land in distinct entries and never fight over one
+cached block shape, while all batch sizes inside one bucket share the
+measurement. Skinny decode kernels additionally key under their own op tag
+("sta_gemm_skinny", "dbb_gemm_skinny_*"). Results persist
 in a JSON table (default ``~/.cache/repro/autotune.json``, override with
 ``REPRO_AUTOTUNE_CACHE``) so the sweep cost is paid once per shape per
 machine. Set ``REPRO_AUTOTUNE=1`` to let the GEMM wrappers consult the
@@ -34,7 +42,8 @@ from repro.core.sta import LANE, SUBLANE, VMEM_BYTES, choose_block_shape
 
 __all__ = [
     "autotune_enabled", "cache_path", "candidate_block_shapes",
-    "autotune_block_shape", "clear_memory_cache",
+    "skinny_candidate_block_shapes", "autotune_block_shape",
+    "clear_memory_cache", "m_bucket",
 ]
 
 BlockShape = Tuple[int, int, int]
@@ -86,6 +95,17 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def m_bucket(m: int) -> int:
+    """Bucket M for cache keys: powers of two from 8 up to 512, then
+    multiples of 512. Decode (M=1-32) and prefill (M=512+) land in distinct
+    entries; batch sizes inside one bucket share a measurement."""
+    m = max(m, 1)
+    b = 8
+    while b < m and b < 512:
+        b *= 2
+    return b if m <= b else _round_up(m, 512)
+
+
 def _footprint(bm: int, bk: int, bn: int, itemsize: int) -> int:
     """Same VMEM working-set model as choose_block_shape: two operand tiles
     plus the f32/int32 accumulator tile."""
@@ -132,6 +152,43 @@ def candidate_block_shapes(m: int, k: int, n: int,
     return cands[:max_candidates]
 
 
+def skinny_candidate_block_shapes(m: int, k: int, n: int,
+                                  itemsize: int = 2,
+                                  align_k: int = LANE,
+                                  max_candidates: int = 8
+                                  ) -> List[BlockShape]:
+    """Candidates for the skinny weight-streaming kernels (DESIGN.md §9).
+
+    bm is not a free dimension there — the whole padded [mp, K] activation
+    block is resident — so candidates vary only (bk, bn) around the
+    heuristic prior, and the VMEM filter uses the skinny working set:
+    resident A block + streamed weight tile + accumulator.
+    """
+    cfg = StaConfig()
+    mp = _round_up(max(m, 1), SUBLANE)
+    np_ = _round_up(max(n, 1), LANE)
+    _, bk0, bn0 = choose_block_shape(m, k, n, cfg, itemsize=itemsize)
+
+    def clamp(v: int, quantum: int, hi: int) -> int:
+        return max(quantum, min(_round_up(v, quantum), _round_up(hi, quantum)))
+
+    cands: List[BlockShape] = []
+    for fk in (1.0, 0.5, 2.0, 4.0):     # weight stream: deeper K tiles too
+        for fn in (1.0, 0.5, 2.0):
+            bk = clamp(int(bk0 * fk), align_k, max(k, 1))
+            bn = clamp(int(bn0 * fn), LANE, np_)
+            c = (mp, bk, bn)
+            if c in cands:
+                continue
+            kp = _round_up(max(k, 1), bk)
+            if (mp * kp + bk * bn) * itemsize + mp * bn * 4 > VMEM_BYTES // 2:
+                continue
+            cands.append(c)
+    if not cands:
+        cands = [(mp, clamp(bk0, align_k, max(k, 1)), clamp(bn0, LANE, np_))]
+    return cands[:max_candidates]
+
+
 def _measure(fn: Callable[[], object], repeats: int = 3) -> float:
     """Best-of-N wall time of fn(), compile/warmup excluded."""
     import jax
@@ -171,7 +228,7 @@ def autotune_block_shape(
     import jax
     path = path or cache_path()
     key = "|".join(str(p) for p in (
-        kernel_name, m, k, n, np.dtype(dtype).name, epilogue_tag,
+        kernel_name, m_bucket(m), k, n, np.dtype(dtype).name, epilogue_tag,
         jax.default_backend()))
     table = _load(path)
     hit = table.get(key)

@@ -36,6 +36,7 @@ from repro.kernels.common import default_interpret, round_up
 from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
 from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
 from repro.kernels.epilogue import Epilogue, as_row
+from repro.kernels.skinny.kernel import dbb_gemm_skinny_pallas, skinny_ok
 
 __all__ = ["dbb_gemm", "dbb_gemm_packed"]
 
@@ -43,10 +44,10 @@ __all__ = ["dbb_gemm", "dbb_gemm_packed"]
 @functools.partial(
     jax.jit,
     static_argnames=("act", "block", "nnz", "block_m", "block_k", "block_n",
-                     "out_dtype", "interpret", "use_kernel"))
+                     "out_dtype", "interpret", "use_kernel", "skinny"))
 def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
                    block_m, block_k, block_n, out_dtype, interpret,
-                   use_kernel):
+                   use_kernel, skinny=False):
     epilogue = Epilogue(act=act, has_bias=bias is not None,
                         has_scale=scale is not None)
     *batch, k_dim = x.shape
@@ -69,7 +70,7 @@ def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
     bn = min(block_n, round_up(n, 128))
     # pad every axis to its block grid: M rows (zeros), K by whole DBB
     # blocks (zero value-rows + zero mask-rows), N by zero columns
-    mp = round_up(m, bm)
+    mp = round_up(m, 8) if skinny else round_up(m, bm)
     kp = round_up(k_dim, bk)
     np_ = round_up(n, bn)
     nb, nbp = k_dim // block, kp // block
@@ -86,10 +87,18 @@ def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
         bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
     if scale_r is not None and np_ != n:
         scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
-    y = dbb_gemm_pallas(xp, vp, mp_arr, bias_r, scale_r, epilogue=epilogue,
-                        block=block, nnz=nnz,
-                        block_m=bm, block_k=bk, block_n=bn,
-                        out_dtype=out_dtype, interpret=interpret)
+    if skinny:
+        # decode fast path (DESIGN.md §9): resident activations, the
+        # compressed values/bitmask stream through the K loop
+        y = dbb_gemm_skinny_pallas(xp, vp, mp_arr, bias_r, scale_r,
+                                   epilogue=epilogue, block=block, nnz=nnz,
+                                   block_k=bk, block_n=bn,
+                                   out_dtype=out_dtype, interpret=interpret)
+    else:
+        y = dbb_gemm_pallas(xp, vp, mp_arr, bias_r, scale_r,
+                            epilogue=epilogue, block=block, nnz=nnz,
+                            block_m=bm, block_k=bk, block_n=bn,
+                            out_dtype=out_dtype, interpret=interpret)
     return y[:m, :n].reshape(*batch, n)
 
 
@@ -129,7 +138,14 @@ def dbb_gemm(
     if scale is not None:
         scale = jnp.asarray(scale, jnp.float32)
     bm0, bk0, bn0 = block_m or 128, block_k or 128, block_n or 128
+    skinny = False
     if use_kernel:
+        *batch, k_dim = x.shape
+        m = math.prod(batch) if batch else 1
+        # decode fast path (DESIGN.md §9): GEMV-shaped calls stream the
+        # compressed weight through the skinny kernel; pinned blocks opt out
+        skinny = (not (block_m or block_k or block_n)
+                  and skinny_ok(m, k_dim, x.dtype.itemsize))
         if autotune is None:
             # caller-pinned block shapes win over the tuner (0-sentinel
             # convention, mirrors sta_gemm)
@@ -137,23 +153,25 @@ def dbb_gemm(
             autotune = (not (block_m or block_k or block_n)
                         and autotune_enabled())
         if autotune:
-            *batch, k_dim = x.shape
-            m = math.prod(batch) if batch else 1
             epi = Epilogue(act=act, has_bias=bias is not None,
                            has_scale=scale is not None)
             measure = not isinstance(x, jax.core.Tracer)
             bm0, bk0, bn0 = _autotuned_shape(
                 m, k_dim, values.shape[1], x.dtype, epi, out_dtype,
-                interpret, block=block, nnz=nnz, measure=measure)
+                interpret, block=block, nnz=nnz, measure=measure,
+                skinny=skinny)
     return _dbb_gemm_impl(x, values, bitmask, bias, scale, act=act,
                           block=block, nnz=nnz, block_m=bm0, block_k=bk0,
                           block_n=bn0, out_dtype=out_dtype,
-                          interpret=interpret, use_kernel=use_kernel)
+                          interpret=interpret, use_kernel=use_kernel,
+                          skinny=skinny)
 
 
 def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
-                     *, block, nnz, measure):
-    """Measured (bm, bk, bn) for the DBB kernel (bk also B-aligned)."""
+                     *, block, nnz, measure, skinny=False):
+    """Measured (bm, bk, bn) for the DBB kernel (bk also B-aligned); skinny
+    calls tune the compressed-stream tiles of the skinny kernel under
+    their own op tag."""
     import numpy as np
     from repro.core.sta import LANE
     from repro.kernels import autotune
@@ -162,7 +180,7 @@ def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
 
     def make_fn(shape):
         bm, bk, bn = shape
-        mp = round_up(m, bm)
+        mp = round_up(m, 8) if skinny else round_up(m, bm)
         kp = round_up(k_dim, bk)
         np_ = round_up(n, bn)
         rng = np.random.default_rng(0)
@@ -177,17 +195,26 @@ def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
         mask = jnp.full((kp // block, np_), (1 << nnz) - 1, jnp.int32)
         bias = jnp.zeros((1, np_), jnp.float32) if epilogue.has_bias else None
         scale = jnp.ones((1, np_), jnp.float32) if epilogue.has_scale else None
+        if skinny:
+            return lambda: dbb_gemm_skinny_pallas(
+                x, vals, mask, bias, scale, epilogue=epilogue, block=block,
+                nnz=nnz, block_k=bk, block_n=bn,
+                out_dtype=out_dtype, interpret=interpret)
         return lambda: dbb_gemm_pallas(
             x, vals, mask, bias, scale, epilogue=epilogue, block=block,
             nnz=nnz, block_m=bm, block_k=bk, block_n=bn,
             out_dtype=out_dtype, interpret=interpret)
 
     tag = f"{epilogue.tag()}>{jnp.dtype(out_dtype).name if out_dtype else 'auto'}"
-    name = f"dbb_gemm_b{block}k{nnz}" + ("_interp" if interpret else "")
+    name = (f"dbb_gemm_skinny_b{block}k{nnz}" if skinny
+            else f"dbb_gemm_b{block}k{nnz}") + ("_interp" if interpret else "")
+    itemsize = np.dtype(dtype).itemsize
+    cands = (autotune.skinny_candidate_block_shapes(
+        m, k_dim, n, itemsize=itemsize, align_k=align_k) if skinny else None)
     return autotune.autotune_block_shape(
-        name, m, k_dim, n, dtype, make_fn,
-        epilogue_tag=tag,
-        itemsize=np.dtype(dtype).itemsize, align_k=align_k, measure=measure)
+        name, m, k_dim, n, dtype, make_fn, epilogue_tag=tag,
+        candidates=cands,
+        itemsize=itemsize, align_k=align_k, measure=measure)
 
 
 def dbb_gemm_packed(x: jax.Array, p: DbbWeight,

@@ -1,0 +1,6 @@
+"""Skinny-M weight-streaming GEMM kernels (decode fast path, DESIGN.md §9)."""
+from repro.kernels.skinny.kernel import (SKINNY_M_MAX, dbb_gemm_skinny_pallas,
+                                         skinny_ok, sta_gemm_skinny_pallas)
+
+__all__ = ["SKINNY_M_MAX", "skinny_ok", "sta_gemm_skinny_pallas",
+           "dbb_gemm_skinny_pallas"]

@@ -6,6 +6,12 @@ shapes default to `core.sta.choose_block_shape` (the Tensor-PE geometry
 prior); with ``REPRO_AUTOTUNE=1`` (or ``autotune=True``) the measured
 autotuner in `kernels.autotune` picks them instead.
 
+Decode dispatch (DESIGN.md §9): GEMV-shaped calls (M ≤ 32 after batch
+flattening, no caller-pinned block shapes) route to the skinny
+weight-streaming kernel in `kernels.skinny` — full activation row-block
+resident in VMEM, N-major grid, weights streamed through the K loop — and
+autotune under their own op tag with M-bucketed cache keys.
+
 Structure note: `sta_gemm` itself is a *plain* function that resolves the
 block shape, then dispatches to the inner jit'd `_sta_gemm_impl` with the
 shape as static args. The tuner must run real kernels on the clock, which
@@ -23,9 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import StaConfig
-from repro.core.sta import choose_block_shape
+from repro.core.sta import SUBLANE, choose_block_shape
 from repro.kernels.common import default_interpret, round_up
 from repro.kernels.epilogue import Epilogue, as_row, default_out_dtype
+from repro.kernels.skinny.kernel import skinny_ok, sta_gemm_skinny_pallas
 from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
 from repro.kernels.sta_gemm.ref import sta_gemm_ref
 
@@ -34,15 +41,20 @@ __all__ = ["sta_gemm"]
 
 def _autotuned_shape(m: int, k: int, n: int, dtype, epilogue: Epilogue,
                      out_dtype, interpret: bool, cfg: StaConfig,
-                     measure: bool) -> Tuple[int, int, int]:
+                     measure: bool, skinny: bool = False
+                     ) -> Tuple[int, int, int]:
     """Measured block shape for this GEMM (memoized on disk). With
-    measure=False (tracer operands) only the cache is consulted."""
+    measure=False (tracer operands) only the cache is consulted. Skinny
+    (decode-shaped) calls tune the weight-stream tiles (bk, bn) of the
+    skinny kernel under their own op tag."""
     import numpy as np
     from repro.kernels import autotune
 
     def make_fn(shape):
         bm, bk, bn = shape
         mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+        if skinny:
+            mp = round_up(m, SUBLANE)
         rng = np.random.default_rng(0)
         if np.dtype(dtype) == np.int8:
             x = jnp.asarray(rng.integers(-127, 128, (mp, kp)), jnp.int8)
@@ -52,6 +64,10 @@ def _autotuned_shape(m: int, k: int, n: int, dtype, epilogue: Epilogue,
             w = jnp.asarray(rng.standard_normal((kp, np_)), dtype)
         bias = jnp.zeros((1, np_), jnp.float32) if epilogue.has_bias else None
         scale = jnp.ones((1, np_), jnp.float32) if epilogue.has_scale else None
+        if skinny:
+            return lambda: sta_gemm_skinny_pallas(
+                x, w, bias, scale, epilogue=epilogue, block_k=bk,
+                block_n=bn, out_dtype=out_dtype, interpret=interpret)
         return lambda: sta_gemm_pallas(
             x, w, bias, scale, epilogue=epilogue, block_m=bm, block_k=bk,
             block_n=bn, out_dtype=out_dtype, interpret=interpret)
@@ -60,18 +76,24 @@ def _autotuned_shape(m: int, k: int, n: int, dtype, epilogue: Epilogue,
     # interpret-mode timings are meaningless for compiled runs — both key
     # the cache
     tag = f"{epilogue.tag()}>{jnp.dtype(out_dtype).name if out_dtype else 'auto'}"
+    name = ("sta_gemm_skinny" if skinny else "sta_gemm") + (
+        "_interp" if interpret else "")
+    itemsize = np.dtype(dtype).itemsize
+    cands = (autotune.skinny_candidate_block_shapes(m, k, n,
+                                                    itemsize=itemsize)
+             if skinny else None)
     return autotune.autotune_block_shape(
-        "sta_gemm" + ("_interp" if interpret else ""), m, k, n, dtype,
-        make_fn, epilogue_tag=tag, cfg=cfg,
-        itemsize=np.dtype(dtype).itemsize, measure=measure)
+        name, m, k, n, dtype,
+        make_fn, epilogue_tag=tag, candidates=cands, cfg=cfg,
+        itemsize=itemsize, measure=measure)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("act", "block_m", "block_k", "block_n", "out_dtype",
-                     "interpret", "use_kernel"))
+                     "interpret", "use_kernel", "skinny"))
 def _sta_gemm_impl(x, w, bias, scale, *, act, block_m, block_k, block_n,
-                   out_dtype, interpret, use_kernel):
+                   out_dtype, interpret, use_kernel, skinny=False):
     epilogue = Epilogue(act=act, has_bias=bias is not None,
                         has_scale=scale is not None)
     *batch, k = x.shape
@@ -87,16 +109,22 @@ def _sta_gemm_impl(x, w, bias, scale, *, act, block_m, block_k, block_n,
         return y.reshape(*batch, n)
 
     bm, bk, bn = block_m, block_k, block_n
-    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    mp = round_up(m, SUBLANE) if skinny else round_up(m, bm)
+    kp, np_ = round_up(k, bk), round_up(n, bn)
     xp = jnp.pad(x2, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x2
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
     if bias_r is not None and np_ != n:
         bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
     if scale_r is not None and np_ != n:
         scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
-    y = sta_gemm_pallas(xp, wp, bias_r, scale_r, epilogue=epilogue,
-                        block_m=bm, block_k=bk, block_n=bn,
-                        out_dtype=out_dtype, interpret=interpret)
+    if skinny:
+        y = sta_gemm_skinny_pallas(xp, wp, bias_r, scale_r,
+                                   epilogue=epilogue, block_k=bk, block_n=bn,
+                                   out_dtype=out_dtype, interpret=interpret)
+    else:
+        y = sta_gemm_pallas(xp, wp, bias_r, scale_r, epilogue=epilogue,
+                            block_m=bm, block_k=bk, block_n=bn,
+                            out_dtype=out_dtype, interpret=interpret)
     y = y[:m, :n]
     return y.reshape(*batch, n)
 
@@ -138,10 +166,15 @@ def sta_gemm(
     if scale is not None:
         scale = jnp.asarray(scale, jnp.float32)
     bm, bk, bn = 128, 128, 128
+    skinny = False
     if use_kernel:
         *batch, k = x.shape
         m = math.prod(batch) if batch else 1
         n = w.shape[1]
+        # decode fast path (DESIGN.md §9): GEMV-shaped calls go through the
+        # skinny weight-streaming kernel; caller-pinned block shapes opt out
+        skinny = (not (block_m or block_k or block_n)
+                  and skinny_ok(m, k, x.dtype.itemsize))
         cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
                         block_n=block_n or 128)
         if autotune is None:
@@ -153,10 +186,12 @@ def sta_gemm(
                            has_scale=scale is not None)
             measure = not isinstance(x, jax.core.Tracer)
             bm, bk, bn = _autotuned_shape(m, k, n, x.dtype, epi, out_dtype,
-                                          interpret, cfg, measure)
+                                          interpret, cfg, measure,
+                                          skinny=skinny)
         else:
             bm, bk, bn = choose_block_shape(m, k, n, cfg,
                                             itemsize=x.dtype.itemsize)
     return _sta_gemm_impl(x, w, bias, scale, act=act, block_m=bm,
                           block_k=bk, block_n=bn, out_dtype=out_dtype,
-                          interpret=interpret, use_kernel=use_kernel)
+                          interpret=interpret, use_kernel=use_kernel,
+                          skinny=skinny)

@@ -3,6 +3,9 @@
 Initializes (or restores) weights, optionally DBB-packs them (compressed
 HBM residency — the paper's deployment mode), and runs batched greedy
 generation over synthetic prompts, reporting the weight-footprint saving.
+``--requests N`` (N > batch) drives the continuous-batching scheduler
+instead of one static batch: requests admit into free slots between
+decode chunks (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -28,6 +31,10 @@ def main(argv=None) -> int:
     ap.add_argument("--packed", action="store_true",
                     help="serve DBB-packed weights")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total request count; > batch engages the "
+                         "continuous-batching scheduler (default: one "
+                         "static batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -50,10 +57,14 @@ def main(argv=None) -> int:
 
     eng = ServeEngine(cfg, params, max_batch=args.batch)
     rng = np.random.default_rng(args.seed)
+    n_req = args.requests or args.batch
     prompts = [list(rng.integers(2, cfg.vocab_size,
                                  size=args.prompt_len))
-               for _ in range(args.batch)]
-    outs = eng.generate(prompts, max_new_tokens=args.max_new)
+               for _ in range(n_req)]
+    if n_req > args.batch:
+        outs = eng.serve(prompts, max_new_tokens=args.max_new)
+    else:
+        outs = eng.generate(prompts, max_new_tokens=args.max_new)
     for i, o in enumerate(outs):
         print(f"req{i}: {o}")
     return 0

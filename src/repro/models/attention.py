@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh
 from repro.models.common import apply_rope, linear_init, normal_init
@@ -24,6 +25,23 @@ __all__ = ["attention_init", "attention_apply", "decode_attention_apply",
            "init_kv_cache"]
 
 _NEG_INF = -1e30
+
+
+def _lin(pp: Dict, x: jax.Array) -> jax.Array:
+    """Projection against a dense or DBB-packed weight. Packed weights
+    (decode fast path, DESIGN.md §9) stream compressed through the DBB
+    kernel with the bias fused into its epilogue — the dense [K, N] form
+    never materializes, in HBM or VMEM. Dense weights keep the plain XLA
+    matmul (shardable, differentiable)."""
+    w = pp["w"]
+    if isinstance(w, DbbWeight):
+        from repro.core.dbb_linear import dbb_linear_apply
+        return dbb_linear_apply(x, w, pp.get("b"), impl="pallas",
+                                out_dtype=x.dtype)
+    y = x @ w.astype(x.dtype)
+    if "b" in pp:
+        y = y + pp["b"].astype(x.dtype)
+    return y
 
 
 def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
@@ -44,15 +62,9 @@ def _project_qkv(p: Dict, cfg: ModelConfig, x: jax.Array,
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
 
-    def lin(pp, x):
-        y = x @ pp["w"].astype(x.dtype)
-        if "b" in pp:
-            y = y + pp["b"].astype(x.dtype)
-        return y
-
-    q = lin(p["q_proj"], x).reshape(b, s, hq, hd)
-    k = lin(p["k_proj"], x).reshape(b, s, hkv, hd)
-    v = lin(p["v_proj"], x).reshape(b, s, hkv, hd)
+    q = _lin(p["q_proj"], x).reshape(b, s, hq, hd)
+    k = _lin(p["k_proj"], x).reshape(b, s, hkv, hd)
+    v = _lin(p["v_proj"], x).reshape(b, s, hkv, hd)
     if cfg.rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -203,8 +215,7 @@ def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     q, k, v = qkv if qkv is not None else _project_qkv(p, cfg, x, positions)
     o = _attention_core(q, k, v, positions, cfg, ragged=ragged)
     b_, s_, hq, hd = o.shape
-    y = o.reshape(b_, s_, hq * hd) @ p["o_proj"]["w"].astype(o.dtype)
-    return y
+    return _lin(p["o_proj"], o.reshape(b_, s_, hq * hd))
 
 
 def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
@@ -359,5 +370,5 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     o = jnp.einsum("bhgts,bshd->bthgd", pr.astype(new_v.dtype), new_v,
                    preferred_element_type=jnp.float32)
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    y = o @ p["o_proj"]["w"].astype(x.dtype)
+    y = _lin(p["o_proj"], o)
     return y, new_k, new_v

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh, data_axes_of
 from repro.models.common import linear_init, use_fused_gemm
@@ -58,19 +59,36 @@ def _tp_size(mesh) -> int:
     return mesh.shape["model"]
 
 
+def _fused_gemm(x: jax.Array, pp: Dict, act: str) -> jax.Array:
+    """One fused-epilogue GEMM against a dense or DBB-packed weight —
+    `dbb_linear_apply` owns the dispatch: packed weights (decode fast
+    path, DESIGN.md §9) stream compressed through the DBB kernel, dense
+    ones take the STA kernel."""
+    from repro.core.dbb_linear import dbb_linear_apply
+    return dbb_linear_apply(x, pp["w"], pp.get("b"), act=act,
+                            impl="pallas", out_dtype=x.dtype)
+
+
+def _dense_w(pp: Dict, dtype) -> jax.Array:
+    """Dense weight for the XLA path; DbbWeight leaves (which only the
+    fused route is supposed to see) expand as a safety net."""
+    w = pp["w"]
+    if isinstance(w, DbbWeight):
+        from repro.core.dbb_linear import decompress_xla
+        return decompress_xla(w, dtype=dtype)
+    return w.astype(dtype)
+
+
 def _mlp_fused(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    """Single-device serving path: every GEMM through the STA Pallas kernel,
+    """Single-device serving path: every GEMM through the STA Pallas kernel
+    (dense weights) or the DBB kernel (packed weights stream compressed),
     the activation fused into the up-projection's final-K store (DESIGN.md
     §7) — the [tokens, d_ff] pre-activation never round-trips through HBM.
     Gated MLPs fuse the act into the gate GEMM and multiply elementwise."""
-    from repro.kernels.sta_gemm.ops import sta_gemm
-    h = sta_gemm(x, p["wi"]["w"].astype(x.dtype),
-                 act="none" if cfg.mlp_gated else cfg.act,
-                 out_dtype=x.dtype)
+    h = _fused_gemm(x, p["wi"], "none" if cfg.mlp_gated else cfg.act)
     if cfg.mlp_gated:
-        h = sta_gemm(x, p["wg"]["w"].astype(x.dtype), act=cfg.act,
-                     out_dtype=x.dtype) * h
-    return sta_gemm(h, p["wo"]["w"].astype(x.dtype), out_dtype=x.dtype)
+        h = _fused_gemm(x, p["wg"], cfg.act) * h
+    return _fused_gemm(h, p["wo"], "none")
 
 
 def _mlp_dense(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
@@ -81,13 +99,13 @@ def _mlp_dense(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     # named for the selective-remat policy (§Perf iteration 8): saving the
     # two fat up-projections skips their recompute in the backward pass at
     # ~56 MB/layer/shard — the best flops-per-byte save in the block
-    h = checkpoint_name(x @ p["wi"]["w"].astype(x.dtype), "mlp_wi")
+    h = checkpoint_name(x @ _dense_w(p["wi"], x.dtype), "mlp_wi")
     if cfg.mlp_gated:
-        h = act(checkpoint_name(x @ p["wg"]["w"].astype(x.dtype),
+        h = act(checkpoint_name(x @ _dense_w(p["wg"], x.dtype),
                                 "mlp_wg")) * h
     else:
         h = act(h)
-    return h @ p["wo"]["w"].astype(x.dtype)
+    return h @ _dense_w(p["wo"], x.dtype)
 
 
 def seq_parallel_ok(cfg: ModelConfig, seq: int, tp: int) -> bool:
@@ -102,7 +120,8 @@ def seq_parallel_ok(cfg: ModelConfig, seq: int, tp: int) -> bool:
 def mlp_apply(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     mesh = current_mesh()
     tp = _tp_size(mesh) if cfg.parallel != "dp" else 1
-    f = p["wi"]["w"].shape[-1]
+    wi = p["wi"]["w"]
+    f = wi.n_dim if isinstance(wi, DbbWeight) else wi.shape[-1]
     if tp > 1 and f % tp == 0 and x.ndim == 3:
         ba = batch_axes_for(mesh, x.shape[0])
         sp = seq_parallel_ok(cfg, x.shape[1], tp)

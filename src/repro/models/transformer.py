@@ -29,7 +29,8 @@ from repro.models import attention as attn
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
 from repro.models.common import (dtype_of, embed_apply, embed_init,
-                                 linear_init, norm_apply, norm_init)
+                                 linear_init, norm_apply, norm_init,
+                                 use_fused_gemm)
 from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 
@@ -99,10 +100,29 @@ def lm_head_weight(params: Dict, cfg: ModelConfig) -> jax.Array:
 # layer bodies
 # ---------------------------------------------------------------------------
 
+# Families whose layer blocks (attention + MLP) consume DbbWeight leaves
+# directly through the DBB kernels — the packed-weight streaming fast path
+# (DESIGN.md §9). SSM/hybrid time-mix and MoE expert einsums still need
+# dense weights and keep the per-layer transient expand.
+_STREAM_FAMILIES = ("dense_lm", "vlm_lm", "audio_lm")
+
+
+def _stream_packed(cfg: ModelConfig) -> bool:
+    """Whether packed layer weights can skip the per-layer dense expand:
+    the attention/MLP blocks stream DbbWeight leaves straight through the
+    DBB Pallas kernels, so the weight stays compressed end-to-end — HBM
+    holds only values+bitmask and the kernel decompresses tiles in VMEM."""
+    return cfg.family in _STREAM_FAMILIES and use_fused_gemm(cfg)
+
+
 def _unpack_layer(lp: Dict, cfg: ModelConfig) -> Dict:
     """Per-layer DBB decompression inside the scan body: the stacked
     weights stay packed in HBM; only the current layer's dense form is
-    live (§Perf iteration 17). No-op for dense trees."""
+    live (§Perf iteration 17). No-op for dense trees. Under the packed
+    streaming fast path (DESIGN.md §9) even that per-layer transient is
+    skipped — the kernels consume the compressed leaves directly."""
+    if _stream_packed(cfg):
+        return lp
     from repro.core.dbb_linear import maybe_decompress_tree
     return maybe_decompress_tree(lp, dtype=dtype_of(cfg))
 

@@ -1,17 +1,28 @@
 """Serving engine: batched prefill + decode over any assigned architecture.
 
-Weights may be DBB-packed (`core.dbb_linear.pack_tree`): the stacked layer
-weights keep their compressed 62.5% HBM residency and expand transiently
-per layer inside the jitted scan body — the XLA analogue of the STA-DBB
-on-chip decompress (DESIGN.md §2). Non-layer leaves (embedding table, LM
-head) are small and read on *every* decode step, so `ServeEngine` expands
-them once up front instead of re-decompressing per token
-(`_decompress_non_layer` stays in the step functions for callers that pass
-raw packed trees — it no-ops on pre-expanded params). On a single device
-(`ModelConfig.gemm_impl = "pallas"`) the hot GEMMs route through the Pallas
-kernels with the fused bias/activation/requant epilogue instead
-(DESIGN.md §7) — the MLP up-projections fuse their activation and the LM
-head goes through `sta_gemm`.
+Weights may be DBB-packed (`core.dbb_linear.pack_tree`). Under the Pallas
+route (`ModelConfig.gemm_impl = "pallas"`, single device) the stacked layer
+weights stay compressed **end-to-end**: the scan body hands the DbbWeight
+leaves straight to the DBB kernels, which stream values+bitmask through
+their K loop and decompress tiles in VMEM — no per-layer transient dense
+copy, HBM residency is the compressed 62.5% for the whole decode step
+(DESIGN.md §9). Decode-shaped GEMMs (M ≤ 32) dispatch to the skinny
+weight-streaming kernels automatically. On the XLA route (distributed
+graphs, CPU dry-run) packed layers expand transiently per layer inside the
+scan body as before. Non-layer leaves (embedding table, LM head) are small
+and read on *every* decode step, so `ServeEngine` expands them once up
+front (`_decompress_non_layer` stays in the step functions for callers
+that pass raw packed trees — it no-ops on pre-expanded params).
+
+`ServeEngine.generate` runs static batches with **chunked token fetch**:
+generated tokens and the per-row done mask live on device and cross to the
+host once per `fetch_chunk` decode steps (a single scalar sync per chunk),
+not once per token. `ServeEngine.serve` is the **continuous-batching**
+scheduler on top of the same decode step: requests are admitted into free
+slots between decode chunks (per-slot prefill scattered into the shared
+cache), finished rows retire immediately, and every request decodes
+token-identically to running solo (per-row lengths/start offsets,
+DESIGN.md §5/§9).
 
 `make_decode_step` / `make_prefill_step` produce the exact functions the
 multi-pod dry-run lowers for the ``decode_*`` / ``prefill_*`` / ``long_*``
@@ -20,7 +31,8 @@ input-shape cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,19 +41,28 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.dbb_linear import maybe_decompress_tree
 from repro.dist.collectives import cross_entropy  # noqa: F401 (API surface)
+from repro.kernels.skinny import SKINNY_M_MAX
 from repro.models import registry
 
 __all__ = ["make_decode_step", "make_prefill_step", "ServeEngine",
            "greedy_from_hidden"]
+
+# Families whose decode cache is the attention [L, B, S, H, D] K/V layout
+# with per-row lengths — the continuous-batching scheduler scatters per-slot
+# prefills into it. SSM/hybrid states are admitted wave-wise instead.
+_CONT_BATCH_FAMILIES = ("dense_lm", "moe_lm", "vlm_lm", "audio_lm")
 
 
 def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array,
                        impl: str = "xla") -> jax.Array:
     """hidden [B, 1, d] → greedy next token [B]. The [B, V] logits are tiny
     (one position); vocab stays sharded under GSPMD. impl="pallas" routes
-    the head GEMM through the fused STA kernel (single device only)."""
+    the head GEMV through the skinny weight-streaming STA kernel when the
+    batch fits (B ≤ 32 — the decode regime, DESIGN.md §9) and falls back
+    to the XLA matmul otherwise: a [B, d]·[d, V] GEMV gains nothing from
+    the M-tiled kernel's padding."""
     h = hidden[:, -1].astype(jnp.float32)
-    if impl == "pallas":
+    if impl == "pallas" and h.shape[0] <= SKINNY_M_MAX:
         from repro.kernels.sta_gemm.ops import sta_gemm
         logits = sta_gemm(h, w_head.astype(jnp.float32))
     else:
@@ -58,8 +79,9 @@ def _gemm_impl(cfg: ModelConfig) -> str:
 
 def _decompress_non_layer(params, cfg: ModelConfig):
     """Expand packed leaves OUTSIDE the layer stack only. The stacked layer
-    weights stay packed and are decompressed per-layer *inside* the scan
-    body (transformer.py) — HBM never holds a whole-model dense copy
+    weights stay packed and either stream compressed through the DBB
+    kernels (Pallas route, DESIGN.md §9) or expand per-layer *inside* the
+    scan body (XLA route) — HBM never holds a whole-model dense copy
     (§Perf iteration 17)."""
     dt = jnp.dtype(cfg.dtype)
     if not isinstance(params, dict) or "layers" not in params:
@@ -106,28 +128,54 @@ def make_prefill_step(cfg: ModelConfig):
     return step
 
 
+def _bucket_len(n: int, minimum: int = 8) -> int:
+    """Pad a prompt length up to a power-of-two bucket (≥ minimum) so the
+    per-slot admission prefill compiles once per bucket, not once per
+    prompt length. Left-pad + ``start`` offsets make the padding exact
+    (DESIGN.md §5)."""
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class ServeEngine:
-    """Minimal batched greedy-decoding engine (examples + tests).
+    """Batched greedy-decoding engine (examples + tests + benchmarks).
 
-    Single-host: pads request batches to `max_batch`, runs one prefill then
-    a decode loop; per-request early stop on `eos_id`.
+    Single-host. Two entry points:
 
-    Ragged batches: prompts are left-padded to the longest request and the
-    per-row pad counts travel as ``start`` offsets — attention archs mask
-    pad keys and shift RoPE positions so a short prompt in a mixed batch
-    decodes token-identically to running it solo (DESIGN.md §5). SSM
-    archs' recurrent state still consumes the pads (see `prefill`).
+    * `generate(prompts)` — one static batch (≤ `max_batch`): one prefill,
+      then a decode loop. Generated tokens and the done mask stay ON
+      DEVICE; the host syncs one scalar per `fetch_chunk` decode steps and
+      pulls the token buffer when the batch finishes — no per-token
+      device→host round-trip.
+    * `serve(prompts)` — continuous batching over any number of requests:
+      new requests are admitted into free slots between decode chunks (a
+      single-row prefill scattered into the shared cache at the slot
+      index), finished rows retire immediately and free their slot. A
+      request admitted mid-stream decodes token-identically to running
+      solo: per-row cache lengths, left-pad ``start`` offsets and RoPE
+      positions isolate every row (DESIGN.md §5/§9).
+
+    Ragged batches: prompts are left-padded and the per-row pad counts
+    travel as ``start`` offsets — attention archs mask pad keys and shift
+    RoPE positions so a short prompt in a mixed batch decodes
+    token-identically to running it solo. SSM archs' recurrent state still
+    consumes the pads (see `prefill`); they also fall back to wave-wise
+    static batching under `serve`.
 
     Packed (DBB) weights outside the layer stack — embedding table, LM
-    head — are decompressed ONCE at engine construction, not inside every
-    jitted decode step; the stacked layer weights stay compressed in HBM
-    and expand per-layer inside the scan body (§Perf iteration 17).
+    head — are decompressed ONCE at engine construction; the stacked layer
+    weights stay compressed in HBM and, on the Pallas route, stream
+    compressed through the DBB kernels for the whole decode step
+    (DESIGN.md §9).
     """
     cfg: ModelConfig
     params: Any
     max_batch: int = 8
     eos_id: int = 1
+    fetch_chunk: int = 8
 
     def __post_init__(self):
         # hoisted non-layer decompression: pay the embed/LM-head DBB
@@ -135,11 +183,47 @@ class ServeEngine:
         # _decompress_non_layer then no-ops — no packed non-layer leaves);
         # drop our reference to the packed originals so they don't reside
         # next to their dense copies for the engine's lifetime
-        self._serve_params = jax.jit(
+        self.params = jax.jit(
             lambda p: _decompress_non_layer(p, self.cfg))(self.params)
-        self.params = self._serve_params
         self._prefill = jax.jit(make_prefill_step(self.cfg))
-        self._decode = jax.jit(make_decode_step(self.cfg), donate_argnums=1)
+        self._decode_raw = make_decode_step(self.cfg)
+        self._decode = jax.jit(self._decode_raw, donate_argnums=1)
+        self._chunk_fns: Dict[int, Any] = {}
+        self._admit = jax.jit(self._admit_fn, donate_argnums=0)
+
+    # -- decode chunks: N steps per host round-trip -----------------------
+
+    def _chunk_fn(self, steps: int):
+        """Jitted scan of `steps` decode steps. Carries (cur, cache, done)
+        on device and emits the [steps, B] token block — ONE host fetch
+        and ONE all-done scalar sync per chunk instead of per token.
+
+        Callers always pass the engine's fixed `fetch_chunk` and discard
+        surplus tokens host-side: each distinct `steps` compiles its own
+        whole-model scan, and a variable tail size would turn the end of
+        every request into a mid-serving XLA compile. (Overshoot decode
+        steps write per-row clamped cache slots whose tokens are never
+        consumed — see generate/serve.)"""
+        fn = self._chunk_fns.get(steps)
+        if fn is None:
+            raw, eos = self._decode_raw, self.eos_id
+
+            def chunk(params, cache, cur, done):
+                def body(carry, _):
+                    cur, cache, done = carry
+                    nxt, cache = raw(params, cache, cur)
+                    done = done | (nxt == eos)
+                    return (nxt, cache, done), nxt
+
+                (cur, cache, done), toks = jax.lax.scan(
+                    body, (cur, cache, done), None, length=steps)
+                return cur, cache, done, toks
+
+            fn = jax.jit(chunk, donate_argnums=1)
+            self._chunk_fns[steps] = fn
+        return fn
+
+    # -- static batch -----------------------------------------------------
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 16
                  ) -> List[List[int]]:
@@ -166,17 +250,146 @@ class ServeEngine:
                     "recurrent state — short prompts may decode "
                     "differently than solo (needs right-padding + state "
                     "masking; see transformer.prefill)", stacklevel=2)
-        nxt, cache = self._prefill(self._serve_params, cache, batch)
-        outs: List[List[int]] = [[] for _ in range(b)]
-        done = np.zeros(self.max_batch, bool)
-        cur = nxt
-        for _ in range(max_new_tokens):
-            host = np.asarray(cur)
-            for i in range(b):
-                if not done[i]:
-                    outs[i].append(int(host[i]))
-                    done[i] |= host[i] == self.eos_id
-            if done[:b].all():
-                break
-            cur, cache = self._decode(self._serve_params, cache, cur)
+        cur, cache = self._prefill(self.params, cache, batch)
+        # device-side recording: pad rows start done, real rows check eos
+        done = jnp.asarray(np.arange(self.max_batch) >= b) | (
+            cur == self.eos_id)
+        chunks = [cur[None]]                        # [1, B] on device
+        remaining = max_new_tokens - 1
+        while remaining > 0 and not bool(jnp.all(done)):
+            # fixed-size chunks (one compiled scan); the tail overshoot's
+            # tokens are trimmed below and its clamped cache writes only
+            # ever feed further discarded tokens
+            cur, cache, done, toks_d = self._chunk_fn(self.fetch_chunk)(
+                self.params, cache, cur, done)
+            chunks.append(toks_d)
+            remaining -= self.fetch_chunk
+        host = np.concatenate([np.asarray(c) for c in chunks], axis=0)
+        outs: List[List[int]] = []
+        for i in range(b):
+            row: List[int] = []
+            for t in host[:max_new_tokens, i]:
+                row.append(int(t))
+                if t == self.eos_id:
+                    break
+            outs.append(row)
+        return outs
+
+    # -- continuous batching ----------------------------------------------
+
+    @staticmethod
+    def _admit_fn(cache, cache_one, cur, done, slot, tok):
+        """Scatter a finished single-row prefill into the shared decode
+        state at `slot` (traced index — one compilation serves every
+        slot). Row-indexed leaves (length/start) write at [slot], stacked
+        K/V leaves at [:, slot]."""
+        new = {}
+        for key, leaf in cache.items():
+            if leaf.ndim == 1:                       # length / start
+                new[key] = leaf.at[slot].set(cache_one[key][0])
+            else:                                    # [L, B, S, H, D] K/V
+                new[key] = leaf.at[:, slot].set(cache_one[key][:, 0])
+        return new, cur.at[slot].set(tok), done.at[slot].set(False)
+
+    def serve(self, prompts: List[List[int]],
+              max_new_tokens: Union[int, Sequence[int]] = 16,
+              fetch_chunk: Optional[int] = None,
+              prompt_bucket: int = 8) -> List[List[int]]:
+        """Continuous-batching greedy decode over any number of requests.
+
+        max_new_tokens: one budget for all requests, or one per request.
+        Requests are admitted into free slots between decode chunks and
+        retire the moment they hit EOS or their budget — the batch stays
+        full whenever there is queued work, instead of draining to the
+        slowest request like a static wave."""
+        n_req = len(prompts)
+        if isinstance(max_new_tokens, int):
+            budgets = [max_new_tokens] * n_req
+        else:
+            budgets = list(max_new_tokens)
+            assert len(budgets) == n_req, (len(budgets), n_req)
+        if n_req == 0:
+            return []
+        if self.cfg.family not in _CONT_BATCH_FAMILIES:
+            # SSM/hybrid states have no slot-scatterable K/V cache yet —
+            # serve them as static waves (correct, just not continuous)
+            import warnings
+            warnings.warn(
+                f"{self.cfg.family}: continuous batching needs the "
+                "attention K/V cache layout — falling back to static "
+                "waves", stacklevel=2)
+            outs = []
+            for i in range(0, n_req, self.max_batch):
+                wave_p = prompts[i:i + self.max_batch]
+                wave_b = budgets[i:i + self.max_batch]
+                res = self.generate(wave_p, max_new_tokens=max(wave_b))
+                outs.extend(r[:bud] for r, bud in zip(res, wave_b))
+            return outs
+
+        chunk = fetch_chunk or self.fetch_chunk
+        blens = [_bucket_len(len(p), prompt_bucket) for p in prompts]
+        # bucket the cache length too: serve() calls with nearby budgets
+        # must reuse one compiled chunk scan / admit scatter / prefill
+        smax = _bucket_len(max(blens) + max(budgets), prompt_bucket)
+        cache = registry.init_cache(self.cfg, self.max_batch, smax)
+        cache["start"] = jnp.zeros((self.max_batch,), jnp.int32)
+        cur = jnp.zeros((self.max_batch,), jnp.int32)
+        done = jnp.ones((self.max_batch,), bool)
+        outs: List[List[int]] = [[] for _ in prompts]
+        queue = deque(range(n_req))
+        free = list(range(self.max_batch))
+        active: Dict[int, int] = {}                  # slot -> request idx
+        left: Dict[int, int] = {}                    # request idx -> budget
+
+        # one reusable zero cache for every admission prefill (the jitted
+        # prefill never donates it, so the template stays pristine)
+        c1_template = registry.init_cache(self.cfg, 1, smax)
+
+        def admit(slot: int, ridx: int) -> bool:
+            nonlocal cache, cur, done
+            p, bl = prompts[ridx], blens[ridx]
+            toks = np.zeros((1, bl), np.int32)
+            toks[0, bl - len(p):] = p                # left-pad to bucket
+            nxt1, c1 = self._prefill(self.params, c1_template, {
+                "tokens": jnp.asarray(toks),
+                "start": jnp.asarray([bl - len(p)], np.int32)})
+            tok = int(jax.device_get(nxt1)[0])       # first generated token
+            outs[ridx].append(tok)
+            if tok == self.eos_id or budgets[ridx] <= 1:
+                return False                         # finished at prefill
+            cache, cur, done = self._admit(cache, c1, cur, done,
+                                           jnp.int32(slot), nxt1[0])
+            active[slot] = ridx
+            left[ridx] = budgets[ridx] - 1
+            return True
+
+        while queue or active:
+            # admission happens between decode chunks: fill every free slot
+            while queue and free:
+                ridx = queue.popleft()
+                if budgets[ridx] <= 0:
+                    continue
+                slot = free.pop()
+                if not admit(slot, ridx):
+                    free.append(slot)
+            if not active:
+                continue
+            # fixed-size chunks (one compiled scan); rows that hit EOS or
+            # their budget mid-chunk have their surplus tokens discarded
+            # below and retire at the chunk boundary
+            cur, cache, done, toks_d = self._chunk_fn(chunk)(
+                self.params, cache, cur, done)
+            host = np.asarray(toks_d)                # one fetch per chunk
+            retired = []
+            for slot, ridx in active.items():
+                for t in host[:, slot]:
+                    outs[ridx].append(int(t))
+                    left[ridx] -= 1
+                    if t == self.eos_id or left[ridx] <= 0:
+                        retired.append(slot)
+                        break
+            for slot in retired:
+                del active[slot]
+                free.append(slot)
+                done = done.at[slot].set(True)
         return outs

@@ -1,0 +1,376 @@
+"""Decode fast path (DESIGN.md §9): skinny weight-streaming kernels,
+packed-weight streaming decode, and continuous-batching serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dbb import dbb_project, pack_dbb
+from repro.kernels.autotune import m_bucket
+from repro.kernels.dbb_gemm.ops import dbb_gemm, dbb_gemm_packed
+from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.skinny import (SKINNY_M_MAX, dbb_gemm_skinny_pallas,
+                                  skinny_ok, sta_gemm_skinny_pallas)
+from repro.kernels.sta_gemm.ops import sta_gemm
+from repro.kernels.sta_gemm.ref import sta_gemm_ref
+
+
+def _rand(shape, seed, dtype):
+    k = jax.random.PRNGKey(seed)
+    if dtype == jnp.int8:
+        return jax.random.randint(k, shape, -127, 128, jnp.int32).astype(
+            jnp.int8)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+class TestSkinnySta:
+    """Skinny dispatch happens inside the public sta_gemm for M ≤ 32."""
+
+    @pytest.mark.parametrize("m", [1, 3, 8, 17, 32])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+    def test_matches_oracle(self, m, dtype):
+        k, n = 256, 72                       # ragged N: padding path
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, dtype)
+        got = sta_gemm(x, w)
+        want = sta_gemm_ref(x, w)
+        assert got.dtype == want.dtype
+        if dtype == jnp.int8:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=rtol, atol=rtol)
+
+    @pytest.mark.parametrize("act", ["none", "silu", "relu"])
+    def test_fused_epilogue(self, act):
+        m, k, n = 4, 256, 72
+        x = _rand((m, k), 2, jnp.float32)
+        w = _rand((k, n), 3, jnp.float32)
+        bias = _rand((n,), 4, jnp.float32)
+        scale = jnp.linspace(0.25, 1.5, n)
+        got = sta_gemm(x, w, bias, scale, act=act)
+        want = sta_gemm(x, w, bias, scale, act=act, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_direct_kernel_matches_tiled(self):
+        """The skinny kernel itself (resident A, N-major grid) must equal
+        the M-tiled kernel on an aligned shape."""
+        from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
+        x = _rand((8, 256), 5, jnp.float32)
+        w = _rand((256, 256), 6, jnp.float32)
+        got = sta_gemm_skinny_pallas(x, w, block_k=128, block_n=128,
+                                     interpret=True)
+        want = sta_gemm_pallas(x, w, block_m=8, block_k=128, block_n=128,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_int8_requant_store(self):
+        """INT8 requant through the skinny store is bit-exact vs the
+        hand-computed round/clip (same contract as the tiled kernel)."""
+        x = _rand((8, 128), 6, jnp.int8)
+        w = _rand((128, 128), 7, jnp.int8)
+        s = jnp.float32(2e-3)
+        got = sta_gemm(x, w, scale=s, act="relu", out_dtype=jnp.int8)
+        assert got.dtype == jnp.int8
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        want = jnp.clip(jnp.round(jnp.maximum(
+            acc.astype(jnp.float32) * s, 0)), -127, 127).astype(jnp.int8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_dispatch_boundary(self):
+        assert skinny_ok(1, 4096, 4)
+        assert skinny_ok(SKINNY_M_MAX, 4096, 4)
+        assert not skinny_ok(SKINNY_M_MAX + 1, 4096, 4)
+        # a resident row-block that cannot fit VMEM opts out
+        assert not skinny_ok(32, 1 << 22, 4)
+
+    def test_pinned_blocks_still_supported(self):
+        """Caller-pinned block shapes opt out of skinny dispatch and keep
+        the tiled kernel contract."""
+        x = _rand((8, 256), 8, jnp.float32)
+        w = _rand((256, 128), 9, jnp.float32)
+        got = sta_gemm(x, w, block_m=8, block_k=128, block_n=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestSkinnyDbb:
+    @pytest.mark.parametrize("m", [1, 8, 32])
+    @pytest.mark.parametrize("block,nnz", [(8, 4), (8, 2), (16, 4)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int8])
+    def test_matches_oracle(self, m, block, nnz, dtype):
+        k, n = 256, 128
+        x = _rand((m, k), 0, dtype)
+        w = _rand((k, n), 1, jnp.float32)
+        p = pack_dbb(w, block, nnz)
+        vals = p.values.astype(dtype)
+        got = dbb_gemm(x, vals, p.bitmask, block=block, nnz=nnz)
+        want = dbb_gemm_ref(x, vals, p.bitmask.astype(jnp.int32),
+                            block=block, nnz=nnz)
+        if dtype == jnp.int8:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_packed_with_scale_bias_act(self):
+        """Per-channel scale + bias + act fused into the skinny epilogue."""
+        m, k, n = 4, 256, 128
+        x = _rand((m, k), 2, jnp.float32)
+        w = _rand((k, n), 3, jnp.float32)
+        scale = jnp.linspace(0.5, 2.0, n)
+        bias = _rand((n,), 4, jnp.float32)
+        p = pack_dbb(w, 8, 4, scale=scale)
+        got = dbb_gemm_packed(x, p, bias, act="relu")
+        want = jnp.maximum(
+            (x @ dbb_project(w, 8, 4)) * scale[None, :] + bias[None, :], 0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_direct_kernel_matches_tiled(self):
+        from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
+        w = _rand((256, 128), 5, jnp.float32)
+        x = _rand((8, 256), 6, jnp.float32)
+        p = pack_dbb(w, 8, 4)
+        mask = p.bitmask.astype(jnp.int32)
+        got = dbb_gemm_skinny_pallas(x, p.values, mask, block=8, nnz=4,
+                                     block_k=128, block_n=128,
+                                     interpret=True)
+        want = dbb_gemm_pallas(x, p.values, mask, block=8, nnz=4,
+                               block_m=8, block_k=128, block_n=128,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSkinnyCandidates:
+    def test_bm_fixed_and_unique(self):
+        from repro.core.sta import LANE, SUBLANE, VMEM_BYTES
+        from repro.kernels.autotune import skinny_candidate_block_shapes
+
+        cands = skinny_candidate_block_shapes(17, 2048, 512, itemsize=4)
+        assert cands
+        assert len(set(cands)) == len(cands)      # no duplicate timings
+        for bm, bk, bn in cands:
+            assert bm == 24                        # round_up(17, SUBLANE)
+            assert bk % LANE == 0 and bn % LANE == 0
+            kp = -(-2048 // bk) * bk
+            assert (bm * kp + bk * bn) * 4 + bm * bn * 4 <= VMEM_BYTES // 2
+
+    def test_align_k_honored(self):
+        from repro.kernels.autotune import skinny_candidate_block_shapes
+
+        cands = skinny_candidate_block_shapes(8, 768, 256, itemsize=1,
+                                              align_k=384)
+        assert all(bk % 384 == 0 for _, bk, _ in cands)
+
+
+class TestMBucket:
+    def test_buckets(self):
+        assert m_bucket(1) == 8 and m_bucket(8) == 8
+        assert m_bucket(9) == 16 and m_bucket(32) == 32
+        assert m_bucket(33) == 64 and m_bucket(512) == 512
+        assert m_bucket(513) == 1024 and m_bucket(1500) == 1536
+
+    def test_decode_prefill_separate_same_bucket_shared(self, tmp_path):
+        """M=1..8 share one cache entry; decode and prefill shapes don't."""
+        from repro.kernels import autotune
+        path = str(tmp_path / "autotune.json")
+        autotune.clear_memory_cache()
+        calls = []
+
+        def mk(shape):
+            def fn():
+                calls.append(shape)
+                return jnp.zeros(())
+            return fn
+
+        a = autotune.autotune_block_shape(
+            "k", 1, 128, 128, jnp.float32, mk,
+            candidates=[(8, 128, 128)], repeats=1, path=path)
+        n_after_first = len(calls)
+        b = autotune.autotune_block_shape(
+            "k", 8, 128, 128, jnp.float32, mk,
+            candidates=[(8, 128, 128)], repeats=1, path=path)
+        assert a == b and len(calls) == n_after_first   # shared bucket
+        autotune.autotune_block_shape(
+            "k", 512, 128, 128, jnp.float32, mk,
+            candidates=[(8, 128, 128)], repeats=1, path=path)
+        assert len(calls) > n_after_first               # prefill: own entry
+        import json
+        assert len(json.load(open(path))) == 2
+
+
+@pytest.fixture(scope="module")
+def packed_lm():
+    from repro.configs import get_config
+    from repro.core.dbb_linear import pack_tree
+    from repro.core.sparsity import apply_dbb_to_tree
+    from repro.models import registry
+
+    cfg = get_config("olmo-1b", smoke=True).replace(remat="none")
+    dbb = cfg.dbb.__class__(enabled=True, block=8, nnz=4)
+    cfg = cfg.replace(dbb=dbb)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    proj = apply_dbb_to_tree(params, dbb, straight_through=False)
+    packed = pack_tree(proj, dbb)
+    return cfg, proj, packed
+
+
+class TestPackedStreamingDecode:
+    def test_decode_token_parity(self, packed_lm):
+        """Pallas streaming decode on packed weights == XLA decode on the
+        DBB-projected dense weights, token for token."""
+        from repro.models import registry
+        from repro.serve.engine import make_decode_step
+
+        cfg, proj, packed = packed_lm
+        cfgp = cfg.replace(gemm_impl="pallas")
+        tok = jnp.asarray([7])
+        c1 = registry.init_cache(cfg, 1, 8)
+        c2 = registry.init_cache(cfgp, 1, 8)
+        n1, _ = jax.jit(make_decode_step(cfg))(proj, c1, tok)
+        n2, _ = jax.jit(make_decode_step(cfgp))(packed, c2, tok)
+        assert int(n1[0]) == int(n2[0])
+
+    def test_no_dense_materialization(self, packed_lm):
+        """Tracing the streaming decode step must never expand a packed
+        layer weight to dense (every dense expand goes through
+        decompress_xla, which counts trace-time calls)."""
+        from repro.core import dbb_linear
+        from repro.models import registry
+        from repro.serve.engine import make_decode_step
+
+        cfg, _, packed = packed_lm
+        tok = jnp.asarray([7], jnp.int32)
+
+        def calls(route_cfg):
+            cache = registry.init_cache(route_cfg, 1, 8)
+            before = dbb_linear.DECOMPRESS_STATS["calls"]
+            jax.eval_shape(make_decode_step(route_cfg), packed, cache, tok)
+            return dbb_linear.DECOMPRESS_STATS["calls"] - before
+
+        assert calls(cfg.replace(gemm_impl="pallas")) == 0
+        assert calls(cfg.replace(gemm_impl="xla")) > 0   # control
+
+    def test_prefill_parity(self, packed_lm):
+        """The streaming fast path covers prefill too (same layer blocks):
+        packed Pallas prefill hidden ≈ dense XLA prefill hidden."""
+        from repro.models import registry
+
+        cfg, proj, packed = packed_lm
+        toks = jnp.asarray([[5, 17, 3, 250]], jnp.int32)
+        h_d, _ = registry.prefill(proj, cfg, tokens=toks,
+                                  cache=registry.init_cache(cfg, 1, 8))
+        cfgp = cfg.replace(gemm_impl="pallas")
+        h_p, _ = registry.prefill(packed, cfgp, tokens=toks,
+                                  cache=registry.init_cache(cfgp, 1, 8))
+        np.testing.assert_allclose(np.asarray(h_p, np.float32),
+                                   np.asarray(h_d, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_packed_engine_generate_parity(self, packed_lm):
+        """End-to-end: the packed streaming engine generates the same
+        tokens as the projected-dense XLA engine."""
+        from repro.serve.engine import ServeEngine
+
+        cfg, proj, packed = packed_lm
+        out_d = ServeEngine(cfg, proj, max_batch=2).generate(
+            [[5, 17, 3, 250]], max_new_tokens=3)[0]
+        out_p = ServeEngine(cfg.replace(gemm_impl="pallas"), packed,
+                            max_batch=2).generate(
+            [[5, 17, 3, 250]], max_new_tokens=3)[0]
+        assert out_d == out_p
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = get_config("olmo-1b", smoke=True).replace(remat="none")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestContinuousBatching:
+    def test_midstream_admission_matches_solo(self, small_lm):
+        """More requests than slots: late requests are admitted into slots
+        freed mid-stream and must decode token-identically to solo."""
+        from repro.serve.engine import ServeEngine
+
+        cfg, params = small_lm
+        eng = ServeEngine(cfg, params, max_batch=2, fetch_chunk=3)
+        prompts = [[5, 17, 3], [9, 9, 9, 9, 1, 2], [42, 7, 13, 250, 99],
+                   [4, 8], [100, 200, 300]]
+        budgets = [6, 3, 8, 5, 4]
+        served = eng.serve(prompts, max_new_tokens=budgets)
+        for p, bud, got in zip(prompts, budgets, served):
+            solo = eng.generate([p], max_new_tokens=bud)[0]
+            assert got == solo, (p, got, solo)
+
+    def test_scalar_budget_and_order(self, small_lm):
+        from repro.serve.engine import ServeEngine
+
+        cfg, params = small_lm
+        eng = ServeEngine(cfg, params, max_batch=4)
+        prompts = [[5, 17, 3], [9, 9, 9, 9, 1, 2]]
+        served = eng.serve(prompts, max_new_tokens=4)
+        batched = eng.generate(prompts, max_new_tokens=4)
+        assert served == batched
+
+    def test_generate_chunk_size_invariant(self, small_lm):
+        """Chunked device-side fetch must not change the emitted tokens."""
+        from repro.serve.engine import ServeEngine
+
+        cfg, params = small_lm
+        prompts = [[5, 17, 3], [9, 9, 9, 9, 1, 2]]
+        outs = [ServeEngine(cfg, params, max_batch=2, fetch_chunk=fc)
+                .generate(prompts, max_new_tokens=7) for fc in (1, 3, 8)]
+        assert outs[0] == outs[1] == outs[2]
+
+    def test_ssm_falls_back_to_waves(self):
+        from repro.configs import get_config
+        from repro.models import registry
+        from repro.serve.engine import ServeEngine
+
+        cfg = get_config("rwkv6-1.6b", smoke=True)
+        params = registry.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, max_batch=2)
+        with pytest.warns(UserWarning, match="continuous batching"):
+            out = eng.serve([[4, 8, 15], [16, 23], [42]],
+                            max_new_tokens=[3, 2, 4])
+        assert [len(o) for o in out] == [3, 2, 4]
+
+
+class TestGreedyFromHidden:
+    def test_skinny_route_matches_xla(self, small_lm):
+        from repro.serve.engine import greedy_from_hidden
+
+        cfg, params = small_lm
+        h = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model))
+        w = jax.random.normal(jax.random.PRNGKey(2),
+                              (cfg.d_model, cfg.vocab_size))
+        np.testing.assert_array_equal(
+            np.asarray(greedy_from_hidden(h, w, impl="pallas")),
+            np.asarray(greedy_from_hidden(h, w, impl="xla")))
+
+    def test_large_batch_falls_back(self, small_lm):
+        """B > SKINNY_M_MAX: the head GEMV goes to XLA instead of being
+        padded into STA tiles."""
+        from repro.serve.engine import greedy_from_hidden
+
+        cfg, _ = small_lm
+        h = jax.random.normal(jax.random.PRNGKey(3), (48, 1, cfg.d_model))
+        w = jax.random.normal(jax.random.PRNGKey(4),
+                              (cfg.d_model, cfg.vocab_size))
+        np.testing.assert_array_equal(
+            np.asarray(greedy_from_hidden(h, w, impl="pallas")),
+            np.asarray(greedy_from_hidden(h, w, impl="xla")))

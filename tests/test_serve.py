@@ -213,14 +213,14 @@ def test_nonlayer_decompress_hoisted(small_lm):
     from repro.core.dbb import DbbWeight
 
     eng = ServeEngine(cfgp, packed, max_batch=2)
-    non_layer = {k: v for k, v in eng._serve_params.items() if k != "layers"}
+    non_layer = {k: v for k, v in eng.params.items() if k != "layers"}
     packed_left = [x for x in jax.tree_util.tree_leaves(
         non_layer, is_leaf=lambda y: isinstance(y, DbbWeight))
         if isinstance(x, DbbWeight)]
     assert not packed_left, "non-layer leaves must be pre-expanded"
     # layer stack stays compressed in HBM (per-layer expand in the scan)
     layer_packed = [x for x in jax.tree_util.tree_leaves(
-        eng._serve_params["layers"],
+        eng.params["layers"],
         is_leaf=lambda y: isinstance(y, DbbWeight))
         if isinstance(x, DbbWeight)]
     assert layer_packed, "layer stack must stay packed"
