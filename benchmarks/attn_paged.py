@@ -1,0 +1,179 @@
+"""Attention + paged-KV A/B (DESIGN.md §10): flash vs chunked wall-clock
+and paged vs contiguous serving occupancy at a fixed HBM budget.
+
+1. **Flash vs chunked prefill**: the fused Pallas flash kernel against the
+   blocked XLA running-softmax path on the same q/k/v. On this CPU
+   container the Pallas kernel runs in *interpret mode* (per-block
+   emulation), so the wall-clock column is a correctness-tracked artifact,
+   not a perf claim — the structural win (no ``[B, H, T, S]`` score
+   tensor, reported as the peak-intermediate ratio from the traced jaxprs)
+   is backend-independent and is what transfers to TPU.
+
+2. **Paged vs contiguous occupancy**: serve a mixed short/long workload
+   twice at the SAME KV HBM budget — once through the contiguous cache
+   (every slot reserves ``smax`` slots, so the budget caps the slot
+   count) and once through the paged pool (admission by pages actually
+   used). Both engines run the same flash decode kernel (identity vs real
+   block table), so tokens are bit-identical; the paged engine must reach
+   ≥ ``OCCUPANCY_FLOOR``× the contiguous max-concurrent-rows.
+
+Emitted as the ``attn_paged`` section of ``BENCH_attn.json`` by
+`benchmarks.run` (CI smoke-runs it and uploads the file).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OCCUPANCY_FLOOR = 1.5   # acceptance: paged ≥ 1.5× contiguous rows
+
+
+def _best_of(fn, n: int = 3) -> float:
+    jax.block_until_ready(fn())           # warmup / compile
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _peak_intermediate(fn, *args) -> int:
+    """Largest intermediate aval (elements) in the traced computation."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def walk(jaxpr):
+        peak = 0
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                if hasattr(v.aval, "shape"):
+                    peak = max(peak, int(np.prod(v.aval.shape)))
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (tuple, list)) else [val]):
+                    if isinstance(sub, ClosedJaxpr):
+                        peak = max(peak, walk(sub.jaxpr))
+                    elif isinstance(sub, Jaxpr):
+                        peak = max(peak, walk(sub))
+        return peak
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _flash_vs_chunked(fast: bool) -> Dict:
+    from repro.configs import get_config
+    from repro.kernels.attn.ops import flash_attention
+    from repro.models.attention import _chunked_causal_attention
+
+    cfg = get_config("olmo-1b", smoke=True).replace(attn_chunk=64)
+    b, t, hq, hkv, d = (1, 256, 4, 4, 32) if fast else (2, 1024, 8, 4, 64)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, t, hq, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, hkv, d))
+
+    flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, block_q=64,
+                                                    block_kv=64))
+    chunked = jax.jit(lambda q, k, v: _chunked_causal_attention(
+        q, k, v, cfg, cfg.attn_chunk))
+    o_f = flash(q, k, v)
+    o_c = chunked(q, k, v)
+    err = float(jnp.abs(o_f.astype(jnp.float32)
+                        - o_c.astype(jnp.float32)).max())
+    assert err < 1e-3, f"flash/chunked diverged: {err}"
+
+    t_f = _best_of(lambda: flash(q, k, v))
+    t_c = _best_of(lambda: chunked(q, k, v))
+    peak_f = _peak_intermediate(
+        lambda q, k, v: flash_attention(q, k, v, block_q=64, block_kv=64),
+        q, k, v)
+    peak_naive = b * hq * t * t           # what the oracle materializes
+    row = {
+        "shape_bthd": [b, t, hq, d],
+        "flash_ms": round(t_f * 1e3, 2),
+        "chunked_xla_ms": round(t_c * 1e3, 2),
+        "flash_peak_intermediate_elems": int(peak_f),
+        "naive_score_tensor_elems": int(peak_naive),
+        "peak_intermediate_ratio": round(peak_naive / peak_f, 2),
+        "note": "flash runs in Pallas interpret mode on CPU — wall-clock "
+                "is tracked for trend, the peak-intermediate ratio is the "
+                "structural claim",
+    }
+    print(f"  flash {row['flash_ms']} ms vs chunked-XLA "
+          f"{row['chunked_xla_ms']} ms (interpret-mode CPU); "
+          f"peak intermediate {peak_f} vs naive {peak_naive} "
+          f"({row['peak_intermediate_ratio']}x smaller)")
+    assert peak_f < peak_naive, "flash materialized the score tensor"
+    return row
+
+
+def _paged_occupancy(fast: bool) -> Dict:
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import ServeEngine
+    from repro.serve.kv_cache import pages_needed
+
+    page = 8
+    cfg = get_config("olmo-1b", smoke=True).replace(
+        remat="none", attn_impl="flash", kv_page_size=page)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 8 if fast else 16
+    prompts = [list(rng.integers(2, 500, size=6)) for _ in range(n_req)]
+    # one long request per arrival wave pins smax; the rest are short
+    budgets = [24 if i % 4 == 0 else 4 for i in range(n_req)]
+
+    # serve() buckets: prompts → 8 slots, smax → bucket(8 + 24) = 32
+    smax = 32
+    n_log = smax // page
+    # fixed HBM budget: the KV bytes of `slots_c` contiguous slots
+    slots_c = 3
+    budget_pages = slots_c * n_log
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    page_bytes = (2 * cfg.num_layers * page * hkv * hd
+                  * jnp.dtype(cfg.dtype).itemsize)
+
+    eng_c = ServeEngine(cfg, params, max_batch=slots_c, fetch_chunk=4,
+                        paged=False)
+    out_c = eng_c.serve(prompts, max_new_tokens=budgets)
+    eng_p = ServeEngine(cfg, params, max_batch=n_req, fetch_chunk=4,
+                        kv_pool_pages=budget_pages + 1)   # +1: dummy page
+    out_p = eng_p.serve(prompts, max_new_tokens=budgets)
+    assert out_p == out_c, "paged serving must be bit-identical"
+
+    peak_paged = eng_p.serve_stats["peak_active"]
+    need_short = pages_needed(8, 4, page)
+    row = {
+        "hbm_budget_pages": budget_pages,
+        "hbm_budget_mb": round(budget_pages * page_bytes / 1e6, 3),
+        "page_slots": page,
+        "smax_slots": smax,
+        "contiguous_max_rows": slots_c,
+        "paged_peak_rows": int(peak_paged),
+        "paged_rows_analytic_short": budget_pages // need_short,
+        "occupancy_ratio": round(peak_paged / slots_c, 2),
+        "deferred_admissions": eng_p.serve_stats["deferred_admissions"],
+        "n_requests": n_req,
+        "bit_identical_tokens": True,
+    }
+    print(f"  fixed budget {budget_pages} pages: contiguous {slots_c} rows "
+          f"vs paged peak {peak_paged} rows "
+          f"({row['occupancy_ratio']}x, floor {OCCUPANCY_FLOOR}x)")
+    assert peak_paged >= OCCUPANCY_FLOOR * slots_c, (
+        f"paged occupancy {peak_paged}/{slots_c} below "
+        f"{OCCUPANCY_FLOOR}x floor")
+    return row
+
+
+def run(fast: bool = False) -> Dict:
+    return {
+        "flash_prefill": _flash_vs_chunked(fast),
+        "paged_occupancy": _paged_occupancy(fast),
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -4,11 +4,13 @@
 
 Every section returns a JSON-serializable dict; the kernel-perf sections
 (implicit-GEMM conv A/B + fused-epilogue A/B) are written to
-``BENCH_conv.json`` and the decode/serving section (continuous batching
+``BENCH_conv.json``, the decode/serving section (continuous batching
 vs the per-token static loop + packed-weight residency, DESIGN.md §9) to
-``BENCH_decode.json`` so the perf trajectory is machine-readable
-run-over-run (CI runs ``--smoke``, which executes only those sections on
-reduced shapes and still emits both files).
+``BENCH_decode.json``, and the attention section (flash vs chunked +
+paged-KV occupancy, DESIGN.md §10) to ``BENCH_attn.json`` so the perf
+trajectory is machine-readable run-over-run (CI runs ``--smoke``, which
+executes only those sections on reduced shapes and still emits all three
+files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -26,6 +28,8 @@ import traceback
 _PERF_SECTIONS = ("conv_gemm", "fused_epilogue")
 # sections whose rows land in BENCH_decode.json (serving trajectory)
 _DECODE_SECTIONS = ("decode_serve",)
+# sections whose rows land in BENCH_attn.json (attention/paged-KV, §10)
+_ATTN_SECTIONS = ("attn_paged",)
 
 
 def main(argv=None) -> int:
@@ -41,8 +45,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     fast = args.fast or args.smoke
 
-    from benchmarks import (conv_gemm, decode_serve, fig4_layers, fig5_sweep,
-                            fused_epilogue, roofline_bench,
+    from benchmarks import (attn_paged, conv_gemm, decode_serve, fig4_layers,
+                            fig5_sweep, fused_epilogue, roofline_bench,
                             table1_dbb_accuracy, table2_efficiency)
 
     sections = [
@@ -52,6 +56,8 @@ def main(argv=None) -> int:
          "fused_epilogue", lambda: fused_epilogue.run(fast=fast)),
         ("decode_serve (continuous batching + packed streaming decode)",
          "decode_serve", lambda: decode_serve.run(fast=fast)),
+        ("attn_paged (flash vs chunked + paged-KV occupancy)",
+         "attn_paged", lambda: attn_paged.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -65,7 +71,8 @@ def main(argv=None) -> int:
     ]
     if args.smoke:
         sections = [s for s in sections
-                    if s[1] in _PERF_SECTIONS + _DECODE_SECTIONS]
+                    if s[1] in (_PERF_SECTIONS + _DECODE_SECTIONS
+                                + _ATTN_SECTIONS)]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -92,6 +99,12 @@ def main(argv=None) -> int:
         path = os.path.join(args.out, "BENCH_decode.json")
         with open(path, "w") as f:
             json.dump(dec, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    att = {k: results[k] for k in _ATTN_SECTIONS if k in results}
+    if att:
+        path = os.path.join(args.out, "BENCH_attn.json")
+        with open(path, "w") as f:
+            json.dump(att, f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
     if failures:

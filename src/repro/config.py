@@ -153,11 +153,22 @@ class ModelConfig:
     # ZeRO/FSDP) — the right layout for d_model <~ 2048 where TP boundary
     # collectives dwarf the per-shard compute (§Perf iteration 12)
     parallel: str = "tp"
-    # attention
-    attn_impl: str = "auto"         # auto | naive | chunked
+    # attention backend (DESIGN.md §10):
+    # "flash"   = fused Pallas flash kernel (online softmax, no [B,H,T,T]
+    #             score tensor); single device only, floats only.
+    # "chunked" = blocked XLA path with running-softmax combine.
+    # "naive"   = quadratic oracle (full score bias materialized).
+    # "auto"    = flash when the Pallas route is active (gemm_impl="pallas",
+    #             no mesh), else chunked/naive by sequence length.
+    attn_impl: str = "auto"         # auto | naive | chunked | flash
     attn_chunk: int = 1024
     sliding_window: int = 0         # 0 = full causal
     attn_logit_softcap: float = 0.0
+    # paged KV cache (DESIGN.md §10): page size in cache slots. 0 keeps the
+    # contiguous per-slot cache; > 0 lets ServeEngine.serve() admit requests
+    # by pages actually used (block-table decode) instead of reserving
+    # max_len per slot, and sizes the flash decode kernel's KV tiles.
+    kv_page_size: int = 0
     # cnn family (paper's own models)
     cnn_channels: Tuple[int, ...] = ()
     cnn_kernel: int = 3

@@ -9,6 +9,11 @@ skinny:    skinny-M (decode-shaped, M ≤ 32) weight-streaming variants of
            sta_gemm/dbb_gemm — resident activation block, N-major grid,
            compressed DBB stream decompressed in VMEM (DESIGN.md §9). The
            ops wrappers dispatch to these automatically for small M.
+attn:      flash-style fused attention (DESIGN.md §10) — prefill with
+           online softmax over KV blocks (the [B,H,T,S] score tensor
+           never materializes) and a paged decode kernel whose KV pages
+           are gathered through a scalar-prefetched block table; a
+           contiguous cache is the identity-table special case.
 epilogue:  fused bias/activation/requant applied in the final-K store of
            all kernels (DESIGN.md §7).
 autotune:  measured block/tile-shape selection with a persistent on-disk

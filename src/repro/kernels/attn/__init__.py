@@ -1,0 +1,7 @@
+"""Flash-style fused attention kernels + paged-KV decode (DESIGN.md §10)."""
+from repro.kernels.attn.ops import (DEFAULT_PAGE, flash_attention, flash_ok,
+                                    identity_block_table,
+                                    paged_decode_attention, paged_decode_ok)
+
+__all__ = ["flash_attention", "paged_decode_attention", "flash_ok",
+           "paged_decode_ok", "identity_block_table", "DEFAULT_PAGE"]

@@ -1,0 +1,280 @@
+"""Flash-style fused attention Pallas kernels (DESIGN.md §10).
+
+Attention is two chained GEMMs (QKᵀ and PV) around a softmax; the paper's
+thesis — blocked operand reuse inside a tiled datapath (STA §III) — applies
+to it exactly as to the MLP GEMMs. These kernels keep the whole
+score→softmax→context chain on-chip:
+
+* **prefill** (`flash_prefill_pallas`): blocks over the KV sequence with an
+  *online softmax* — running (m, l, acc) statistics live in VMEM scratch
+  across the KV grid dimension, so the ``[B, H, T, S]`` score tensor never
+  exists in HBM (or anywhere: only one ``[block_q, block_kv]`` tile is ever
+  live). Causal + sliding-window + left-pad masking uses the same
+  qpos/kpos offset convention as ``models.attention._mask_bias``: logical
+  positions are ``absolute - start[b]``, and since both q and k shift by
+  the same per-row ``start``, the causal/window structure is invariant in
+  absolute coordinates — only the pad mask (``kpos >= 0`` ⇔
+  ``k_abs >= start[b]``) depends on it. Blocks entirely above the causal
+  diagonal or entirely outside the window are skipped (`pl.when`).
+
+* **decode** (`paged_decode_pallas`): M = GQA group size query rows
+  (M ≤ 32 — the skinny regime, `kernels.common.skinny_ok`) stay resident
+  while KV streams through the K loop in fixed-size **pages** gathered via
+  a per-row **block table** (scalar-prefetched, so the table lookup drives
+  the DMA index map — the physical page layout in HBM is arbitrary). A
+  contiguous cache is the special case of an identity block table, which
+  is how `decode_attention_apply` reuses this kernel (DESIGN.md §10).
+
+Numerics match the chunked XLA path in `models.attention`: scores
+accumulate in f32 on the MXU (operands stay in storage dtype), the
+optional logit softcap applies before masking, probabilities are cast to
+the V storage dtype for the PV matmul with f32 accumulation, and the
+final normalization divides by ``max(l, 1e-30)``.
+
+Shape contract (pad at the ops layer):
+    prefill: q [B, Hq, T, D], k/v [B, Hkv, S, D], start [B, 1] int32,
+             T % block_q == 0, S % block_kv == 0, Hq % Hkv == 0
+    decode:  q [B, Hkv, G, D], k/v pages [P, page, Hkv, D],
+             block table [B, n_log] int32, lengths/start [B] int32
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import CompilerParams, pltpu
+
+__all__ = ["flash_prefill_pallas", "paged_decode_pallas", "NEG_INF"]
+
+NEG_INF = -1e30          # same sentinel as models.attention._mask_bias
+_L_EPS = 1e-30           # matches the chunked path's combine guard
+
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(s / cap) if cap > 0 else s
+
+
+def _online_update(s, v, m_ref, l_ref, acc_ref):
+    """One online-softmax step: fold the masked score tile ``s`` [M, Skv]
+    and value tile ``v`` [Skv, D] into the running (m, l, acc) scratch."""
+    m_prev = m_ref[:, :1]                               # [M, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)                     # [M, 1]
+    p = jnp.exp(s - m_cur)                              # [M, Skv]
+    l_cur = l_ref[:, :1] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, start_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, n_kv: int, block_q: int,
+                          block_kv: int, sm_scale: float, window: int,
+                          softcap: float, out_dtype):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    qi0 = i * block_q
+    kj0 = j * block_kv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block skip: any (qpos, kpos) pair alive ⇔ kj_min <= qi_max (causal,
+    # start-invariant in absolute coordinates), kj_max inside the window,
+    # and kj_max past the row's left padding (fully-pad blocks of a ragged
+    # batch contribute nothing — the alpha washout would discard them)
+    run = kj0 <= qi0 + block_q - 1
+    run &= kj0 + block_kv - 1 >= start_ref[0, 0]
+    if window > 0:
+        run &= kj0 + block_kv - 1 > qi0 - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0]                                 # [bq, D]
+        k = k_ref[0, 0]                                 # [bkv, D]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        s = _softcap(s, softcap)
+        qi = qi0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = kj0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kj <= qi) & (kj >= start_ref[0, 0])
+        if window > 0:
+            mask &= kj > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+        _online_update(s, v_ref[0, 0], m_ref, l_ref, acc_ref)
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        l = jnp.maximum(l_ref[:, :1], _L_EPS)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_prefill_pallas(
+    q: jax.Array,                 # [B, Hq, T, D]
+    k: jax.Array,                 # [B, Hkv, S, D]
+    v: jax.Array,                 # [B, Hkv, S, D]
+    start: Optional[jax.Array] = None,    # [B, 1] int32, first real key slot
+    *,
+    sm_scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal (+ sliding window, + left-pad) flash attention over a full
+    sequence. Returns o [B, Hq, T, D] in q.dtype."""
+    b, hq, t, d = q.shape
+    _, hkv, s_len, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    assert t % block_q == 0 and s_len % block_kv == 0, (
+        f"(T={t}, S={s_len}) not divisible by blocks "
+        f"({block_q},{block_kv}); pad at the ops layer")
+    if start is None:
+        start = jnp.zeros((b, 1), jnp.int32)
+    n_q, n_kv = t // block_q, s_len // block_kv
+
+    kernel = functools.partial(
+        _flash_prefill_kernel, n_kv=n_kv, block_q=block_q,
+        block_kv=block_kv, sm_scale=sm_scale, window=window,
+        softcap=softcap, out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, j: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, j: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1), lambda bb, h, i, j: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),    # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, start)
+
+
+# ---------------------------------------------------------------------------
+# decode (paged KV)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(tab_ref, len_ref, start_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, n_log: int,
+                         page: int, sm_scale: float, window: int,
+                         softcap: float, out_dtype):
+    bb = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[bb]                                # current token's slot
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # page skip: any valid slot ⇔ page start <= length (causal), page end
+    # past the row's left padding, and, with a window, page end inside it
+    run = j * page <= length
+    run &= (j + 1) * page - 1 >= start_ref[bb]
+    if window > 0:
+        run &= (j + 1) * page - 1 > length - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0]                                 # [G, D]
+        k = k_ref[0, :, 0]                              # [page, D]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        s = _softcap(s, softcap)
+        kk = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kk <= length) & (kk >= start_ref[bb])
+        if window > 0:
+            mask &= kk > length - window
+        s = jnp.where(mask, s, NEG_INF)
+        _online_update(s, v_ref[0, :, 0], m_ref, l_ref, acc_ref)
+
+    @pl.when(j == n_log - 1)
+    def _store():
+        l = jnp.maximum(l_ref[:, :1], _L_EPS)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def paged_decode_pallas(
+    q: jax.Array,                 # [B, Hkv, G, D] — one token, grouped heads
+    k_pages: jax.Array,           # [P, page, Hkv, D] physical page pool
+    v_pages: jax.Array,           # [P, page, Hkv, D]
+    block_table: jax.Array,       # [B, n_log] int32: logical → physical page
+    lengths: jax.Array,           # [B] int32 — absolute slot of the new token
+    start: jax.Array,             # [B] int32 — first real (non-pad) slot
+    *,
+    sm_scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token decode attention over a paged KV cache. The block table is
+    scalar-prefetched so it drives the KV page DMA index map: logical page
+    ``j`` of row ``b`` is fetched from physical page ``block_table[b, j]``.
+    Returns o [B, Hkv, G, D] in q.dtype. The new token's K/V must already
+    be scattered into the pool (slot ``lengths[b]``)."""
+    b, hkv, g, d = q.shape
+    _, page, hkv2, _ = k_pages.shape
+    assert hkv2 == hkv, (k_pages.shape, q.shape)
+    n_log = block_table.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel, n_log=n_log, page=page, sm_scale=sm_scale,
+        window=window, softcap=softcap, out_dtype=q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_log),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bb, h, j, tab, ln, st: (bb, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, j, tab, ln, st: (tab[bb, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, j, tab, ln, st: (tab[bb, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, h, j, tab, ln, st: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),          # running max m
+            pltpu.VMEM((g, 128), jnp.float32),          # running sum l
+            pltpu.VMEM((g, d), jnp.float32),            # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, lengths, start, q, k_pages, v_pages)

@@ -1,0 +1,235 @@
+"""Public wrappers for the flash-attention kernels (DESIGN.md §10).
+
+`flash_attention` takes the model layout (``q [B, T, Hq, D]``,
+``k/v [B, S, Hkv, D]``), transposes to the kernel's head-major layout,
+pads T/S to the block grid (padded KV slots sit at absolute positions
+``>= S`` and are causally unreachable from any real query; padded query
+rows are sliced off), and dispatches. Block shapes default to a VMEM-aware
+heuristic; with ``REPRO_AUTOTUNE=1`` the measured autotuner picks them
+under the ``attn_flash`` op tag with `m_bucket()`-bucketed T keys (decode
+and prefill sequence lengths never share an entry, mirroring the GEMM
+wrappers).
+
+`flash_ok` is the VMEM guard: callers (``models.attention``) fall back to
+the chunked XLA path when even the smallest legal block pair would not
+fit — the kernel never partially materializes.
+
+`paged_decode_attention` wraps the block-table decode kernel; a contiguous
+cache is served by the same wrapper through an identity block table
+(`identity_block_table`), which is what makes paged-vs-contiguous decode
+bit-identical: one kernel, one page-visit order, only the physical page
+layout differs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sta import SUBLANE, VMEM_BYTES
+from repro.kernels.attn.kernel import flash_prefill_pallas, paged_decode_pallas
+from repro.kernels.attn.ref import flash_prefill_ref, paged_decode_ref
+from repro.kernels.common import default_interpret, round_up
+
+__all__ = ["flash_attention", "paged_decode_attention", "flash_ok",
+           "paged_decode_ok", "identity_block_table", "DEFAULT_PAGE"]
+
+# default KV page size (slots) when the config leaves kv_page_size unset —
+# one f32 page of 64 slots × 128 head dim is half an MXU tile per head
+DEFAULT_PAGE = 64
+
+
+def _footprint(bq: int, bkv: int, d: int, itemsize: int) -> int:
+    """Prefill VMEM working set: q/k/v tiles + score tile + (m, l, acc)
+    f32 scratch."""
+    return ((bq * d + 2 * bkv * d) * itemsize
+            + bq * bkv * 4 + bq * d * 4 + 2 * bq * 128 * 4)
+
+
+def _heuristic_blocks(t: int, s: int, d: int, itemsize: int
+                      ) -> Tuple[int, int]:
+    bq = min(128, round_up(max(t, 1), SUBLANE))
+    bkv = min(128, round_up(max(s, 1), SUBLANE))
+    while _footprint(bq, bkv, d, itemsize) > VMEM_BYTES // 2 and bkv > SUBLANE:
+        bkv //= 2
+    while _footprint(bq, bkv, d, itemsize) > VMEM_BYTES // 2 and bq > SUBLANE:
+        bq //= 2
+    return bq, bkv
+
+
+def flash_ok(t: int, s: int, d: int, itemsize: int) -> bool:
+    """Whether the flash kernel applies: the minimal legal block pair fits
+    the VMEM budget (it always does for transformer head dims; a pathologic
+    head_dim opts back into the chunked XLA path)."""
+    return _footprint(SUBLANE, SUBLANE, d, itemsize) <= VMEM_BYTES // 2
+
+
+def paged_decode_ok(page: int, d: int, itemsize: int) -> bool:
+    """VMEM guard for the decode kernel: the page is its KV tile size, and
+    unlike the prefill blocks it comes straight from user config
+    (``kv_page_size`` / ``--kv-page-size``), so an oversized page must be
+    rejected up front (contiguous decode falls back to the XLA path; the
+    paged engine refuses at pool construction) rather than failing in the
+    Mosaic lowering mid-serving. Budgeted at the worst-case resident query
+    block (SKINNY_M_MAX rows)."""
+    from repro.kernels.common import SKINNY_M_MAX
+    return _footprint(round_up(SKINNY_M_MAX, SUBLANE), page, d,
+                      itemsize) <= VMEM_BYTES // 2
+
+
+def _autotuned_blocks(t: int, s: int, d: int, dtype, window: int,
+                      softcap: float, interpret: bool, measure: bool
+                      ) -> Tuple[int, int]:
+    """Measured (block_q, block_kv) under the ``attn_flash`` op tag.
+    Candidates are the heuristic choice and its half/double neighborhood,
+    VMEM-filtered; (bq, d, bkv) triples reuse the GEMM cache machinery
+    (m = T is bucketed, so decode-shaped and prefill-shaped calls keep
+    distinct entries)."""
+    import numpy as np
+
+    from repro.kernels import autotune
+
+    itemsize = np.dtype(dtype).itemsize
+    bq0, bkv0 = _heuristic_blocks(t, s, d, itemsize)
+    cands = []
+    for fq in (1.0, 0.5, 2.0):
+        for fkv in (1.0, 0.5, 2.0):
+            bq = max(SUBLANE, min(int(bq0 * fq), round_up(max(t, 1), SUBLANE)))
+            bkv = max(SUBLANE, min(int(bkv0 * fkv),
+                                   round_up(max(s, 1), SUBLANE)))
+            bq, bkv = round_up(bq, SUBLANE), round_up(bkv, SUBLANE)
+            c = (bq, d, bkv)
+            if c not in cands and _footprint(bq, bkv, d, itemsize) \
+                    <= VMEM_BYTES // 2:
+                cands.append(c)
+    if not cands:
+        cands = [(bq0, d, bkv0)]
+
+    def make_fn(shape):
+        bq, _, bkv = shape
+        rng = np.random.default_rng(0)
+        tp, sp = round_up(t, bq), round_up(s, bkv)
+        q = jnp.asarray(rng.standard_normal((1, 1, tp, d)), dtype)
+        k = jnp.asarray(rng.standard_normal((1, 1, sp, d)), dtype)
+        v = jnp.asarray(rng.standard_normal((1, 1, sp, d)), dtype)
+        return lambda: flash_prefill_pallas(
+            q, k, v, sm_scale=1.0 / math.sqrt(d), window=window,
+            softcap=softcap, block_q=bq, block_kv=bkv, interpret=interpret)
+
+    name = "attn_flash" + ("_interp" if interpret else "")
+    tag = f"w{1 if window > 0 else 0}+sc{1 if softcap > 0 else 0}"
+    bq, _, bkv = autotune.autotune_block_shape(
+        name, t, d, s, dtype, make_fn, epilogue_tag=tag,
+        candidates=cands, itemsize=itemsize, measure=measure)
+    return bq, bkv
+
+
+def flash_attention(
+    q: jax.Array,                 # [B, T, Hq, D] (model layout)
+    k: jax.Array,                 # [B, S, Hkv, D]
+    v: jax.Array,                 # [B, S, Hkv, D]
+    start: Optional[jax.Array] = None,    # [B] int32 — first real key slot
+    *,
+    sm_scale: Optional[float] = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 0,
+    block_kv: int = 0,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    autotune: Optional[bool] = None,
+) -> jax.Array:
+    """Causal flash attention, model layout in/out ([B, T, Hq, D]).
+
+    start [B]: absolute index of the first real key per row (left-padded
+    ragged batches, DESIGN.md §5); keys below it are masked and queries
+    below it produce garbage rows the caller already ignores. The mask is
+    _mask_bias's qpos/kpos convention in absolute coordinates.
+    """
+    b, t, hq, d = q.shape
+    s_len = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = default_interpret()
+    start2 = (None if start is None
+              else jnp.asarray(start, jnp.int32).reshape(b, 1))
+    qh = jnp.moveaxis(q, 2, 1)                          # [B, Hq, T, D]
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    if not use_kernel:
+        o = flash_prefill_ref(qh, kh, vh, start2, sm_scale=sm_scale,
+                              window=window, softcap=softcap)
+        return jnp.moveaxis(o, 1, 2)
+
+    if block_q and block_kv:
+        bq, bkv = block_q, block_kv
+    else:
+        if autotune is None:
+            from repro.kernels.autotune import autotune_enabled
+            autotune = autotune_enabled()
+        if autotune:
+            measure = not isinstance(q, jax.core.Tracer)
+            bq, bkv = _autotuned_blocks(t, s_len, d, q.dtype, window,
+                                        softcap, interpret, measure)
+        else:
+            bq, bkv = _heuristic_blocks(t, s_len, d, q.dtype.itemsize)
+    tp, sp = round_up(t, bq), round_up(s_len, bkv)
+    if tp != t:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+    if sp != s_len:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, sp - s_len), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, sp - s_len), (0, 0)))
+    o = flash_prefill_pallas(qh, kh, vh, start2, sm_scale=sm_scale,
+                             window=window, softcap=softcap, block_q=bq,
+                             block_kv=bkv, interpret=interpret)
+    return jnp.moveaxis(o[:, :, :t], 1, 2)
+
+
+def identity_block_table(b: int, n_log: int) -> jax.Array:
+    """Block table mapping row ``b``'s logical page ``j`` to physical page
+    ``b * n_log + j`` — a contiguous [B, S, H, D] cache reshaped to
+    [B · n_log, page, H, D] is exactly this layout."""
+    return (jnp.arange(b, dtype=jnp.int32)[:, None] * n_log
+            + jnp.arange(n_log, dtype=jnp.int32)[None, :])
+
+
+def paged_decode_attention(
+    q: jax.Array,                 # [B, Hkv, G, D]
+    k_pages: jax.Array,           # [P, page, Hkv, D]
+    v_pages: jax.Array,           # [P, page, Hkv, D]
+    block_table: jax.Array,       # [B, n_log] int32
+    lengths: jax.Array,           # [B] int32
+    start: Optional[jax.Array] = None,    # [B] int32
+    *,
+    sm_scale: Optional[float] = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """One-token decode over a paged (or identity-table contiguous) KV
+    cache. Query rows (the GQA group, G ≤ 32 — `skinny_ok` gates upstream)
+    pad to the sublane quantum; pad rows are sliced off."""
+    b, hkv, g, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = default_interpret()
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    if not use_kernel:
+        return paged_decode_ref(q, k_pages, v_pages, block_table, lengths,
+                                start, sm_scale=sm_scale, window=window,
+                                softcap=softcap)
+    gp = round_up(g, SUBLANE)
+    qp = q if gp == g else jnp.pad(q, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    o = paged_decode_pallas(qp, k_pages, v_pages,
+                            jnp.asarray(block_table, jnp.int32), lengths,
+                            start, sm_scale=sm_scale, window=window,
+                            softcap=softcap, interpret=interpret)
+    return o[:, :, :g]

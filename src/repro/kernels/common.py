@@ -14,7 +14,8 @@ except AttributeError:  # pragma: no cover - older naming
     CompilerParams = pltpu.TPUCompilerParams  # type: ignore[attr-defined]
 
 __all__ = ["pltpu", "CompilerParams", "on_cpu", "default_interpret",
-           "cdiv", "round_up", "popcount_u32", "acc_dtype_for"]
+           "cdiv", "round_up", "popcount_u32", "acc_dtype_for",
+           "SKINNY_M_MAX", "skinny_ok", "skinny_dispatch"]
 
 
 def on_cpu() -> bool:
@@ -49,3 +50,34 @@ def acc_dtype_for(operand_dtype) -> jnp.dtype:
     if operand_dtype == jnp.int8:
         return jnp.dtype(jnp.int32)
     return jnp.dtype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# skinny (decode-shaped) dispatch guard — shared by the GEMM ops wrappers
+# and the flash-attention decode kernel's M-gate (DESIGN.md §9/§10)
+# ---------------------------------------------------------------------------
+
+# Dispatch cap: decode/serving batches. Above this the M-tiled kernels win
+# (the resident A block would crowd out weight streaming double-buffers).
+SKINNY_M_MAX = 32
+
+
+def skinny_ok(m: int, k: int, itemsize: int) -> bool:
+    """Whether the resident-row-block (skinny) regime applies: M small
+    enough and the full padded [M, K] block fits comfortably in VMEM next
+    to the streamed operand's double buffers. Used for the skinny GEMM
+    kernels (K = d_model) and as the attn decode kernel's M-gate
+    (M = GQA group size, K = head_dim)."""
+    from repro.core.sta import SUBLANE, VMEM_BYTES
+    if m > SKINNY_M_MAX:
+        return False
+    mp = round_up(max(m, 1), SUBLANE)
+    kp = round_up(max(k, 1), 128)
+    return mp * kp * itemsize <= VMEM_BYTES // 4
+
+
+def skinny_dispatch(m: int, k: int, itemsize: int, *pinned) -> bool:
+    """The guard both GEMM ops wrappers share: GEMV-shaped call (skinny
+    regime) AND no caller-pinned block shape (a nonzero pinned block opts
+    out of automatic skinny dispatch)."""
+    return not any(pinned) and skinny_ok(m, k, itemsize)

@@ -32,11 +32,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
-from repro.kernels.common import default_interpret, round_up
+from repro.kernels.common import default_interpret, round_up, skinny_dispatch
 from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
 from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
 from repro.kernels.epilogue import Epilogue, as_row
-from repro.kernels.skinny.kernel import dbb_gemm_skinny_pallas, skinny_ok
+from repro.kernels.skinny.kernel import dbb_gemm_skinny_pallas
 
 __all__ = ["dbb_gemm", "dbb_gemm_packed"]
 
@@ -144,8 +144,8 @@ def dbb_gemm(
         m = math.prod(batch) if batch else 1
         # decode fast path (DESIGN.md §9): GEMV-shaped calls stream the
         # compressed weight through the skinny kernel; pinned blocks opt out
-        skinny = (not (block_m or block_k or block_n)
-                  and skinny_ok(m, k_dim, x.dtype.itemsize))
+        skinny = skinny_dispatch(m, k_dim, x.dtype.itemsize,
+                                 block_m, block_k, block_n)
         if autotune is None:
             # caller-pinned block shapes win over the tuner (0-sentinel
             # convention, mirrors sta_gemm)

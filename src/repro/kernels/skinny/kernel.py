@@ -32,29 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.sta import SUBLANE, VMEM_BYTES
-from repro.kernels.common import (CompilerParams, acc_dtype_for, pltpu,
-                                  round_up)
+from repro.core.sta import SUBLANE
+from repro.kernels.common import (SKINNY_M_MAX, CompilerParams, acc_dtype_for,
+                                  pltpu, round_up, skinny_ok)
 from repro.kernels.dbb_gemm.kernel import _decompress_tile
 from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
 __all__ = ["SKINNY_M_MAX", "skinny_ok", "sta_gemm_skinny_pallas",
            "dbb_gemm_skinny_pallas"]
-
-# Dispatch cap: decode/serving batches. Above this the M-tiled kernels win
-# (the resident A block would crowd out weight streaming double-buffers).
-SKINNY_M_MAX = 32
-
-
-def skinny_ok(m: int, k: int, itemsize: int) -> bool:
-    """Whether the skinny path applies: M small enough and the full [M, K]
-    activation block (padded) fits comfortably in VMEM next to the weight
-    stream's double buffers."""
-    if m > SKINNY_M_MAX:
-        return False
-    mp = round_up(max(m, 1), SUBLANE)
-    kp = round_up(max(k, 1), 128)
-    return mp * kp * itemsize <= VMEM_BYTES // 4
 
 
 def _epilogue_store(o_ref, acc_ref, bias_ref, scale_ref, epilogue, out_dtype):

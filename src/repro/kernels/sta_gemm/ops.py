@@ -30,9 +30,9 @@ import jax.numpy as jnp
 
 from repro.config import StaConfig
 from repro.core.sta import SUBLANE, choose_block_shape
-from repro.kernels.common import default_interpret, round_up
+from repro.kernels.common import default_interpret, round_up, skinny_dispatch
 from repro.kernels.epilogue import Epilogue, as_row, default_out_dtype
-from repro.kernels.skinny.kernel import skinny_ok, sta_gemm_skinny_pallas
+from repro.kernels.skinny.kernel import sta_gemm_skinny_pallas
 from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
 from repro.kernels.sta_gemm.ref import sta_gemm_ref
 
@@ -173,8 +173,8 @@ def sta_gemm(
         n = w.shape[1]
         # decode fast path (DESIGN.md §9): GEMV-shaped calls go through the
         # skinny weight-streaming kernel; caller-pinned block shapes opt out
-        skinny = (not (block_m or block_k or block_n)
-                  and skinny_ok(m, k, x.dtype.itemsize))
+        skinny = skinny_dispatch(m, k, x.dtype.itemsize,
+                                 block_m, block_k, block_n)
         cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
                         block_n=block_n or 128)
         if autotune is None:

@@ -5,7 +5,10 @@ HBM residency — the paper's deployment mode), and runs batched greedy
 generation over synthetic prompts, reporting the weight-footprint saving.
 ``--requests N`` (N > batch) drives the continuous-batching scheduler
 instead of one static batch: requests admit into free slots between
-decode chunks (DESIGN.md §9).
+decode chunks (DESIGN.md §9). ``--attn-backend`` picks the attention
+implementation (flash = fused Pallas kernels, DESIGN.md §10) and
+``--kv-page-size`` / ``--kv-pool-pages`` serve through the paged KV cache
+(admission by pages actually used instead of a max_len reserve per slot).
 """
 from __future__ import annotations
 
@@ -38,9 +41,29 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["auto", "flash", "chunked", "naive"],
+                    help="attention backend override (DESIGN.md §10); "
+                         "default: the arch config's attn_impl")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="KV page size in cache slots; > 0 serves through "
+                         "the paged KV cache (block-table flash decode, "
+                         "admission by pages used)")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="physical page pool size (with --kv-page-size); "
+                         "0 = contiguous-cache HBM parity")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.attn_backend:
+        cfg = cfg.replace(attn_impl=args.attn_backend)
+    if args.kv_page_size:
+        cfg = cfg.replace(kv_page_size=args.kv_page_size)
+    elif args.kv_pool_pages and cfg.kv_page_size <= 0:
+        raise SystemExit("--kv-pool-pages only takes effect with paged "
+                         "serving (--kv-page-size, or a config that sets "
+                         "kv_page_size); without it the contiguous cache "
+                         "ignores the pool budget")
     if cfg.family == "cnn" or cfg.embeds_input or cfg.prefix_embed_len:
         raise SystemExit(f"{args.arch}: token-decoder serving only "
                          "(modality frontends are stubs)")
@@ -55,7 +78,8 @@ def main(argv=None) -> int:
               f"{packed_bytes/1e6:.1f} MB "
               f"({100*packed_bytes/dense_bytes:.1f}%)")
 
-    eng = ServeEngine(cfg, params, max_batch=args.batch)
+    eng = ServeEngine(cfg, params, max_batch=args.batch,
+                      kv_pool_pages=args.kv_pool_pages)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.batch
     prompts = [list(rng.integers(2, cfg.vocab_size,

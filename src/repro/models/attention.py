@@ -1,10 +1,18 @@
-"""GQA/MQA attention: naive path for short sequences, chunked
-(memory-efficient, flash-style) path for long prefill, cached decode path.
+"""GQA/MQA attention: fused Pallas flash path (DESIGN.md §10), chunked
+(memory-efficient) XLA path for long prefill, naive oracle, cached decode.
 
-The chunked path unrolls q-chunks in Python (static) and scans only the
-kv-chunks each q-chunk actually attends to — no wasted upper-triangle
-compute, static shapes throughout, HLO size linear in the chunk count.
-KV heads are never materialized at Hq width (GQA grouping stays factored).
+Backend dispatch (``ModelConfig.attn_impl``): the **flash** kernel blocks
+over KV with an online softmax — the ``[B, H, T, S]`` score tensor never
+materializes — and handles causal + sliding-window + ragged left-pad
+masking from the same qpos/kpos convention as `_mask_bias`, so ragged
+serving batches stay token-identical. "auto" takes it whenever the Pallas
+route is active (single device, float operands, VMEM guard passes); the
+**chunked** path unrolls q-chunks in Python and scans only the kv-chunks
+each q-chunk attends to; **naive** is the quadratic oracle. Decode routes
+through the paged flash kernel (a contiguous cache is an identity block
+table); `paged_decode_attention_apply` is the true paged-pool variant the
+continuous-batching engine scans over. KV heads are never materialized at
+Hq width (GQA grouping stays factored) on any path.
 """
 from __future__ import annotations
 
@@ -19,10 +27,14 @@ from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh
-from repro.models.common import apply_rope, linear_init, normal_init
+from repro.kernels.attn import (DEFAULT_PAGE, flash_attention, flash_ok,
+                                identity_block_table, paged_decode_attention,
+                                paged_decode_ok)
+from repro.kernels.common import skinny_ok
+from repro.models.common import apply_rope, linear_init, use_fused_gemm
 
 __all__ = ["attention_init", "attention_apply", "decode_attention_apply",
-           "init_kv_cache"]
+           "paged_decode_attention_apply", "init_kv_cache"]
 
 _NEG_INF = -1e30
 
@@ -170,18 +182,51 @@ def _chunked_causal_attention(q, k, v, cfg: ModelConfig, chunk: int):
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 
 
+def _flash_backend(cfg: ModelConfig) -> bool:
+    """Whether the fused flash kernel is the selected backend: explicit
+    ``attn_impl="flash"`` (single device only — the kernel is not
+    shard_map-aware), or "auto" with the Pallas route active (same
+    predicate as the GEMM kernels)."""
+    if cfg.attn_impl == "flash":
+        return current_mesh() is None
+    return cfg.attn_impl == "auto" and use_fused_gemm(cfg)
+
+
+def _flash_applicable(cfg: ModelConfig, q, s: int) -> bool:
+    """Backend selected AND the kernel can serve this call: float operands
+    and the VMEM guard passes (else fall back to the chunked XLA path)."""
+    return (_flash_backend(cfg)
+            and jnp.issubdtype(q.dtype, jnp.floating)
+            and flash_ok(q.shape[1], s, q.shape[-1], q.dtype.itemsize))
+
+
+def _start_from_positions(positions: jax.Array, b: int) -> jax.Array:
+    """Per-row first-real-key slot from the logical position ladder.
+    Every caller builds positions as ``arange(s) - start`` (shared or
+    per-row, DESIGN.md §5), so the leading entry recovers ``start``; for
+    plain arange ladders this is zero and the pad mask is a no-op."""
+    return jnp.broadcast_to(-positions[..., 0], (b,)).astype(jnp.int32)
+
+
 def _attention_core(q, k, v, positions, cfg: ModelConfig,
                     ragged: bool = False) -> jax.Array:
-    """Dispatch naive vs chunked on projected q/k/v. Returns o [B,S,Hq,D].
+    """Dispatch flash vs chunked vs naive on projected q/k/v. Returns
+    o [B,S,Hq,D].
 
-    ragged=True (per-row positions from a left-padded serving batch —
-    any batch size, including 1) forces the naive path with full batched
-    masking; the chunked path assumes one shared arange position ladder."""
+    The flash kernel serves every shape — ragged per-row positions ride in
+    as ``start`` offsets (same masks as `_mask_bias`, never a [B,H,T,T]
+    bias tensor). Without it, ragged=True (left-padded serving batch)
+    forces the naive oracle with full batched masking and the chunked path
+    assumes one shared arange position ladder."""
     s = q.shape[1]
+    if _flash_applicable(cfg, q, s):
+        return flash_attention(
+            q, k, v, _start_from_positions(positions, q.shape[0]),
+            window=cfg.sliding_window, softcap=cfg.attn_logit_softcap)
     if ragged:
         return _naive_attention(q, k, v, positions, positions, cfg)
     impl = cfg.attn_impl
-    if impl == "auto":
+    if impl in ("auto", "flash"):       # flash unavailable: chunked fallback
         impl = "chunked" if s > 2 * cfg.attn_chunk else "naive"
     if impl == "chunked" and s % cfg.attn_chunk == 0:
         return _chunked_causal_attention(q, k, v, cfg, cfg.attn_chunk)
@@ -352,6 +397,31 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     new_k = jax.vmap(upd)(cache_k, k, ins)
     new_v = jax.vmap(upd)(cache_v, v, ins)
 
+    # flash decode (DESIGN.md §10): the updated contiguous cache is a paged
+    # pool under an identity block table — same kernel, same page-visit
+    # order as the true paged pool, which is what makes paged serving
+    # bit-identical to contiguous. Gated on the skinny regime (G query
+    # rows resident) and a page size that tiles the cache exactly; with
+    # kv_page_size unset the page adapts to the cache length (largest
+    # power-of-two divisor up to DEFAULT_PAGE) so arbitrary generate()/
+    # serve() cache sizes still take the kernel.
+    page = cfg.kv_page_size or math.gcd(smax, DEFAULT_PAGE)
+    if (not ring and _flash_backend(cfg)
+            and jnp.issubdtype(x.dtype, jnp.floating)
+            and skinny_ok(g, hd, new_k.dtype.itemsize)
+            and paged_decode_ok(page, hd, new_k.dtype.itemsize)
+            and page >= 8 and smax % page == 0):
+        window = (cfg.sliding_window if window_override is None
+                  else window_override)
+        n_log = smax // page
+        kp = new_k.reshape(b * n_log, page, hkv, hd)
+        vp = new_v.reshape(b * n_log, page, hkv, hd)
+        o = paged_decode_attention(
+            q.reshape(b, hkv, g, hd), kp, vp, identity_block_table(b, n_log),
+            lengths, start, window=window, softcap=cfg.attn_logit_softcap)
+        o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+        return _lin(p["o_proj"], o), new_k, new_v
+
     qg = q.reshape(b, 1, hkv, g, hd)
     sc = _scores(qg, new_k, cfg)                     # [B,H,G,1,Smax]
     kpos = jnp.arange(smax)[None, :]                 # [1, Smax]
@@ -372,3 +442,45 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
     y = _lin(p["o_proj"], o)
     return y, new_k, new_v
+
+
+def paged_decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                                 k_pages: jax.Array, v_pages: jax.Array,
+                                 block_table: jax.Array, lengths: jax.Array,
+                                 window_override: Optional[int] = None,
+                                 start: Optional[jax.Array] = None,
+                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a paged KV pool (DESIGN.md §10): x [B, 1, d];
+    k_pages/v_pages [P, page, Hkv, D]; block_table [B, n_log] maps each
+    row's logical pages to physical pool pages. Returns
+    (y, new_k_pages, new_v_pages).
+
+    Same per-row contract as `decode_attention_apply`: ``lengths`` is the
+    absolute cache slot of the new token, ``start`` the first real slot of
+    a left-padded row. The new K/V scatter resolves the owning physical
+    page through the table; rows whose table points at the reserved dummy
+    page (retired slots still stepping inside a decode chunk) write there
+    harmlessly, and the logical page index clamps so overshoot never runs
+    off the table (mirroring the contiguous cache's clamped
+    dynamic_update_slice)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    page = k_pages.shape[1]
+    n_log = block_table.shape[1]
+    rope_pos = lengths if start is None else lengths - start
+    q, k, v = _project_qkv(p, cfg, x, rope_pos[:, None])
+
+    logp = jnp.clip(lengths // page, 0, n_log - 1)
+    phys = jnp.take_along_axis(block_table, logp[:, None], axis=1)[:, 0]
+    off = lengths % page
+    new_kp = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    new_vp = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+
+    window = (cfg.sliding_window if window_override is None
+              else window_override)
+    o = paged_decode_attention(
+        q.reshape(b, hkv, g, hd), new_kp, new_vp, block_table, lengths,
+        start, window=window, softcap=cfg.attn_logit_softcap)
+    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+    return _lin(p["o_proj"], o), new_kp, new_vp

@@ -325,21 +325,43 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
 
     start = cache.get("start")
 
-    def body(x, xs):
-        lp, ck, cv = xs
-        lp = _unpack_layer(lp, cfg)
-        h = norm_apply(cfg.norm, lp["ln_attn"], x)
-        y, nk, nv = attn.decode_attention_apply(lp["attn"], cfg, h, ck, cv,
-                                                cache["length"], start=start)
-        x = x + y
-        h = norm_apply(cfg.norm, lp["ln_mlp"], x)
-        if cfg.family == "moe_lm":
-            z, _ = moe_apply(lp["moe"], cfg, h)
-            x = x + z
-        else:
-            x = x + mlp_apply(lp["mlp"], cfg, h)
-        return x, (nk, nv)
+    def make_body(attn_call):
+        """One decode layer body; the KV layout (contiguous vs paged,
+        DESIGN.md §10) only changes the attention call, so both cache
+        layouts share this block and cannot drift."""
+        def body(x, xs):
+            lp, ck, cv = xs
+            lp = _unpack_layer(lp, cfg)
+            h = norm_apply(cfg.norm, lp["ln_attn"], x)
+            y, nk, nv = attn_call(lp, h, ck, cv)
+            x = x + y
+            h = norm_apply(cfg.norm, lp["ln_mlp"], x)
+            if cfg.family == "moe_lm":
+                z, _ = moe_apply(lp["moe"], cfg, h)
+                x = x + z
+            else:
+                x = x + mlp_apply(lp["mlp"], cfg, h)
+            return x, (nk, nv)
+        return body
 
+    if "k_pages" in cache:
+        # paged KV cache (DESIGN.md §10): per-layer page pools scan with
+        # the layer stack; the block table / lengths / starts are
+        # row-indexed and shared across layers (one allocation serves all
+        # L pools at the same physical page index)
+        table = cache["block_table"]
+        body = make_body(lambda lp, h, kp, vp: attn.paged_decode_attention_apply(
+            lp["attn"], cfg, h, kp, vp, table, cache["length"], start=start))
+        x, (nkp, nvp) = jax.lax.scan(
+            body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        return x, {"k_pages": nkp, "v_pages": nvp, "block_table": table,
+                   "length": cache["length"] + 1,
+                   "start": (start if start is not None
+                             else jnp.zeros_like(cache["length"]))}
+
+    body = make_body(lambda lp, h, ck, cv: attn.decode_attention_apply(
+        lp["attn"], cfg, h, ck, cv, cache["length"], start=start))
     x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
                                          cache["v"]))
     x = norm_apply(cfg.norm, params["final_norm"], x)

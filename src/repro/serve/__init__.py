@@ -1,4 +1,7 @@
 from repro.serve.engine import (ServeEngine, make_decode_step,
                                 make_prefill_step)
+from repro.serve.kv_cache import (PageAllocator, init_paged_cache,
+                                  pages_needed)
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step"]
+__all__ = ["ServeEngine", "make_decode_step", "make_prefill_step",
+           "PageAllocator", "init_paged_cache", "pages_needed"]

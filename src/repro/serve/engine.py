@@ -22,7 +22,12 @@ scheduler on top of the same decode step: requests are admitted into free
 slots between decode chunks (per-slot prefill scattered into the shared
 cache), finished rows retire immediately, and every request decodes
 token-identically to running solo (per-row lengths/start offsets,
-DESIGN.md §5/§9).
+DESIGN.md §5/§9). With ``cfg.kv_page_size > 0`` serve() switches to the
+**paged KV cache** (DESIGN.md §10): KV lives in a fixed-size page pool,
+requests admit with the pages they actually use (first-fit over the
+queue) instead of reserving ``smax`` slots each, and decode runs the
+block-table flash kernel — bit-identical tokens to the contiguous cache
+at far higher occupancy per HBM byte.
 
 `make_decode_step` / `make_prefill_step` produce the exact functions the
 multi-pod dry-run lowers for the ``decode_*`` / ``prefill_*`` / ``long_*``
@@ -176,6 +181,17 @@ class ServeEngine:
     max_batch: int = 8
     eos_id: int = 1
     fetch_chunk: int = 8
+    # paged KV (DESIGN.md §10): physical page pool size for serve() when
+    # ``cfg.kv_page_size > 0``. 0 = parity with the contiguous cache's HBM
+    # footprint (max_batch · n_log pages, + the reserved dummy); set it
+    # explicitly to serve against a fixed HBM budget — admission then packs
+    # as many requests as their *used* pages allow.
+    kv_pool_pages: int = 0
+    # None: serve() pages iff cfg.kv_page_size > 0. False pins the
+    # contiguous scheduler while keeping kv_page_size as the flash decode
+    # kernel's KV tile — the identity-block-table control the paged-vs-
+    # contiguous bit-equivalence suite compares against.
+    paged: Optional[bool] = None
 
     def __post_init__(self):
         # hoisted non-layer decompression: pay the embed/LM-head DBB
@@ -190,6 +206,9 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_raw, donate_argnums=1)
         self._chunk_fns: Dict[int, Any] = {}
         self._admit = jax.jit(self._admit_fn, donate_argnums=0)
+        self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
+        # filled by the paged serve() scheduler (occupancy benchmarking)
+        self.serve_stats: Dict[str, int] = {}
 
     # -- decode chunks: N steps per host round-trip -----------------------
 
@@ -291,6 +310,30 @@ class ServeEngine:
                 new[key] = leaf.at[:, slot].set(cache_one[key][:, 0])
         return new, cur.at[slot].set(tok), done.at[slot].set(False)
 
+    @staticmethod
+    def _admit_paged_fn(cache, cache_one, cur, done, table_row, slot, tok):
+        """Paged admission (DESIGN.md §10): scatter the single-row
+        contiguous prefill cache into the physical page pool at the pages
+        named by ``table_row`` [n_log] and install the table row at
+        ``slot``. Unallocated tail entries of the row point at the
+        reserved dummy page — their scatter writes (and any later
+        overshoot writes of this slot) land there harmlessly. Traced row /
+        slot / token: one compilation serves every admission."""
+        n_log = cache["block_table"].shape[1]
+        page = cache["k_pages"].shape[2]
+        k1 = cache_one["k"]                          # [L, 1, smax, H, D]
+        L, _, smax, h, d = k1.shape
+        kpg = k1.reshape(L, n_log, page, h, d)
+        vpg = cache_one["v"].reshape(L, n_log, page, h, d)
+        new = {
+            "k_pages": cache["k_pages"].at[:, table_row].set(kpg),
+            "v_pages": cache["v_pages"].at[:, table_row].set(vpg),
+            "block_table": cache["block_table"].at[slot].set(table_row),
+            "length": cache["length"].at[slot].set(cache_one["length"][0]),
+            "start": cache["start"].at[slot].set(cache_one["start"][0]),
+        }
+        return new, cur.at[slot].set(tok), done.at[slot].set(False)
+
     def serve(self, prompts: List[List[int]],
               max_new_tokens: Union[int, Sequence[int]] = 16,
               fetch_chunk: Optional[int] = None,
@@ -331,12 +374,47 @@ class ServeEngine:
         # bucket the cache length too: serve() calls with nearby budgets
         # must reuse one compiled chunk scan / admit scatter / prefill
         smax = _bucket_len(max(blens) + max(budgets), prompt_bucket)
-        cache = registry.init_cache(self.cfg, self.max_batch, smax)
-        cache["start"] = jnp.zeros((self.max_batch,), jnp.int32)
+        if self.cfg.kv_page_size > 0:
+            # page-align smax for BOTH schedulers: the contiguous flash
+            # decode gate needs smax % page == 0, and a contiguous engine
+            # on an unaligned smax would silently take the XLA softmax
+            # path while the paged engine runs the kernel — breaking the
+            # paged-vs-contiguous bit-identity contract (DESIGN.md §10)
+            page = self.cfg.kv_page_size
+            smax = -(-smax // page) * page
+        use_paged = (self.cfg.kv_page_size > 0 if self.paged is None
+                     else self.paged)
+        if use_paged:
+            reason = _paged_unsupported_reason(self.cfg)
+            if reason:
+                # the paged branch decodes through the flash kernel
+                # unconditionally — honor a config it cannot serve by
+                # falling back to the contiguous scheduler instead of
+                # silently overriding the user's backend choice
+                import warnings
+                warnings.warn(f"paged KV serving unavailable ({reason}) — "
+                              "falling back to the contiguous scheduler",
+                              stacklevel=2)
+                use_paged = False
+        backend = (_PagedKvBackend(self, smax) if use_paged
+                   else _ContiguousKvBackend(self, smax))
+        return self._serve_loop(prompts, budgets, blens, smax, chunk,
+                                backend)
+
+    def _serve_loop(self, prompts: List[List[int]], budgets: List[int],
+                    blens: List[int], smax: int, chunk: int, backend
+                    ) -> List[List[int]]:
+        """The one continuous-batching scheduler both KV layouts share.
+        The backend only decides how cache space is reserved and where
+        admissions scatter (contiguous slots vs allocated pages) — token
+        accounting, chunk decode, and retirement live here once, so the
+        two layouts cannot drift apart (their token streams are asserted
+        bit-identical, DESIGN.md §10)."""
+        cache = backend.init_cache()
         cur = jnp.zeros((self.max_batch,), jnp.int32)
         done = jnp.ones((self.max_batch,), bool)
         outs: List[List[int]] = [[] for _ in prompts]
-        queue = deque(range(n_req))
+        queue = deque(range(len(prompts)))
         free = list(range(self.max_batch))
         active: Dict[int, int] = {}                  # slot -> request idx
         left: Dict[int, int] = {}                    # request idx -> budget
@@ -345,8 +423,11 @@ class ServeEngine:
         # prefill never donates it, so the template stays pristine)
         c1_template = registry.init_cache(self.cfg, 1, smax)
 
-        def admit(slot: int, ridx: int) -> bool:
+        def admit(slot: int, ridx: int):
             nonlocal cache, cur, done
+            grant = backend.reserve(ridx, blens[ridx], budgets[ridx])
+            if grant is None:
+                return "defer"                       # wait for retirements
             p, bl = prompts[ridx], blens[ridx]
             toks = np.zeros((1, bl), np.int32)
             toks[0, bl - len(p):] = p                # left-pad to bucket
@@ -356,24 +437,41 @@ class ServeEngine:
             tok = int(jax.device_get(nxt1)[0])       # first generated token
             outs[ridx].append(tok)
             if tok == self.eos_id or budgets[ridx] <= 1:
+                backend.release(grant)
                 return False                         # finished at prefill
-            cache, cur, done = self._admit(cache, c1, cur, done,
-                                           jnp.int32(slot), nxt1[0])
+            cache, cur, done = backend.admit(cache, c1, cur, done, slot,
+                                             nxt1[0], grant)
             active[slot] = ridx
             left[ridx] = budgets[ridx] - 1
             return True
 
         while queue or active:
-            # admission happens between decode chunks: fill every free slot
+            # first-fit admission between decode chunks: a request whose
+            # reservation doesn't fit yet is skipped (kept in arrival
+            # order), not head-of-line blocking — short requests backfill
+            # slots behind a deferred long one. The contiguous backend
+            # always grants, which degenerates to plain FIFO fill.
+            skipped: List[int] = []
             while queue and free:
                 ridx = queue.popleft()
                 if budgets[ridx] <= 0:
                     continue
                 slot = free.pop()
-                if not admit(slot, ridx):
+                r = admit(slot, ridx)
+                if r == "defer":
                     free.append(slot)
+                    skipped.append(ridx)
+                    backend.stats["deferred_admissions"] += 1
+                    continue
+                if not r:
+                    free.append(slot)
+            queue.extendleft(reversed(skipped))
             if not active:
+                if queue:        # deferred with nothing left to retire
+                    backend.starved(queue[0], blens, budgets)
                 continue
+            backend.stats["peak_active"] = max(
+                backend.stats["peak_active"], len(active))
             # fixed-size chunks (one compiled scan); rows that hit EOS or
             # their budget mid-chunk have their surplus tokens discarded
             # below and retire at the chunk boundary
@@ -392,4 +490,145 @@ class ServeEngine:
                 del active[slot]
                 free.append(slot)
                 done = done.at[slot].set(True)
+                cache = backend.retire(cache, slot)
+        self.serve_stats = backend.stats
         return outs
+
+
+# ---------------------------------------------------------------------------
+# serve() KV backends: how cache space is reserved and admissions scatter
+# ---------------------------------------------------------------------------
+
+def _paged_unsupported_reason(cfg: ModelConfig) -> str:
+    """Why the paged scheduler cannot serve this config (empty = it can).
+    Its decode branch runs the flash kernel unconditionally, so it is
+    only offered when the flash backend is what the contiguous engine
+    would run too (same `_flash_backend` predicate — anything else, e.g.
+    a pinned XLA oracle or the default xla GEMM route, would void the
+    paged-vs-contiguous bit-identity contract) and when the GQA group
+    passes the kernel's resident-query gate."""
+    from repro.kernels.common import SKINNY_M_MAX, skinny_ok
+    from repro.models.attention import _flash_backend
+    if not _flash_backend(cfg):
+        return (f"flash attention backend inactive (attn_impl="
+                f"{cfg.attn_impl!r}, gemm_impl={cfg.gemm_impl!r}; needs "
+                "attn_impl='flash', or 'auto' with the single-device "
+                "Pallas route)")
+    g = cfg.num_heads // max(1, cfg.num_kv_heads)
+    if not skinny_ok(g, cfg.resolved_head_dim,
+                     jnp.dtype(cfg.dtype).itemsize):
+        return (f"GQA group size {g} exceeds the decode kernel's "
+                f"resident-query gate (SKINNY_M_MAX={SKINNY_M_MAX})")
+    return ""
+
+
+class _ContiguousKvBackend:
+    """Classic layout: every slot owns a reserved [smax] stripe of the
+    shared cache. Reservations always succeed (slot availability is the
+    only resource, and `_serve_loop` hands us a free slot)."""
+
+    def __init__(self, eng: "ServeEngine", smax: int):
+        self.eng = eng
+        self.smax = smax
+        self.stats: Dict[str, int] = {"peak_active": 0,
+                                      "deferred_admissions": 0}
+
+    def init_cache(self):
+        cache = registry.init_cache(self.eng.cfg, self.eng.max_batch,
+                                    self.smax)
+        cache["start"] = jnp.zeros((self.eng.max_batch,), jnp.int32)
+        return cache
+
+    def reserve(self, ridx: int, blen: int, budget: int):
+        return ()                                    # always grants
+
+    def release(self, grant) -> None:
+        pass
+
+    def admit(self, cache, c1, cur, done, slot: int, tok, grant):
+        return self.eng._admit(cache, c1, cur, done, jnp.int32(slot), tok)
+
+    def retire(self, cache, slot: int):
+        return cache                                 # slot stripe just idles
+
+    def starved(self, ridx: int, blens, budgets) -> None:
+        raise AssertionError("contiguous reservations cannot defer")
+
+
+class _PagedKvBackend:
+    """Paged layout (DESIGN.md §10): requests reserve
+    ``ceil((prompt + budget) / page)`` pages from a shared pool instead of
+    an smax stripe, so a fixed HBM budget packs requests by what they
+    actually use. Deferred reservations wait for retirements to free
+    pages; retirement also points the slot's block table at the reserved
+    dummy page so the retired-but-still-stepping row's overshoot writes
+    land harmlessly instead of corrupting recycled pages."""
+
+    def __init__(self, eng: "ServeEngine", smax: int):
+        from repro.kernels.attn import paged_decode_ok
+        from repro.serve.kv_cache import PageAllocator
+        cfg = eng.cfg
+        self.eng = eng
+        self.smax = smax
+        self.page = cfg.kv_page_size
+        assert self.page > 0, "paged serving needs cfg.kv_page_size > 0"
+        if self.page < 8:
+            # the contiguous flash-decode gate (attention.py) rejects
+            # sub-sublane pages; accepting them here would put the two
+            # schedulers on different numeric paths
+            raise ValueError(
+                f"kv_page_size={self.page} below the minimum page of 8 "
+                "slots (sublane quantum)")
+        if not paged_decode_ok(self.page, cfg.resolved_head_dim,
+                               jnp.dtype(cfg.dtype).itemsize):
+            raise ValueError(
+                f"kv_page_size={self.page} makes a KV page tile that "
+                "cannot fit the decode kernel's VMEM budget — lower it")
+        self.n_log = smax // self.page
+        self.pool_pages = (eng.kv_pool_pages
+                           or (eng.max_batch * self.n_log + 1))
+        self.alloc = PageAllocator(self.pool_pages)
+        self.slot_pages: Dict[int, List[int]] = {}   # slot -> phys pages
+        self.stats: Dict[str, int] = {
+            "peak_active": 0, "deferred_admissions": 0,
+            "pool_pages": self.pool_pages, "page": self.page,
+            "n_log": self.n_log}
+
+    def init_cache(self):
+        from repro.serve.kv_cache import init_paged_cache
+        return init_paged_cache(self.eng.cfg, self.eng.max_batch,
+                                self.pool_pages, self.page, self.n_log)
+
+    def reserve(self, ridx: int, blen: int, budget: int):
+        from repro.serve.kv_cache import pages_needed
+        need = pages_needed(blen, budget, self.page)
+        if need > self.pool_pages - 1:
+            raise RuntimeError(
+                f"request {ridx} needs {need} pages; pool has "
+                f"{self.pool_pages - 1} usable — raise kv_pool_pages")
+        return self.alloc.alloc(need)                # None = defer
+
+    def release(self, grant: List[int]) -> None:
+        self.alloc.free(grant)
+
+    def admit(self, cache, c1, cur, done, slot: int, tok,
+              grant: List[int]):
+        row = np.zeros((self.n_log,), np.int32)      # tail -> dummy page
+        row[:len(grant)] = grant
+        self.slot_pages[slot] = grant
+        return self.eng._admit_paged(cache, c1, cur, done,
+                                     jnp.asarray(row), jnp.int32(slot), tok)
+
+    def retire(self, cache, slot: int):
+        self.alloc.free(self.slot_pages.pop(slot))
+        # stale decode writes of this still-stepping slot must not touch
+        # the recycled pages: point its table at the dummy
+        cache["block_table"] = cache["block_table"].at[slot].set(0)
+        return cache
+
+    def starved(self, ridx: int, blens, budgets) -> None:
+        from repro.serve.kv_cache import pages_needed
+        raise RuntimeError(
+            f"request {ridx} cannot be admitted: needs "
+            f"{pages_needed(blens[ridx], budgets[ridx], self.page)} "
+            f"pages, pool has {self.alloc.free_pages} free")

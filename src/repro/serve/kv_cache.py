@@ -1,0 +1,101 @@
+"""Paged KV cache: fixed-size pages, free-list allocation, per-row block
+tables (DESIGN.md §10).
+
+The contiguous decode cache reserves ``max_len`` slots for every batch
+slot, so continuous-batching occupancy is capped by the *longest possible*
+request: HBM holds ``B · smax`` KV slots of which a short request uses a
+sliver. The paged cache splits KV storage into a pool of fixed-size pages
+(``[L, P, page, Hkv, D]``) shared by all slots; a request is admitted with
+exactly ``ceil((prompt + budget) / page)`` pages and a block table row
+mapping its logical pages to wherever the allocator placed them. At a
+fixed HBM budget, max concurrent rows grows from ``budget / smax_bytes``
+to ``budget / used_bytes`` per request — the occupancy win measured by
+``benchmarks/attn_paged.py``.
+
+Physical **page 0 is a reserved dummy**: unallocated block-table entries
+point at it, so the traced admission scatter (fixed ``n_log`` width) and
+the clamped overshoot writes of retired-but-still-stepping slots (see
+`ServeEngine.serve`) land harmlessly there instead of corrupting a live
+row. The dummy is never read as valid context — every read is masked by
+the owning row's ``length``/``start``, and live rows never map to it.
+
+`PageAllocator` is deliberately host-side Python (admission happens
+between decode chunks on the host anyway); only the pool, tables, and
+lengths live on device.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+__all__ = ["PageAllocator", "init_paged_cache", "pages_needed", "DUMMY_PAGE"]
+
+DUMMY_PAGE = 0
+
+
+def pages_needed(prompt_len: int, budget: int, page: int) -> int:
+    """Pages a request touches: prompt slots (pads included — prefill
+    writes them, masked) plus one slot per generated token (the first
+    token comes from prefill; decode writes at slots
+    ``prompt .. prompt + budget - 1``)."""
+    return -(-(prompt_len + max(budget, 1)) // page)
+
+
+class PageAllocator:
+    """Free-list allocator over the physical page pool. Page 0 (the dummy)
+    is never handed out. Pages are recycled LIFO so a recently-retired
+    request's pages (still warm in cache hierarchies that have one) go to
+    the next admission."""
+
+    def __init__(self, total_pages: int):
+        assert total_pages >= 2, "pool needs the dummy page plus one"
+        self.total_pages = total_pages
+        self._free: List[int] = list(range(total_pages - 1, DUMMY_PAGE, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.total_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n physical page ids, or None if the pool can't cover them (the
+        caller defers admission until retirements free pages)."""
+        if n > len(self._free):
+            return None
+        got = self._free[-n:]
+        del self._free[-n:]
+        return got
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != DUMMY_PAGE, "dummy page is never allocated"
+        self._free.extend(pages)
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, pool_pages: int,
+                     page: int, n_log: int) -> Dict:
+    """Device-side paged decode cache.
+
+    k_pages/v_pages: [L, P, page, Hkv, D] physical pools (page 0 = dummy).
+    block_table:     [n_slots, n_log] int32, logical → physical page
+                     (unadmitted/retired rows point wholly at the dummy).
+    length/start:    per-slot absolute context length and first real slot,
+                     same contract as the contiguous cache (DESIGN.md §5).
+    """
+    from repro.models.common import dtype_of
+    dtype = dtype_of(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "k_pages": jnp.zeros((L, pool_pages, page, hkv, hd), dtype),
+        "v_pages": jnp.zeros((L, pool_pages, page, hkv, hd), dtype),
+        "block_table": jnp.zeros((n_slots, n_log), jnp.int32),
+        "length": jnp.zeros((n_slots,), jnp.int32),
+        "start": jnp.zeros((n_slots,), jnp.int32),
+    }
