@@ -1,0 +1,206 @@
+"""Dispatch-quality benchmark: auto route vs every forced route (§11).
+
+For each shape in a decode / prefill / conv grid the harness asks the
+registry for its route table (`dispatch.explain`), runs **auto** dispatch
+and every **forced** applicable route on the same operands, and records
+best-of-N wall clock per route. The headline number per shape is
+
+    auto_vs_best = auto_time / min(forced_times)
+
+If auto leaves > ``REGRESSION_RTOL`` (10%) of wall clock on the table —
+i.e. a forced route is more than 10% faster than what the cost model
+picked — the row is flagged ``regression`` and `run()` counts it. On the
+CPU interpret backend kernel timings are correctness-grade only, so
+regressions WARN rather than fail (mirroring fused_epilogue.py); numerical
+parity between every forced route and auto is asserted strictly either
+way. The per-shape ``table`` field carries the explain() rows (modeled
+cost, flops, bytes, applicability reasons) so BENCH_dispatch.json shows
+*why* each route was ranked where it was.
+
+Run:  PYTHONPATH=src python -m benchmarks.dispatch_routes [--fast]
+(benchmarks.run wires this into BENCH_dispatch.json; CI smoke-runs it.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REGRESSION_RTOL = 0.10
+
+# (tag, m, k, n, packed) — decode / prefill regimes across the GEMM grid;
+# head_gemv rows carry the gemv hint greedy_from_hidden uses in production
+# (skinny at B <= 32, xla above — both regimes measured)
+SHAPES = [
+    ("decode_dense", 4, 1024, 1024, False),
+    ("decode_packed", 4, 1024, 1024, True),
+    ("prefill_dense", 512, 512, 1024, False),
+    ("prefill_packed", 512, 512, 1024, True),
+    ("head_gemv", 8, 512, 8192, False),
+    ("head_gemv_large", 48, 512, 8192, False),
+]
+FAST_SHAPES = [
+    ("decode_dense", 4, 256, 256, False),
+    ("decode_packed", 4, 256, 256, True),
+    ("prefill_dense", 128, 128, 256, False),
+    ("prefill_packed", 128, 128, 256, True),
+    ("head_gemv", 8, 128, 1024, False),
+    ("head_gemv_large", 48, 128, 1024, False),
+]
+# (tag, batch, img, cin, cout, k) — cout lane-aligned so the implicit
+# kernel is the modeled winner (degenerate cout pads N 4x+ and the table
+# rightly hands those to the im2col oracle)
+CONV_SHAPES = [("conv_dense", 2, 16, 32, 128, 3),
+               ("conv_packed", 2, 16, 32, 128, 3)]
+FAST_CONV_SHAPES = [("conv_dense", 1, 8, 16, 128, 3),
+                    ("conv_packed", 1, 8, 16, 128, 3)]
+
+
+def _best_of(fn, n: int = 3) -> float:
+    jax.block_until_ready(fn())            # compile + warmup
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _table_rows(decisions):
+    return [{"route": d.name, "applicable": d.applicable,
+             "reason": d.reason, "chosen": d.chosen,
+             "cost_s": d.cost_s, "flops": d.flops, "bytes": d.bytes}
+            for d in decisions]
+
+
+def bench_matmul(tag, m, k, n, packed, repeats=3) -> dict:
+    from repro.core.dbb import pack_dbb
+    from repro.kernels import dispatch
+
+    # head-GEMV rows measure the exact dispatch greedy_from_hidden issues
+    gemv = tag.startswith("head_gemv")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w_dense = jax.random.normal(jax.random.fold_in(key, 1), (k, n),
+                                jnp.float32)
+    w = pack_dbb(w_dense, 8, 4) if packed else w_dense
+    bias = jnp.ones((n,), jnp.float32)
+
+    # epilogue_ops mirrors the dispatch.matmul call below (bias + relu):
+    # the table must describe the dispatch it is compared against
+    decisions = dispatch.explain("matmul", m=m, k=k, n=n, packed=packed,
+                                 pallas=True, gemv=gemv, epilogue_ops=2)
+    auto_fn = jax.jit(lambda: dispatch.matmul(x, w, bias, act="relu",
+                                              pallas=True, gemv=gemv))
+    ref = np.asarray(auto_fn())
+    auto_t = _best_of(auto_fn, repeats)
+
+    forced = {}
+    for d in decisions:
+        if not d.applicable:
+            continue
+        fn = jax.jit(lambda name=d.name: dispatch.matmul(
+            x, w, bias, act="relu", pallas=True, gemv=gemv, route=name))
+        got = np.asarray(fn())
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{tag}:{d.name}")
+        forced[d.name] = _best_of(fn, repeats)
+
+    best_name = min(forced, key=forced.get)
+    ratio = auto_t / forced[best_name]
+    return {
+        "tag": tag, "m": m, "k": k, "n": n, "packed": packed,
+        "auto_route": next(d.name for d in decisions if d.chosen),
+        "auto_s": auto_t, "forced_s": forced,
+        "best_forced": best_name, "auto_vs_best": ratio,
+        "regression": ratio > 1.0 + REGRESSION_RTOL,
+        "table": _table_rows(decisions),
+    }
+
+
+def bench_conv(tag, b, img, cin, cout, kk, repeats=3) -> dict:
+    from repro.core.dbb import pack_dbb
+    from repro.kernels import dispatch
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, img, img, cin), jnp.float32)
+    w_dense = jax.random.normal(jax.random.fold_in(key, 1),
+                                (kk * kk * cin, cout), jnp.float32)
+    packed = tag.endswith("packed")
+    w = pack_dbb(w_dense, 8, 4) if packed else w_dense
+    bias = jnp.ones((cout,), jnp.float32)
+
+    decisions = dispatch.explain(
+        "conv", m=b * img * img, k=kk * kk * cin, n=cout, packed=packed,
+        pallas=True, conv_geom=(b, img, img, cin, kk, kk, 1),
+        epilogue_ops=2)
+    auto_fn = jax.jit(lambda: dispatch.conv(x, w, bias, kh=kk, kw=kk,
+                                            act="relu"))
+    ref = np.asarray(auto_fn())
+    auto_t = _best_of(auto_fn, repeats)
+
+    forced = {}
+    for d in decisions:
+        if not d.applicable:
+            continue
+        fn = jax.jit(lambda name=d.name: dispatch.conv(
+            x, w, bias, kh=kk, kw=kk, act="relu", route=name))
+        got = np.asarray(fn())
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{tag}:{d.name}")
+        forced[d.name] = _best_of(fn, repeats)
+
+    best_name = min(forced, key=forced.get)
+    ratio = auto_t / forced[best_name]
+    return {
+        "tag": tag, "b": b, "img": img, "cin": cin, "cout": cout, "k": kk,
+        "auto_route": next(d.name for d in decisions if d.chosen),
+        "auto_s": auto_t, "forced_s": forced,
+        "best_forced": best_name, "auto_vs_best": ratio,
+        "regression": ratio > 1.0 + REGRESSION_RTOL,
+        "table": _table_rows(decisions),
+    }
+
+
+def run(fast: bool = False) -> dict:
+    shapes = FAST_SHAPES if fast else SHAPES
+    conv_shapes = FAST_CONV_SHAPES if fast else CONV_SHAPES
+    rows = []
+    for tag, m, k, n, packed in shapes:
+        r = bench_matmul(tag, m, k, n, packed)
+        rows.append(r)
+        print(f"{tag:16s} auto={r['auto_route']:<12s} "
+              f"{r['auto_s'] * 1e3:8.2f} ms  best_forced="
+              f"{r['best_forced']:<12s} ratio={r['auto_vs_best']:.3f}"
+              f"{'  REGRESSION' if r['regression'] else ''}")
+    for tag, b, img, cin, cout, kk in conv_shapes:
+        r = bench_conv(tag, b, img, cin, cout, kk)
+        rows.append(r)
+        print(f"{tag:16s} auto={r['auto_route']:<12s} "
+              f"{r['auto_s'] * 1e3:8.2f} ms  best_forced="
+              f"{r['best_forced']:<12s} ratio={r['auto_vs_best']:.3f}"
+              f"{'  REGRESSION' if r['regression'] else ''}")
+
+    regressions = [r["tag"] for r in rows if r["regression"]]
+    if regressions:
+        # interpret-mode timing noise is not a regression signal (see
+        # fused_epilogue.py); on TPU this is where auto-dispatch quality
+        # shows up run-over-run in BENCH_dispatch.json
+        print(f"WARNING: auto leaves >{REGRESSION_RTOL:.0%} on the table "
+              f"for {regressions} (interpret-mode timings)")
+    else:
+        print("auto dispatch within tolerance of best forced route on "
+              "every shape")
+    return {"rows": rows, "regressions": regressions,
+            "regression_rtol": REGRESSION_RTOL,
+            "backend": jax.default_backend()}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    run(fast=args.fast)

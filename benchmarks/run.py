@@ -6,11 +6,13 @@ Every section returns a JSON-serializable dict; the kernel-perf sections
 (implicit-GEMM conv A/B + fused-epilogue A/B) are written to
 ``BENCH_conv.json``, the decode/serving section (continuous batching
 vs the per-token static loop + packed-weight residency, DESIGN.md §9) to
-``BENCH_decode.json``, and the attention section (flash vs chunked +
-paged-KV occupancy, DESIGN.md §10) to ``BENCH_attn.json`` so the perf
-trajectory is machine-readable run-over-run (CI runs ``--smoke``, which
-executes only those sections on reduced shapes and still emits all three
-files).
+``BENCH_decode.json``, the attention section (flash vs chunked +
+paged-KV occupancy, DESIGN.md §10) to ``BENCH_attn.json``, and the
+kernel-dispatch section (auto vs forced routes across the decode/
+prefill/conv shape grid, DESIGN.md §11) to ``BENCH_dispatch.json`` so
+the perf trajectory is machine-readable run-over-run (CI runs
+``--smoke``, which executes only those sections on reduced shapes and
+still emits all four files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -30,6 +32,8 @@ _PERF_SECTIONS = ("conv_gemm", "fused_epilogue")
 _DECODE_SECTIONS = ("decode_serve",)
 # sections whose rows land in BENCH_attn.json (attention/paged-KV, §10)
 _ATTN_SECTIONS = ("attn_paged",)
+# sections whose rows land in BENCH_dispatch.json (route selection, §11)
+_DISPATCH_SECTIONS = ("dispatch_routes",)
 
 
 def main(argv=None) -> int:
@@ -45,8 +49,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     fast = args.fast or args.smoke
 
-    from benchmarks import (attn_paged, conv_gemm, decode_serve, fig4_layers,
-                            fig5_sweep, fused_epilogue, roofline_bench,
+    from benchmarks import (attn_paged, conv_gemm, decode_serve,
+                            dispatch_routes, fig4_layers, fig5_sweep,
+                            fused_epilogue, roofline_bench,
                             table1_dbb_accuracy, table2_efficiency)
 
     sections = [
@@ -58,6 +63,8 @@ def main(argv=None) -> int:
          "decode_serve", lambda: decode_serve.run(fast=fast)),
         ("attn_paged (flash vs chunked + paged-KV occupancy)",
          "attn_paged", lambda: attn_paged.run(fast=fast)),
+        ("dispatch_routes (auto vs forced kernel routes, §11)",
+         "dispatch_routes", lambda: dispatch_routes.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -72,7 +79,7 @@ def main(argv=None) -> int:
     if args.smoke:
         sections = [s for s in sections
                     if s[1] in (_PERF_SECTIONS + _DECODE_SECTIONS
-                                + _ATTN_SECTIONS)]
+                                + _ATTN_SECTIONS + _DISPATCH_SECTIONS)]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -105,6 +112,12 @@ def main(argv=None) -> int:
         path = os.path.join(args.out, "BENCH_attn.json")
         with open(path, "w") as f:
             json.dump(att, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    dsp = {k: results[k] for k in _DISPATCH_SECTIONS if k in results}
+    if dsp:
+        path = os.path.join(args.out, "BENCH_dispatch.json")
+        with open(path, "w") as f:
+            json.dump(dsp, f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
     if failures:

@@ -147,6 +147,15 @@ class ModelConfig:
     # Distributed meshes always fall back to "xla" — the kernels are not
     # shard_map-aware.
     gemm_impl: str = "xla"
+    # kernel route overrides (DESIGN.md §11): (domain, route) pairs pinning
+    # a `kernels.dispatch` registry route per domain, e.g.
+    # (("matmul", "skinny_sta"), ("attention", "attn_naive")). Tuple-of-
+    # pairs (not a dict) so the frozen config stays hashable. Precedence:
+    # REPRO_FORCE_ROUTE env var > kernel_routes > auto (guard + roofline
+    # cost). A pinned route whose guard rejects an op falls back to auto
+    # with a warning — overrides pick among legal kernels, never bypass
+    # correctness guards.
+    kernel_routes: Tuple[Tuple[str, str], ...] = ()
     remat: str = "auto"             # auto | none | full — auto picks by size
     # distribution: "tp" = tensor-parallel over the model axis;
     # "dp" = the model axis joins batch parallelism (params replicated +

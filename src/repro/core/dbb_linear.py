@@ -4,7 +4,8 @@ Training      : dense master weights; the train loop applies the DBB
                 straight-through projection to the whole param tree
                 (core/sparsity.py), so model code stays plain ``x @ w``.
 Serving (TPU) : weights stored packed (`DbbWeight`); matmul routes through
-                the `dbb_gemm` Pallas kernel — decompression happens in VMEM.
+                the DBB Pallas kernels via `kernels.dispatch` —
+                decompression happens in VMEM.
 Serving (XLA) : distributed graphs (and the CPU dry-run) use the pure-XLA
                 path: packed weights live in HBM, `decompress_xla` expands
                 them inside the jitted step, and GSPMD shards the dense
@@ -23,8 +24,6 @@ import jax.numpy as jnp
 from repro.config import DbbConfig
 from repro.core.dbb import DbbWeight, pack_dbb
 from repro.core.sparsity import dbb_eligible, _path_str
-from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
-from repro.kernels.dbb_gemm.ref import decompress_ref
 
 __all__ = ["dbb_linear_apply", "decompress_xla", "pack_tree",
            "maybe_decompress_tree", "tree_footprint_bytes",
@@ -42,6 +41,7 @@ DECOMPRESS_STATS = {"calls": 0}
 def decompress_xla(p: DbbWeight, dtype=None) -> jax.Array:
     """Pure-XLA decompression (GSPMD-shardable). Handles stacked leaves
     ([L, Kc, N] scan stacks and [E, Kc, N] expert stacks) by vmapping."""
+    from repro.kernels import decompress_ref
     DECOMPRESS_STATS["calls"] += 1
     def one(values, bitmask):
         return decompress_ref(values, bitmask.astype(jnp.int32),
@@ -57,30 +57,21 @@ def decompress_xla(p: DbbWeight, dtype=None) -> jax.Array:
 
 
 def dbb_linear_apply(x: jax.Array, w, bias=None, *, act: str = "none",
-                     impl: str = "xla", out_dtype=None) -> jax.Array:
-    """``act(x @ w + bias)`` where w is dense or a DbbWeight, routed by impl.
+                     impl: str = "xla", out_dtype=None,
+                     cfg=None) -> jax.Array:
+    """``act(x @ w + bias)`` where w is dense or a DbbWeight, routed by the
+    kernel dispatch registry (DESIGN.md §11).
 
-    impl="pallas" fuses bias/act (and the DbbWeight per-channel scale) into
-    the kernel epilogue — one HBM store of the finished output (DESIGN.md
-    §7). The XLA path applies them as separate ops after the matmul, which
-    GSPMD can shard.
+    impl="pallas" activates the fused-kernel route family: the registry
+    picks skinny/M-tiled STA for dense weights and skinny/M-tiled DBB for
+    packed ones (bias/act and the DbbWeight per-channel scale fuse into
+    the kernel epilogue — one HBM store of the finished output, DESIGN.md
+    §7). impl="xla" keeps separate post-matmul ops, which GSPMD can shard.
+    ``cfg`` (optional) supplies `kernel_routes` overrides.
     """
-    if isinstance(w, DbbWeight):
-        if impl == "pallas":
-            return dbb_gemm_packed(x, w, bias, act=act, out_dtype=out_dtype)
-        dense = decompress_xla(w, dtype=x.dtype)
-        y = x @ dense
-    else:
-        if impl == "pallas":
-            from repro.kernels.sta_gemm.ops import sta_gemm
-            return sta_gemm(x, w.astype(x.dtype), bias, act=act,
-                            out_dtype=out_dtype)
-        y = x @ w.astype(x.dtype)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    from repro.kernels.epilogue import apply_act
-    y = apply_act(y, act)
-    return y.astype(out_dtype) if out_dtype is not None else y
+    from repro.kernels import dispatch
+    return dispatch.matmul(x, w, bias, act=act, out_dtype=out_dtype,
+                           cfg=cfg, pallas=(impl == "pallas"))
 
 
 def pack_tree(params: Any, cfg: DbbConfig, quantize: bool = False) -> Any:

@@ -20,7 +20,22 @@ autotune:  measured block/tile-shape selection with a persistent on-disk
            cache (DESIGN.md §7) — conv and skinny shapes key under their
            own op tags, with M bucketed so decode (M=1-32) and prefill
            (M=512+) shapes never share an entry.
+dispatch:  the one route registry + roofline-informed selection over all
+           of the above (DESIGN.md §11). Model layers call
+           `dispatch.matmul` / `dispatch.conv` / `dispatch.attention`
+           instead of importing kernel subsystems directly.
 """
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 
-__all__ = ["Epilogue", "apply_epilogue"]
+__all__ = ["Epilogue", "apply_epilogue", "decompress_ref"]
+
+
+def __getattr__(name):
+    # lazy re-export: `repro.core.dbb_linear` consumes the DBB decompress
+    # oracle through the package root (kernel-subsystem imports live only
+    # here and in dispatch.py); eager import would cycle through
+    # core/__init__ ↔ kernels.dbb_gemm at package-init time.
+    if name == "decompress_ref":
+        from repro.kernels.dbb_gemm.ref import decompress_ref
+        return decompress_ref
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

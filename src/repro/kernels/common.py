@@ -15,7 +15,8 @@ except AttributeError:  # pragma: no cover - older naming
 
 __all__ = ["pltpu", "CompilerParams", "on_cpu", "default_interpret",
            "cdiv", "round_up", "popcount_u32", "acc_dtype_for",
-           "SKINNY_M_MAX", "skinny_ok", "skinny_dispatch"]
+           "SKINNY_M_MAX", "skinny_ok", "skinny_dispatch",
+           "coerce_bias_scale", "pad_cols"]
 
 
 def on_cpu() -> bool:
@@ -42,6 +43,28 @@ def popcount_u32(x: jax.Array, bits: int) -> jax.Array:
     for t in range(bits):
         out = out + ((x >> t) & 1)
     return out
+
+
+def coerce_bias_scale(bias, scale):
+    """Epilogue contract (DESIGN.md §7): bias/scale rows are f32 no matter
+    what dtype the caller's params are stored in (bf16 model trees hand
+    over bf16 biases) — coerce at the wrapper boundary, before jit/tuning
+    sees the operand, so one compiled kernel serves every param dtype.
+    The single shared copy of the coercion all three GEMM-family ops
+    wrappers (sta_gemm / dbb_gemm / conv_gemm) apply."""
+    if bias is not None:
+        bias = jnp.asarray(bias, jnp.float32)
+    if scale is not None:
+        scale = jnp.asarray(scale, jnp.float32)
+    return bias, scale
+
+
+def pad_cols(a, extra: int):
+    """Zero-pad the last dim of a 2-D operand — weights / bias / scale /
+    bitmask all share the N-padding treatment (shared shape policy)."""
+    if a is None or extra == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, extra)))
 
 
 def acc_dtype_for(operand_dtype) -> jnp.dtype:

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
 from repro.core.sta import VMEM_BYTES
-from repro.kernels.common import default_interpret, round_up
+from repro.kernels.common import (coerce_bias_scale, default_interpret,
+                                  pad_cols, round_up)
 from repro.kernels.conv_gemm.kernel import (conv_gemm_dbb_pallas,
                                             conv_gemm_pallas)
 from repro.kernels.conv_gemm.ref import conv_gemm_dbb_ref, conv_gemm_ref
@@ -74,14 +75,6 @@ def _default_tiles(ho: int, wo: int) -> Tuple[int, int]:
     """th so the M tile th·Wo lands near 128 rows; bn = one lane tile."""
     th = max(1, min(ho, -(-128 // max(wo, 1))))
     return th, 128
-
-
-def _pad_cols(a: Optional[jax.Array], extra: int) -> Optional[jax.Array]:
-    """Zero-pad the last dim of a 2-D operand (weights / bias / scale /
-    bitmask share the N-padding treatment)."""
-    if a is None or extra == 0:
-        return a
-    return jnp.pad(a, ((0, 0), (0, extra)))
 
 
 def _synth(shape, dtype, rng) -> jax.Array:
@@ -128,9 +121,9 @@ def _conv_gemm_impl(x, w, bias, scale, *, kh, kw, stride, padding, act, th,
 
     xp, ho, wo, hot = _pad_input(x, kh, kw, stride, padding, th)
     np_ = round_up(n, bn)
-    wp = _pad_cols(w, np_ - n)
-    bias_r = _pad_cols(bias_r, np_ - n)
-    scale_r = _pad_cols(scale_r, np_ - n)
+    wp = pad_cols(w, np_ - n)
+    bias_r = pad_cols(bias_r, np_ - n)
+    scale_r = pad_cols(scale_r, np_ - n)
     y = conv_gemm_pallas(xp, wp, bias_r, scale_r, kh=kh, kw=kw,
                          stride=stride, th=th, block_n=bn, epilogue=epilogue,
                          out_dtype=out_dtype, interpret=interpret)
@@ -159,10 +152,10 @@ def _conv_gemm_dbb_impl(x, values, bitmask, bias, scale, *, kh, kw, stride,
 
     xp, ho, wo, hot = _pad_input(x, kh, kw, stride, padding, th)
     np_ = round_up(n, bn)
-    vp = _pad_cols(values, np_ - n)
-    mp = _pad_cols(mask_i32, np_ - n)
-    bias_r = _pad_cols(bias_r, np_ - n)
-    scale_r = _pad_cols(scale_r, np_ - n)
+    vp = pad_cols(values, np_ - n)
+    mp = pad_cols(mask_i32, np_ - n)
+    bias_r = pad_cols(bias_r, np_ - n)
+    scale_r = pad_cols(scale_r, np_ - n)
     y = conv_gemm_dbb_pallas(xp, vp, mp, bias_r, scale_r, kh=kh, kw=kw,
                              stride=stride, th=th, block=block, nnz=nnz,
                              block_n=bn, epilogue=epilogue,
@@ -253,11 +246,7 @@ def conv_gemm(
     """
     if interpret is None:
         interpret = default_interpret()
-    # Epilogue contract: bias/scale rows are f32 regardless of param dtype
-    if bias is not None:
-        bias = jnp.asarray(bias, jnp.float32)
-    if scale is not None:
-        scale = jnp.asarray(scale, jnp.float32)
+    bias, scale = coerce_bias_scale(bias, scale)
     assert w.shape[0] == kh * kw * x.shape[-1], (w.shape, kh, kw, x.shape)
     th, bn, kernel_ok = 1, 128, False
     if use_kernel:
@@ -315,10 +304,7 @@ def conv_gemm_dbb(
     blocks — DESIGN.md §8); other geometries take the dense oracle."""
     if interpret is None:
         interpret = default_interpret()
-    if bias is not None:
-        bias = jnp.asarray(bias, jnp.float32)
-    if scale is not None:
-        scale = jnp.asarray(scale, jnp.float32)
+    bias, scale = coerce_bias_scale(bias, scale)
     c = x.shape[-1]
     kdim = kh * kw * c
     assert bitmask.shape[0] * block == kdim, (bitmask.shape, kdim, block)

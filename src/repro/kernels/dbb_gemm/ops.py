@@ -32,13 +32,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
-from repro.kernels.common import default_interpret, round_up, skinny_dispatch
+from repro.kernels.common import (coerce_bias_scale, default_interpret,
+                                  pad_cols, round_up, skinny_dispatch)
 from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
 from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
 from repro.kernels.epilogue import Epilogue, as_row
-from repro.kernels.skinny.kernel import dbb_gemm_skinny_pallas
 
 __all__ = ["dbb_gemm", "dbb_gemm_packed"]
+
+
+def _skinny_kernel():
+    # deferred: skinny.kernel imports dbb_gemm.kernel (shared VMEM
+    # decompress), so a module-level import here would be order-dependent
+    # (whichever of sta_gemm/dbb_gemm loads first would hit the partially
+    # initialized sibling)
+    from repro.kernels.skinny.kernel import dbb_gemm_skinny_pallas
+    return dbb_gemm_skinny_pallas
 
 
 @functools.partial(
@@ -80,17 +89,14 @@ def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
     if nbp != nb:
         vp = jnp.pad(vp, ((0, (nbp - nb) * nnz), (0, 0)))
         mp_arr = jnp.pad(mp_arr, ((0, nbp - nb), (0, 0)))
-    if np_ != n:
-        vp = jnp.pad(vp, ((0, 0), (0, np_ - n)))
-        mp_arr = jnp.pad(mp_arr, ((0, 0), (0, np_ - n)))
-    if bias_r is not None and np_ != n:
-        bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
-    if scale_r is not None and np_ != n:
-        scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
+    vp = pad_cols(vp, np_ - n)
+    mp_arr = pad_cols(mp_arr, np_ - n)
+    bias_r = pad_cols(bias_r, np_ - n)
+    scale_r = pad_cols(scale_r, np_ - n)
     if skinny:
         # decode fast path (DESIGN.md §9): resident activations, the
         # compressed values/bitmask stream through the K loop
-        y = dbb_gemm_skinny_pallas(xp, vp, mp_arr, bias_r, scale_r,
+        y = _skinny_kernel()(xp, vp, mp_arr, bias_r, scale_r,
                                    epilogue=epilogue, block=block, nnz=nnz,
                                    block_k=bk, block_n=bn,
                                    out_dtype=out_dtype, interpret=interpret)
@@ -119,8 +125,13 @@ def dbb_gemm(
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
     autotune: Optional[bool] = None,
+    skinny: Optional[bool] = None,
 ) -> jax.Array:
     """DBB structured-sparse GEMM: ``x @ unpack(values, bitmask)``.
+
+    ``skinny`` overrides the automatic skinny-vs-M-tiled choice (the
+    dispatch registry resolves routes up front; None keeps the legacy
+    in-wrapper auto dispatch for direct callers).
 
     Shapes (DESIGN.md §2): ``x [..., K]``; ``values [K/B·k, N]`` slot-major
     compressed non-zeros; ``bitmask [K/B, N]`` integer, bit ``pos`` set ⇔
@@ -130,22 +141,19 @@ def dbb_gemm(
     """
     if interpret is None:
         interpret = default_interpret()
-    # Epilogue contract (DESIGN.md §7): f32 bias/scale rows at the boundary
-    # (see sta_gemm) — param-dtype operands would fork the jit cache and
-    # quietly demote the epilogue math on bf16 trees.
-    if bias is not None:
-        bias = jnp.asarray(bias, jnp.float32)
-    if scale is not None:
-        scale = jnp.asarray(scale, jnp.float32)
+    bias, scale = coerce_bias_scale(bias, scale)
     bm0, bk0, bn0 = block_m or 128, block_k or 128, block_n or 128
-    skinny = False
+    if not use_kernel:
+        skinny = False
     if use_kernel:
         *batch, k_dim = x.shape
         m = math.prod(batch) if batch else 1
-        # decode fast path (DESIGN.md §9): GEMV-shaped calls stream the
-        # compressed weight through the skinny kernel; pinned blocks opt out
-        skinny = skinny_dispatch(m, k_dim, x.dtype.itemsize,
-                                 block_m, block_k, block_n)
+        if skinny is None:
+            # decode fast path (DESIGN.md §9): GEMV-shaped calls stream the
+            # compressed weight through the skinny kernel; pinned blocks
+            # opt out (the dispatch layer passes an explicit choice)
+            skinny = skinny_dispatch(m, k_dim, x.dtype.itemsize,
+                                     block_m, block_k, block_n)
         if autotune is None:
             # caller-pinned block shapes win over the tuner (0-sentinel
             # convention, mirrors sta_gemm)
@@ -196,7 +204,7 @@ def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
         bias = jnp.zeros((1, np_), jnp.float32) if epilogue.has_bias else None
         scale = jnp.ones((1, np_), jnp.float32) if epilogue.has_scale else None
         if skinny:
-            return lambda: dbb_gemm_skinny_pallas(
+            return lambda: _skinny_kernel()(
                 x, vals, mask, bias, scale, epilogue=epilogue, block=block,
                 nnz=nnz, block_k=bk, block_n=bn,
                 out_dtype=out_dtype, interpret=interpret)

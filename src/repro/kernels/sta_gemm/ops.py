@@ -30,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.config import StaConfig
 from repro.core.sta import SUBLANE, choose_block_shape
-from repro.kernels.common import default_interpret, round_up, skinny_dispatch
+from repro.kernels.common import (coerce_bias_scale, default_interpret,
+                                  pad_cols, round_up, skinny_dispatch)
 from repro.kernels.epilogue import Epilogue, as_row, default_out_dtype
 from repro.kernels.skinny.kernel import sta_gemm_skinny_pallas
 from repro.kernels.sta_gemm.kernel import sta_gemm_pallas
@@ -113,10 +114,8 @@ def _sta_gemm_impl(x, w, bias, scale, *, act, block_m, block_k, block_n,
     kp, np_ = round_up(k, bk), round_up(n, bn)
     xp = jnp.pad(x2, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x2
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
-    if bias_r is not None and np_ != n:
-        bias_r = jnp.pad(bias_r, ((0, 0), (0, np_ - n)))
-    if scale_r is not None and np_ != n:
-        scale_r = jnp.pad(scale_r, ((0, 0), (0, np_ - n)))
+    bias_r = pad_cols(bias_r, np_ - n)
+    scale_r = pad_cols(scale_r, np_ - n)
     if skinny:
         y = sta_gemm_skinny_pallas(xp, wp, bias_r, scale_r,
                                    epilogue=epilogue, block_k=bk, block_n=bn,
@@ -143,9 +142,15 @@ def sta_gemm(
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
     autotune: Optional[bool] = None,
+    skinny: Optional[bool] = None,
 ) -> jax.Array:
     """Dense GEMM through the STA Pallas kernel (oracle fallback optional),
     with the bias/act/requant epilogue fused into the final-K store.
+
+    ``skinny`` overrides the automatic skinny-vs-M-tiled choice (the
+    dispatch registry in `kernels.dispatch` resolves routes up front and
+    pins the kernel here; None keeps the legacy in-wrapper auto dispatch
+    for direct callers).
 
     Shapes: ``x [..., K] · w [K, N] → [..., N]``; any dims/dtypes — batch
     dims flatten to M, ragged (M, K, N) pad to the block grid and slice
@@ -157,24 +162,20 @@ def sta_gemm(
     """
     if interpret is None:
         interpret = default_interpret()
-    # Epilogue contract (DESIGN.md §7): bias/scale rows are f32 no matter
-    # what dtype the caller's params are stored in (bf16 model trees hand
-    # over bf16 biases) — coerce at the boundary, before jit/tuning sees
-    # the operand, so one compiled kernel serves every param dtype.
-    if bias is not None:
-        bias = jnp.asarray(bias, jnp.float32)
-    if scale is not None:
-        scale = jnp.asarray(scale, jnp.float32)
+    bias, scale = coerce_bias_scale(bias, scale)
     bm, bk, bn = 128, 128, 128
-    skinny = False
+    if not use_kernel:
+        skinny = False
     if use_kernel:
         *batch, k = x.shape
         m = math.prod(batch) if batch else 1
         n = w.shape[1]
-        # decode fast path (DESIGN.md §9): GEMV-shaped calls go through the
-        # skinny weight-streaming kernel; caller-pinned block shapes opt out
-        skinny = skinny_dispatch(m, k, x.dtype.itemsize,
-                                 block_m, block_k, block_n)
+        if skinny is None:
+            # decode fast path (DESIGN.md §9): GEMV-shaped calls go through
+            # the skinny weight-streaming kernel; caller-pinned block
+            # shapes opt out (the dispatch layer passes an explicit choice)
+            skinny = skinny_dispatch(m, k, x.dtype.itemsize,
+                                     block_m, block_k, block_n)
         cfg = StaConfig(block_m=block_m or 128, block_k=block_k or 128,
                         block_n=block_n or 128)
         if autotune is None:

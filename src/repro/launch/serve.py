@@ -26,6 +26,39 @@ from repro.serve.engine import ServeEngine
 __all__ = ["main"]
 
 
+def _log_routes(cfg, batch: int, smax: int, packed: bool) -> None:
+    """Print the dispatch registry's ranked route tables (DESIGN.md §11)
+    for this serving run's hot shapes — decode-batch layer GEMM and decode
+    attention at the *actual* cache length — so the serve log shows *why*
+    each kernel runs. ``smax`` and the page derivation mirror
+    `decode_attention_apply` exactly (gcd-adaptive page when kv_page_size
+    is unset); a fabricated shape here could log a route the engine never
+    takes."""
+    import math
+
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+    from repro.kernels.attn import DEFAULT_PAGE
+
+    d, ff = cfg.d_model, cfg.d_ff
+    print(f"\nkernel routes (gemm_impl={cfg.gemm_impl!r}, "
+          f"attn_impl={cfg.attn_impl!r}, overrides="
+          f"{dict(cfg.kernel_routes) or 'none'}):")
+    print(f"- decode layer GEMM [M={batch}, K={d}, N={ff}]"
+          f"{' packed' if packed else ''}:")
+    print(dispatch.format_table(dispatch.explain(
+        "matmul", m=batch, k=d, n=ff, dtype=cfg.dtype, packed=packed,
+        cfg=cfg, epilogue_ops=1)))   # the MLP GEMMs fuse one act/scale
+    g = cfg.num_heads // max(1, cfg.num_kv_heads)
+    page = cfg.kv_page_size or math.gcd(smax, DEFAULT_PAGE)
+    route = dispatch.decode_attention_route(
+        cfg, group=g, head_dim=cfg.resolved_head_dim,
+        itemsize=jnp.dtype(cfg.dtype).itemsize, page=page, smax=smax)
+    print(f"- decode attention (G={g}, smax={smax}, page={page}): "
+          f"{route}\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -78,6 +111,11 @@ def main(argv=None) -> int:
               f"{packed_bytes/1e6:.1f} MB "
               f"({100*packed_bytes/dense_bytes:.1f}%)")
 
+    # generate() caches prompt+budget slots; serve() buckets to powers of
+    # two — log the generate()-shaped cache length (the common case);
+    # "packed" only when the weights actually are (--packed AND dbb on)
+    _log_routes(cfg, args.batch, args.prompt_len + args.max_new,
+                packed=bool(args.packed and cfg.dbb.enabled))
     eng = ServeEngine(cfg, params, max_batch=args.batch,
                       kv_pool_pages=args.kv_pool_pages)
     rng = np.random.default_rng(args.seed)

@@ -27,11 +27,9 @@ from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh
-from repro.kernels.attn import (DEFAULT_PAGE, flash_attention, flash_ok,
-                                identity_block_table, paged_decode_attention,
-                                paged_decode_ok)
-from repro.kernels.common import skinny_ok
-from repro.models.common import apply_rope, linear_init, use_fused_gemm
+from repro.kernels.attn import (DEFAULT_PAGE, identity_block_table,
+                                paged_decode_attention)
+from repro.models.common import apply_rope, linear_init
 
 __all__ = ["attention_init", "attention_apply", "decode_attention_apply",
            "paged_decode_attention_apply", "init_kv_cache"]
@@ -39,21 +37,22 @@ __all__ = ["attention_init", "attention_apply", "decode_attention_apply",
 _NEG_INF = -1e30
 
 
-def _lin(pp: Dict, x: jax.Array) -> jax.Array:
-    """Projection against a dense or DBB-packed weight. Packed weights
-    (decode fast path, DESIGN.md §9) stream compressed through the DBB
-    kernel with the bias fused into its epilogue — the dense [K, N] form
-    never materializes, in HBM or VMEM. Dense weights keep the plain XLA
-    matmul (shardable, differentiable)."""
+def _lin(pp: Dict, x: jax.Array, cfg: Optional[ModelConfig] = None
+         ) -> jax.Array:
+    """Projection against a dense or DBB-packed weight, routed by the
+    kernel dispatch registry. Packed weights (decode fast path, DESIGN.md
+    §9) stream compressed through the DBB kernels with the bias fused into
+    the epilogue — the dense [K, N] form never materializes, in HBM or
+    VMEM. Dense weights keep the plain XLA matmul (shardable,
+    differentiable) via ``dense_fused=False``, which the route guards
+    honor (DESIGN.md §11)."""
+    from repro.kernels import dispatch
     w = pp["w"]
-    if isinstance(w, DbbWeight):
-        from repro.core.dbb_linear import dbb_linear_apply
-        return dbb_linear_apply(x, w, pp.get("b"), impl="pallas",
-                                out_dtype=x.dtype)
-    y = x @ w.astype(x.dtype)
-    if "b" in pp:
-        y = y + pp["b"].astype(x.dtype)
-    return y
+    return dispatch.matmul(x, w, pp.get("b"),
+                           out_dtype=x.dtype if isinstance(w, DbbWeight)
+                           else None,
+                           cfg=cfg, pallas=isinstance(w, DbbWeight),
+                           dense_fused=False)
 
 
 def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
@@ -74,9 +73,9 @@ def _project_qkv(p: Dict, cfg: ModelConfig, x: jax.Array,
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
 
-    q = _lin(p["q_proj"], x).reshape(b, s, hq, hd)
-    k = _lin(p["k_proj"], x).reshape(b, s, hkv, hd)
-    v = _lin(p["v_proj"], x).reshape(b, s, hkv, hd)
+    q = _lin(p["q_proj"], x, cfg).reshape(b, s, hq, hd)
+    k = _lin(p["k_proj"], x, cfg).reshape(b, s, hkv, hd)
+    v = _lin(p["v_proj"], x, cfg).reshape(b, s, hkv, hd)
     if cfg.rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -183,21 +182,10 @@ def _chunked_causal_attention(q, k, v, cfg: ModelConfig, chunk: int):
 
 
 def _flash_backend(cfg: ModelConfig) -> bool:
-    """Whether the fused flash kernel is the selected backend: explicit
-    ``attn_impl="flash"`` (single device only — the kernel is not
-    shard_map-aware), or "auto" with the Pallas route active (same
-    predicate as the GEMM kernels)."""
-    if cfg.attn_impl == "flash":
-        return current_mesh() is None
-    return cfg.attn_impl == "auto" and use_fused_gemm(cfg)
-
-
-def _flash_applicable(cfg: ModelConfig, q, s: int) -> bool:
-    """Backend selected AND the kernel can serve this call: float operands
-    and the VMEM guard passes (else fall back to the chunked XLA path)."""
-    return (_flash_backend(cfg)
-            and jnp.issubdtype(q.dtype, jnp.floating)
-            and flash_ok(q.shape[1], s, q.shape[-1], q.dtype.itemsize))
+    """Whether the fused flash kernel is the selected backend (delegates
+    to the dispatch layer's route-family predicate, DESIGN.md §11)."""
+    from repro.kernels.dispatch import flash_backend_active
+    return flash_backend_active(cfg)
 
 
 def _start_from_positions(positions: jax.Array, b: int) -> jax.Array:
@@ -218,20 +206,8 @@ def _attention_core(q, k, v, positions, cfg: ModelConfig,
     bias tensor). Without it, ragged=True (left-padded serving batch)
     forces the naive oracle with full batched masking and the chunked path
     assumes one shared arange position ladder."""
-    s = q.shape[1]
-    if _flash_applicable(cfg, q, s):
-        return flash_attention(
-            q, k, v, _start_from_positions(positions, q.shape[0]),
-            window=cfg.sliding_window, softcap=cfg.attn_logit_softcap)
-    if ragged:
-        return _naive_attention(q, k, v, positions, positions, cfg)
-    impl = cfg.attn_impl
-    if impl in ("auto", "flash"):       # flash unavailable: chunked fallback
-        impl = "chunked" if s > 2 * cfg.attn_chunk else "naive"
-    if impl == "chunked" and s % cfg.attn_chunk == 0:
-        return _chunked_causal_attention(q, k, v, cfg, cfg.attn_chunk)
-    pos1d = positions[0] if positions.ndim > 1 else positions
-    return _naive_attention(q, k, v, pos1d, pos1d, cfg)
+    from repro.kernels import dispatch
+    return dispatch.attention(q, k, v, positions, cfg, ragged=ragged)
 
 
 def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
@@ -260,7 +236,7 @@ def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     q, k, v = qkv if qkv is not None else _project_qkv(p, cfg, x, positions)
     o = _attention_core(q, k, v, positions, cfg, ragged=ragged)
     b_, s_, hq, hd = o.shape
-    return _lin(p["o_proj"], o.reshape(b_, s_, hq * hd))
+    return _lin(p["o_proj"], o.reshape(b_, s_, hq * hd), cfg)
 
 
 def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
@@ -400,17 +376,18 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     # flash decode (DESIGN.md §10): the updated contiguous cache is a paged
     # pool under an identity block table — same kernel, same page-visit
     # order as the true paged pool, which is what makes paged serving
-    # bit-identical to contiguous. Gated on the skinny regime (G query
-    # rows resident) and a page size that tiles the cache exactly; with
-    # kv_page_size unset the page adapts to the cache length (largest
-    # power-of-two divisor up to DEFAULT_PAGE) so arbitrary generate()/
-    # serve() cache sizes still take the kernel.
+    # bit-identical to contiguous. The gate (flash backend + skinny-regime
+    # G + page/VMEM guards) lives in the dispatch registry's attn_decode
+    # domain (DESIGN.md §11); with kv_page_size unset the page adapts to
+    # the cache length (largest power-of-two divisor up to DEFAULT_PAGE)
+    # so arbitrary generate()/serve() cache sizes still take the kernel.
+    from repro.kernels import dispatch
     page = cfg.kv_page_size or math.gcd(smax, DEFAULT_PAGE)
-    if (not ring and _flash_backend(cfg)
-            and jnp.issubdtype(x.dtype, jnp.floating)
-            and skinny_ok(g, hd, new_k.dtype.itemsize)
-            and paged_decode_ok(page, hd, new_k.dtype.itemsize)
-            and page >= 8 and smax % page == 0):
+    decode_route = dispatch.decode_attention_route(
+        cfg, group=g, head_dim=hd, itemsize=new_k.dtype.itemsize,
+        page=page, smax=smax, ring=ring,
+        floating=jnp.issubdtype(x.dtype, jnp.floating))
+    if decode_route == "attn_decode_flash":
         window = (cfg.sliding_window if window_override is None
                   else window_override)
         n_log = smax // page
@@ -420,7 +397,7 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
             q.reshape(b, hkv, g, hd), kp, vp, identity_block_table(b, n_log),
             lengths, start, window=window, softcap=cfg.attn_logit_softcap)
         o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-        return _lin(p["o_proj"], o), new_k, new_v
+        return _lin(p["o_proj"], o, cfg), new_k, new_v
 
     qg = q.reshape(b, 1, hkv, g, hd)
     sc = _scores(qg, new_k, cfg)                     # [B,H,G,1,Smax]
@@ -440,7 +417,7 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     o = jnp.einsum("bhgts,bshd->bthgd", pr.astype(new_v.dtype), new_v,
                    preferred_element_type=jnp.float32)
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    y = _lin(p["o_proj"], o)
+    y = _lin(p["o_proj"], o, cfg)
     return y, new_k, new_v
 
 
@@ -483,4 +460,4 @@ def paged_decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
         q.reshape(b, hkv, g, hd), new_kp, new_vp, block_table, lengths,
         start, window=window, softcap=cfg.attn_logit_softcap)
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    return _lin(p["o_proj"], o), new_kp, new_vp
+    return _lin(p["o_proj"], o, cfg), new_kp, new_vp

@@ -4,8 +4,8 @@ implemented by lowering 2D convolution to GEMM kernels").
 
 Every conv/fc weight is a GEMM weight matrix [K, N] with K = kh·kw·c_in,
 so the DBB 8×1 blocks run along the GEMM contraction dim — the same layout
-the STA-DBB hardware consumes, and the layout `core.dbb`/`kernels.dbb_gemm`
-expect.
+the STA-DBB hardware consumes, and the layout `core.dbb` and the DBB
+kernels behind `kernels.dispatch` expect.
 
 Routing (DESIGN.md §8): ``matmul="sta" | "dbb"`` lowers each conv through
 the *implicit-GEMM* Pallas kernels (`kernels.conv_gemm`) — the im2col
@@ -24,38 +24,37 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
-from repro.kernels.conv_gemm.ops import conv_gemm, conv_gemm_packed
 from repro.kernels.conv_gemm.ref import im2col  # noqa: F401 (canonical def,
 #                                                 re-exported for callers)
-from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
-from repro.models.common import linear_apply, normal_init
+from repro.models.common import normal_init
 
 __all__ = ["cnn_init", "cnn_apply", "im2col"]
 
 
 def _matmul(x: jax.Array, w, mode: str, bias=None,
-            act: str = "none") -> jax.Array:
-    """GEMM with optional fused bias/activation epilogue.
+            act: str = "none", cfg: Optional[ModelConfig] = None
+            ) -> jax.Array:
+    """GEMM with optional fused bias/activation epilogue, routed by the
+    kernel dispatch registry (DESIGN.md §11).
 
     Pallas routes ("sta" / packed DbbWeight) fuse bias+act into the kernel's
     final-K store (DESIGN.md §7); the XLA route applies them as separate ops
     (differentiable — the training path)."""
-    if isinstance(w, DbbWeight):
-        return dbb_gemm_packed(x, w, bias, act=act)
-    p = {"w": w} if bias is None else {"w": w, "b": bias}
-    return linear_apply(p, x, act=act, fused=mode == "sta")
+    from repro.kernels import dispatch
+    return dispatch.matmul(x, w, bias, act=act, cfg=cfg,
+                           pallas=(mode == "sta" or isinstance(w, DbbWeight)))
 
 
 def _conv(x: jax.Array, w, bias, k: int, act: str = "relu",
-          use_kernel: bool = True) -> jax.Array:
-    """One conv layer through the implicit-GEMM kernels: dense weights take
-    the STA variant, packed `DbbWeight` the DBB variant (compressed weight
-    stream + in-VMEM decompress). use_kernel=False runs the same math via
-    the explicit im2col + GEMM oracle."""
-    if isinstance(w, DbbWeight):
-        return conv_gemm_packed(x, w, bias, kh=k, kw=k, act=act,
-                                use_kernel=use_kernel)
-    return conv_gemm(x, w, bias, kh=k, kw=k, act=act, use_kernel=use_kernel)
+          use_kernel: bool = True, cfg: Optional[ModelConfig] = None
+          ) -> jax.Array:
+    """One conv layer through the dispatch registry's conv domain: dense
+    weights take the implicit-GEMM STA variant, packed `DbbWeight` the DBB
+    variant (compressed weight stream + in-VMEM decompress).
+    use_kernel=False pins the explicit im2col + GEMM oracle route."""
+    from repro.kernels import dispatch
+    return dispatch.conv(x, w, bias, kh=k, kw=k, act=act, cfg=cfg,
+                         use_kernel=use_kernel)
 
 
 def cnn_init(key, cfg: ModelConfig) -> Dict:
@@ -95,15 +94,16 @@ def cnn_apply(params: Dict, cfg: ModelConfig, images: jax.Array,
         p = params[f"conv{i}"]
         if matmul in ("sta", "dbb"):
             y = _conv(x, p["w"], p["b"], k, act="relu",
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, cfg=cfg)
         else:
             b, h, w, c = x.shape
             cols = im2col(x, k, k)                   # [B,H,W,k*k*C]
             y = _matmul(cols.reshape(b * h * w, -1), p["w"], matmul,
-                        bias=p["b"], act="relu")
+                        bias=p["b"], act="relu", cfg=cfg)
             y = y.reshape(b, h, w, cout)
         x = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     b = x.shape[0]
     flat = x.reshape(b, -1)
-    return _matmul(flat, params["fc"]["w"], matmul, bias=params["fc"]["b"])
+    return _matmul(flat, params["fc"]["w"], matmul, bias=params["fc"]["b"],
+                   cfg=cfg)

@@ -50,32 +50,27 @@ def linear_init(key, d_in: int, d_out: int, dtype,
 def use_fused_gemm(cfg: ModelConfig) -> bool:
     """Whether the single-device fused Pallas GEMM path is active: requires
     ``cfg.gemm_impl == "pallas"`` AND no live device mesh — the kernels are
-    not shard_map-aware, so any distributed layout stays on XLA matmuls."""
-    if cfg.gemm_impl != "pallas":
-        return False
-    from repro.dist.mesh_ctx import current_mesh
-    return current_mesh() is None
+    not shard_map-aware, so any distributed layout stays on XLA matmuls.
+    (Delegates to the dispatch layer's route-family predicate.)"""
+    from repro.kernels.dispatch import pallas_route_active
+    return pallas_route_active(cfg)
 
 
 def linear_apply(p: Dict, x: jax.Array, *, act: str = "none",
-                 fused: bool = False) -> jax.Array:
+                 fused: bool = False, cfg: Optional[ModelConfig] = None
+                 ) -> jax.Array:
     """``act(x @ w + b)`` for a `linear_init` param dict.
 
-    fused=True routes through the STA Pallas kernel with bias+activation
-    applied in the final-K store (DESIGN.md §7) — the pre-activation
-    [M, N] tensor never round-trips through HBM. fused=False is the plain
-    XLA path (shardable, differentiable — use for training / GSPMD).
+    fused=True hands the GEMM to the dispatch registry's Pallas route
+    family (DESIGN.md §11) — bias+activation applied in the kernel's
+    final-K store (§7), the pre-activation [M, N] tensor never
+    round-trips through HBM. fused=False is the plain XLA path
+    (shardable, differentiable — use for training / GSPMD).
     """
-    w = p["w"].astype(x.dtype)
-    b = p.get("b")
-    if fused:
-        from repro.kernels.sta_gemm.ops import sta_gemm
-        return sta_gemm(x, w, b, act=act, out_dtype=x.dtype)
-    y = x @ w
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    from repro.kernels.epilogue import apply_act
-    return apply_act(y, act)
+    from repro.kernels import dispatch
+    return dispatch.matmul(x, p["w"].astype(x.dtype), p.get("b"), act=act,
+                           out_dtype=x.dtype if fused else None,
+                           cfg=cfg, pallas=fused)
 
 
 # ---------------------------------------------------------------------------

@@ -59,14 +59,16 @@ def _tp_size(mesh) -> int:
     return mesh.shape["model"]
 
 
-def _fused_gemm(x: jax.Array, pp: Dict, act: str) -> jax.Array:
+def _fused_gemm(x: jax.Array, pp: Dict, act: str,
+                cfg: ModelConfig) -> jax.Array:
     """One fused-epilogue GEMM against a dense or DBB-packed weight —
-    `dbb_linear_apply` owns the dispatch: packed weights (decode fast
-    path, DESIGN.md §9) stream compressed through the DBB kernel, dense
-    ones take the STA kernel."""
-    from repro.core.dbb_linear import dbb_linear_apply
-    return dbb_linear_apply(x, pp["w"], pp.get("b"), act=act,
-                            impl="pallas", out_dtype=x.dtype)
+    `kernels.dispatch` owns the route: packed weights (decode fast path,
+    DESIGN.md §9) stream compressed through the DBB kernels, dense ones
+    take the STA kernels, skinny vs M-tiled by the registry's cost model
+    (§11)."""
+    from repro.kernels import dispatch
+    return dispatch.matmul(x, pp["w"], pp.get("b"), act=act,
+                           out_dtype=x.dtype, cfg=cfg, pallas=True)
 
 
 def _dense_w(pp: Dict, dtype) -> jax.Array:
@@ -85,10 +87,10 @@ def _mlp_fused(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     the activation fused into the up-projection's final-K store (DESIGN.md
     §7) — the [tokens, d_ff] pre-activation never round-trips through HBM.
     Gated MLPs fuse the act into the gate GEMM and multiply elementwise."""
-    h = _fused_gemm(x, p["wi"], "none" if cfg.mlp_gated else cfg.act)
+    h = _fused_gemm(x, p["wi"], "none" if cfg.mlp_gated else cfg.act, cfg)
     if cfg.mlp_gated:
-        h = _fused_gemm(x, p["wg"], cfg.act) * h
-    return _fused_gemm(h, p["wo"], "none")
+        h = _fused_gemm(x, p["wg"], cfg.act, cfg) * h
+    return _fused_gemm(h, p["wo"], "none", cfg)
 
 
 def _mlp_dense(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:

@@ -51,8 +51,35 @@ def moe_init(key, cfg: ModelConfig, dtype) -> Dict:
     return p
 
 
+_FUSED_EXPERT_MAX = 16
+
+
 def _expert_ffn(ew: Dict, xs: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """xs: [E, C, d] -> [E, C, d] through per-expert gated MLP."""
+    """xs: [E, C, d] -> [E, C, d] through per-expert gated MLP.
+
+    On the single-device Pallas route each expert's GEMMs go through the
+    dispatch registry (DESIGN.md §11) with the activation fused into the
+    up-projection's final-K store — a static per-expert loop, bounded to
+    small expert counts so the unrolled kernel count stays sane. The
+    expert-parallel shard_map path (mesh live) keeps the batched einsums
+    that GSPMD shards."""
+    from repro.kernels import dispatch
+    e = xs.shape[0]
+    if dispatch.pallas_route_active(cfg) and e <= _FUSED_EXPERT_MAX:
+        outs = []
+        for i in range(e):
+            h = dispatch.matmul(
+                xs[i], ew["wi"][i].astype(xs.dtype),
+                act="none" if cfg.mlp_gated else cfg.act,
+                out_dtype=xs.dtype, cfg=cfg, pallas=True)
+            if cfg.mlp_gated:
+                h = dispatch.matmul(xs[i], ew["wg"][i].astype(xs.dtype),
+                                    act=cfg.act, out_dtype=xs.dtype,
+                                    cfg=cfg, pallas=True) * h
+            outs.append(dispatch.matmul(h, ew["wo"][i].astype(xs.dtype),
+                                        out_dtype=xs.dtype, cfg=cfg,
+                                        pallas=True))
+        return jnp.stack(outs, axis=0)
     act = _ACTS[cfg.act]
     h = jnp.einsum("ecd,edf->ecf", xs, ew["wi"].astype(xs.dtype))
     if cfg.mlp_gated:

@@ -29,8 +29,7 @@ from repro.models import attention as attn
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
 from repro.models.common import (dtype_of, embed_apply, embed_init,
-                                 linear_init, norm_apply, norm_init,
-                                 use_fused_gemm)
+                                 linear_init, norm_apply, norm_init)
 from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 
@@ -110,9 +109,11 @@ _STREAM_FAMILIES = ("dense_lm", "vlm_lm", "audio_lm")
 def _stream_packed(cfg: ModelConfig) -> bool:
     """Whether packed layer weights can skip the per-layer dense expand:
     the attention/MLP blocks stream DbbWeight leaves straight through the
-    DBB Pallas kernels, so the weight stays compressed end-to-end — HBM
-    holds only values+bitmask and the kernel decompresses tiles in VMEM."""
-    return cfg.family in _STREAM_FAMILIES and use_fused_gemm(cfg)
+    DBB Pallas kernels (the dispatch registry's dbb routes, DESIGN.md
+    §11), so the weight stays compressed end-to-end — HBM holds only
+    values+bitmask and the kernel decompresses tiles in VMEM."""
+    from repro.kernels.dispatch import pallas_route_active
+    return cfg.family in _STREAM_FAMILIES and pallas_route_active(cfg)
 
 
 def _unpack_layer(lp: Dict, cfg: ModelConfig) -> Dict:

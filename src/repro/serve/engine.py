@@ -46,7 +46,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.dbb_linear import maybe_decompress_tree
 from repro.dist.collectives import cross_entropy  # noqa: F401 (API surface)
-from repro.kernels.skinny import SKINNY_M_MAX
+from repro.kernels import dispatch
 from repro.models import registry
 
 __all__ = ["make_decode_step", "make_prefill_step", "ServeEngine",
@@ -59,27 +59,25 @@ _CONT_BATCH_FAMILIES = ("dense_lm", "moe_lm", "vlm_lm", "audio_lm")
 
 
 def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array,
-                       impl: str = "xla") -> jax.Array:
+                       impl: str = "xla",
+                       cfg: Optional[ModelConfig] = None) -> jax.Array:
     """hidden [B, 1, d] → greedy next token [B]. The [B, V] logits are tiny
-    (one position); vocab stays sharded under GSPMD. impl="pallas" routes
-    the head GEMV through the skinny weight-streaming STA kernel when the
-    batch fits (B ≤ 32 — the decode regime, DESIGN.md §9) and falls back
-    to the XLA matmul otherwise: a [B, d]·[d, V] GEMV gains nothing from
-    the M-tiled kernel's padding."""
+    (one position); vocab stays sharded under GSPMD. impl="pallas" hands
+    the head GEMV to the dispatch registry with the ``gemv`` hint
+    (DESIGN.md §11): the skinny weight-streaming STA kernel when the batch
+    fits the decode regime (B ≤ 32, §9), the XLA matmul otherwise — a
+    [B, d]·[d, V] GEMV gains nothing from the M-tiled kernel's padding,
+    which is exactly what the hint tells the `sta` route guard."""
     h = hidden[:, -1].astype(jnp.float32)
-    if impl == "pallas" and h.shape[0] <= SKINNY_M_MAX:
-        from repro.kernels.sta_gemm.ops import sta_gemm
-        logits = sta_gemm(h, w_head.astype(jnp.float32))
-    else:
-        logits = h @ w_head.astype(jnp.float32)
+    logits = dispatch.matmul(h, w_head.astype(jnp.float32), cfg=cfg,
+                             pallas=(impl == "pallas"), gemv=True)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
 def _gemm_impl(cfg: ModelConfig) -> str:
     """Resolve the engine's GEMM route (single predicate shared with the
     model layer: Pallas only without a live mesh)."""
-    from repro.models.common import use_fused_gemm
-    return "pallas" if use_fused_gemm(cfg) else "xla"
+    return "pallas" if dispatch.pallas_route_active(cfg) else "xla"
 
 
 def _decompress_non_layer(params, cfg: ModelConfig):
@@ -103,7 +101,7 @@ def make_decode_step(cfg: ModelConfig):
         p = _decompress_non_layer(params, cfg)
         hidden, new_cache = registry.decode_step(p, cfg, tokens, cache)
         nxt = greedy_from_hidden(hidden, registry.lm_head_weight(p, cfg),
-                                 impl=_gemm_impl(cfg))
+                                 impl=_gemm_impl(cfg), cfg=cfg)
         return nxt, new_cache
 
     return step
@@ -127,7 +125,7 @@ def make_prefill_step(cfg: ModelConfig):
             start=batch.get("start"))
         nxt = greedy_from_hidden(hidden[:, -1:],
                                  registry.lm_head_weight(p, cfg),
-                                 impl=_gemm_impl(cfg))
+                                 impl=_gemm_impl(cfg), cfg=cfg)
         return nxt, new_cache
 
     return step

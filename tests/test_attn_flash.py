@@ -188,7 +188,9 @@ class TestModelDispatch:
         """When the VMEM guard rejects the call, attn_impl='flash' must
         degrade to the XLA paths, not crash."""
         cfg, params = small_lm
-        monkeypatch.setattr(attn_mod, "flash_ok",
+        # the VMEM guard lives in the dispatch registry's attn_flash route
+        # (DESIGN.md §11), which reads flash_ok from the attn ops module
+        monkeypatch.setattr("repro.kernels.attn.ops.flash_ok",
                             lambda *a, **k: False)
         toks = jnp.asarray([[5, 17, 3, 250]], jnp.int32)
         h0, _ = registry.forward(params, cfg, {"tokens": toks})
