@@ -9,10 +9,11 @@ vs the per-token static loop + packed-weight residency, DESIGN.md §9) to
 ``BENCH_decode.json``, the attention section (flash vs chunked +
 paged-KV occupancy, DESIGN.md §10) to ``BENCH_attn.json``, and the
 kernel-dispatch section (auto vs forced routes across the decode/
-prefill/conv shape grid, DESIGN.md §11) to ``BENCH_dispatch.json`` so
-the perf trajectory is machine-readable run-over-run (CI runs
-``--smoke``, which executes only those sections on reduced shapes and
-still emits all four files).
+prefill/conv shape grid, DESIGN.md §11) to ``BENCH_dispatch.json``, and
+the packed-prefill section (pad-FLOP elimination + chunked-prefill TTFT,
+DESIGN.md §12) to ``BENCH_packed.json`` so the perf trajectory is
+machine-readable run-over-run (CI runs ``--smoke``, which executes only
+those sections on reduced shapes and still emits all five files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -34,6 +35,8 @@ _DECODE_SECTIONS = ("decode_serve",)
 _ATTN_SECTIONS = ("attn_paged",)
 # sections whose rows land in BENCH_dispatch.json (route selection, §11)
 _DISPATCH_SECTIONS = ("dispatch_routes",)
+# sections whose rows land in BENCH_packed.json (packed prefill, §12)
+_PACKED_SECTIONS = ("packed_prefill",)
 
 
 def main(argv=None) -> int:
@@ -51,8 +54,9 @@ def main(argv=None) -> int:
 
     from benchmarks import (attn_paged, conv_gemm, decode_serve,
                             dispatch_routes, fig4_layers, fig5_sweep,
-                            fused_epilogue, roofline_bench,
-                            table1_dbb_accuracy, table2_efficiency)
+                            fused_epilogue, packed_prefill,
+                            roofline_bench, table1_dbb_accuracy,
+                            table2_efficiency)
 
     sections = [
         ("conv_gemm (implicit vs materialized im2col)",
@@ -65,6 +69,8 @@ def main(argv=None) -> int:
          "attn_paged", lambda: attn_paged.run(fast=fast)),
         ("dispatch_routes (auto vs forced kernel routes, §11)",
          "dispatch_routes", lambda: dispatch_routes.run(fast=fast)),
+        ("packed_prefill (padding-free admission + chunked prefill, §12)",
+         "packed_prefill", lambda: packed_prefill.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -79,7 +85,8 @@ def main(argv=None) -> int:
     if args.smoke:
         sections = [s for s in sections
                     if s[1] in (_PERF_SECTIONS + _DECODE_SECTIONS
-                                + _ATTN_SECTIONS + _DISPATCH_SECTIONS)]
+                                + _ATTN_SECTIONS + _DISPATCH_SECTIONS
+                                + _PACKED_SECTIONS)]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -118,6 +125,12 @@ def main(argv=None) -> int:
         path = os.path.join(args.out, "BENCH_dispatch.json")
         with open(path, "w") as f:
             json.dump(dsp, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    pkd = {k: results[k] for k in _PACKED_SECTIONS if k in results}
+    if pkd:
+        path = os.path.join(args.out, "BENCH_packed.json")
+        with open(path, "w") as f:
+            json.dump(pkd, f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
     if failures:

@@ -1,7 +1,10 @@
 """Flash-style fused attention kernels + paged-KV decode (DESIGN.md §10)."""
-from repro.kernels.attn.ops import (DEFAULT_PAGE, flash_attention, flash_ok,
+from repro.kernels.attn.ops import (DEFAULT_PAGE, PACKED_PAD_SEG,
+                                    flash_attention, flash_ok,
                                     identity_block_table,
+                                    packed_flash_attention,
                                     paged_decode_attention, paged_decode_ok)
 
-__all__ = ["flash_attention", "paged_decode_attention", "flash_ok",
-           "paged_decode_ok", "identity_block_table", "DEFAULT_PAGE"]
+__all__ = ["flash_attention", "packed_flash_attention",
+           "paged_decode_attention", "flash_ok", "paged_decode_ok",
+           "identity_block_table", "DEFAULT_PAGE", "PACKED_PAD_SEG"]

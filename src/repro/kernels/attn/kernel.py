@@ -48,7 +48,8 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import CompilerParams, pltpu
 
-__all__ = ["flash_prefill_pallas", "paged_decode_pallas", "NEG_INF"]
+__all__ = ["flash_prefill_pallas", "flash_prefill_packed_pallas",
+           "paged_decode_pallas", "NEG_INF"]
 
 NEG_INF = -1e30          # same sentinel as models.attention._mask_bias
 _L_EPS = 1e-30           # matches the chunked path's combine guard
@@ -77,13 +78,14 @@ def _online_update(s, v, m_ref, l_ref, acc_ref):
 # prefill
 # ---------------------------------------------------------------------------
 
-def _flash_prefill_kernel(q_ref, k_ref, v_ref, start_ref, o_ref,
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, start_ref, qoff_ref, o_ref,
                           m_ref, l_ref, acc_ref, *, n_kv: int, block_q: int,
                           block_kv: int, sm_scale: float, window: int,
                           softcap: float, out_dtype):
     i = pl.program_id(2)
     j = pl.program_id(3)
-    qi0 = i * block_q
+    qoff = qoff_ref[0, 0]        # chunked-prefill continuation offset (§12)
+    qi0 = qoff + i * block_q
     kj0 = j * block_kv
 
     @pl.when(j == 0)
@@ -128,6 +130,7 @@ def flash_prefill_pallas(
     k: jax.Array,                 # [B, Hkv, S, D]
     v: jax.Array,                 # [B, Hkv, S, D]
     start: Optional[jax.Array] = None,    # [B, 1] int32, first real key slot
+    q_offset: Optional[jax.Array] = None,  # [B, 1] int32, abs pos of q row 0
     *,
     sm_scale: float,
     window: int = 0,
@@ -137,7 +140,13 @@ def flash_prefill_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Causal (+ sliding window, + left-pad) flash attention over a full
-    sequence. Returns o [B, Hq, T, D] in q.dtype."""
+    sequence. Returns o [B, Hq, T, D] in q.dtype.
+
+    q_offset [B, 1] (optional): absolute key-slot position of query row 0 —
+    the chunked-prefill continuation case (DESIGN.md §12), where a chunk of
+    queries at absolute positions ``offset .. offset+T-1`` attends a cache
+    of S >= offset+T key slots. Zero (the default) is the ordinary
+    self-attention prefill where row index == absolute position."""
     b, hq, t, d = q.shape
     _, hkv, s_len, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
@@ -147,6 +156,8 @@ def flash_prefill_pallas(
         f"({block_q},{block_kv}); pad at the ops layer")
     if start is None:
         start = jnp.zeros((b, 1), jnp.int32)
+    if q_offset is None:
+        q_offset = jnp.zeros((b, 1), jnp.int32)
     n_q, n_kv = t // block_q, s_len // block_kv
 
     kernel = functools.partial(
@@ -163,6 +174,7 @@ def flash_prefill_pallas(
             pl.BlockSpec((1, 1, block_kv, d),
                          lambda bb, h, i, j: (bb, h // g, j, 0)),
             pl.BlockSpec((1, 1), lambda bb, h, i, j: (bb, 0)),
+            pl.BlockSpec((1, 1), lambda bb, h, i, j: (bb, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d),
                                lambda bb, h, i, j: (bb, h, i, 0)),
@@ -176,7 +188,139 @@ def flash_prefill_pallas(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v, start)
+    )(q, k, v, start, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# packed (cu_seqlens) prefill
+# ---------------------------------------------------------------------------
+
+def _packed_online_update(s, mask, v, m_ref, l_ref, acc_ref):
+    """Online-softmax step with an explicit probability mask. The packed
+    kernel needs it because a computed block can be *fully* masked for some
+    real query rows (a key block that only covers earlier segments): with
+    m still at NEG_INF, ``exp(s - m) = exp(0) = 1`` would silently count
+    every masked key. Zeroing p through the mask keeps those rows exact;
+    the plain prefill kernel never hits this (the first computed block
+    always holds key slot ``start``, valid for every real row)."""
+    m_prev = m_ref[:, :1]                               # [M, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)                     # [M, 1]
+    p = jnp.exp(s - m_cur) * mask.astype(jnp.float32)   # [M, Skv]
+    l_cur = l_ref[:, :1] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _flash_packed_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, n_kv: int, block_q: int,
+                         block_kv: int, sm_scale: float, window: int,
+                         softcap: float, out_dtype):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    qi0 = i * block_q
+    kj0 = j * block_kv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block skip: causal in absolute packed coordinates (a later segment's
+    # keys always sit at higher absolute positions, so forward cross-
+    # segment blocks fall out with the diagonal), plus the segment bound —
+    # a key block wholly in earlier segments than every query row of this
+    # block contributes nothing (segment ids are non-decreasing along the
+    # packed axis, so the block extremes decide)
+    run = kj0 <= qi0 + block_q - 1
+    run &= segk_ref[0, block_kv - 1] >= segq_ref[0, 0]
+    if window > 0:
+        run &= kj0 + block_kv - 1 > qi0 - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                    # [bq, D]
+        k = k_ref[0]                                    # [bkv, D]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        s = _softcap(s, softcap)
+        qi = qi0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = kj0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # block-diagonal mask from the row offsets: same segment + causal
+        # (within a segment both positions shift by the same cu_seqlens
+        # offset, so absolute comparisons ARE the logical causal/window
+        # structure — the plain kernel's convention, DESIGN.md §12)
+        mask = (kj <= qi) & (segq_ref[0][:, None] == segk_ref[0][None, :])
+        if window > 0:
+            mask &= kj > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+        _packed_online_update(s, mask, v_ref[0], m_ref, l_ref, acc_ref)
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        l = jnp.maximum(l_ref[:, :1], _L_EPS)
+        o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_prefill_packed_pallas(
+    q: jax.Array,                 # [Hq, T, D] — packed tokens, head-major
+    k: jax.Array,                 # [Hkv, T, D]
+    v: jax.Array,                 # [Hkv, T, D]
+    seg_ids: jax.Array,           # [1, T] int32, non-decreasing segment ids
+    *,
+    sm_scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """cu_seqlens-aware flash prefill over a PACKED ragged batch
+    (DESIGN.md §12): T is the total token count of all concatenated
+    requests, ``seg_ids[t]`` names the request owning packed position t
+    (non-decreasing; padding tokens carry a sentinel id larger than every
+    real segment). Masking is block-diagonal-causal — no query ever
+    attends a key of another request. Returns o [Hq, T, D] in q.dtype."""
+    hq, t, d = q.shape
+    hkv = k.shape[0]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    assert t % block_q == 0 and t % block_kv == 0, (
+        f"T={t} not divisible by blocks ({block_q},{block_kv}); "
+        "pad at the ops layer")
+    assert seg_ids.shape == (1, t), (seg_ids.shape, t)
+    n_q, n_kv = t // block_q, t // block_kv
+
+    kernel = functools.partial(
+        _flash_packed_kernel, n_kv=n_kv, block_q=block_q,
+        block_kv=block_kv, sm_scale=sm_scale, window=window,
+        softcap=softcap, out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, block_q), lambda h, i, j: (0, i)),
+            pl.BlockSpec((1, block_kv), lambda h, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),    # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, seg_ids, seg_ids)
 
 
 # ---------------------------------------------------------------------------

@@ -29,12 +29,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sta import SUBLANE, VMEM_BYTES
-from repro.kernels.attn.kernel import flash_prefill_pallas, paged_decode_pallas
-from repro.kernels.attn.ref import flash_prefill_ref, paged_decode_ref
+from repro.kernels.attn.kernel import (flash_prefill_packed_pallas,
+                                       flash_prefill_pallas,
+                                       paged_decode_pallas)
+from repro.kernels.attn.ref import (flash_prefill_ref, packed_prefill_ref,
+                                    paged_decode_ref)
 from repro.kernels.common import default_interpret, round_up
 
-__all__ = ["flash_attention", "paged_decode_attention", "flash_ok",
-           "paged_decode_ok", "identity_block_table", "DEFAULT_PAGE"]
+__all__ = ["flash_attention", "packed_flash_attention",
+           "paged_decode_attention", "flash_ok", "paged_decode_ok",
+           "identity_block_table", "DEFAULT_PAGE", "PACKED_PAD_SEG"]
+
+# segment-id sentinel for packed-batch padding tokens: larger than any real
+# segment, so pad rows match nothing and the non-decreasing block-skip
+# invariant holds (DESIGN.md §12)
+PACKED_PAD_SEG = 2 ** 30
 
 # default KV page size (slots) when the config leaves kv_page_size unset —
 # one f32 page of 64 slots × 128 head dim is half an MXU tile per head
@@ -132,6 +141,7 @@ def flash_attention(
     v: jax.Array,                 # [B, S, Hkv, D]
     start: Optional[jax.Array] = None,    # [B] int32 — first real key slot
     *,
+    q_offset: Optional[jax.Array] = None,  # [B] int32 — abs pos of q row 0
     sm_scale: Optional[float] = None,
     window: int = 0,
     softcap: float = 0.0,
@@ -147,6 +157,10 @@ def flash_attention(
     ragged batches, DESIGN.md §5); keys below it are masked and queries
     below it produce garbage rows the caller already ignores. The mask is
     _mask_bias's qpos/kpos convention in absolute coordinates.
+
+    q_offset [B]: absolute key-slot position of query row 0 — lets a
+    chunked-prefill continuation (T chunk rows, S cache slots, DESIGN.md
+    §12) reuse the same kernel; defaults to 0 (self-attention prefill).
     """
     b, t, hq, d = q.shape
     s_len = k.shape[1]
@@ -156,11 +170,13 @@ def flash_attention(
         interpret = default_interpret()
     start2 = (None if start is None
               else jnp.asarray(start, jnp.int32).reshape(b, 1))
+    qoff2 = (None if q_offset is None
+             else jnp.asarray(q_offset, jnp.int32).reshape(b, 1))
     qh = jnp.moveaxis(q, 2, 1)                          # [B, Hq, T, D]
     kh = jnp.moveaxis(k, 2, 1)
     vh = jnp.moveaxis(v, 2, 1)
     if not use_kernel:
-        o = flash_prefill_ref(qh, kh, vh, start2, sm_scale=sm_scale,
+        o = flash_prefill_ref(qh, kh, vh, start2, qoff2, sm_scale=sm_scale,
                               window=window, softcap=softcap)
         return jnp.moveaxis(o, 1, 2)
 
@@ -182,10 +198,65 @@ def flash_attention(
     if sp != s_len:
         kh = jnp.pad(kh, ((0, 0), (0, 0), (0, sp - s_len), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, sp - s_len), (0, 0)))
-    o = flash_prefill_pallas(qh, kh, vh, start2, sm_scale=sm_scale,
+    o = flash_prefill_pallas(qh, kh, vh, start2, qoff2, sm_scale=sm_scale,
                              window=window, softcap=softcap, block_q=bq,
                              block_kv=bkv, interpret=interpret)
     return jnp.moveaxis(o[:, :, :t], 1, 2)
+
+
+def packed_flash_attention(
+    q: jax.Array,                 # [T, Hq, D] — packed model layout
+    k: jax.Array,                 # [T, Hkv, D]
+    v: jax.Array,                 # [T, Hkv, D]
+    seg_ids: jax.Array,           # [T] int32, non-decreasing segment ids
+    *,
+    sm_scale: Optional[float] = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 0,
+    block_kv: int = 0,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Block-diagonal-causal flash attention over a PACKED ragged batch
+    (DESIGN.md §12): T = total tokens of all concatenated requests,
+    ``seg_ids[t]`` names the owning request. No query crosses a segment
+    boundary and no pad row reaches a GEMM with real weight — pad tokens
+    are re-labelled `PACKED_PAD_SEG` here, so even caller-supplied pad ids
+    can't collide with a real segment. Returns [T, Hq, D] in q.dtype;
+    rows whose mask is empty (padding) hold garbage the caller never
+    gathers."""
+    t, hq, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = default_interpret()
+    seg_ids = jnp.asarray(seg_ids, jnp.int32).reshape(1, t)
+    qh = jnp.moveaxis(q, 1, 0)                          # [Hq, T, D]
+    kh = jnp.moveaxis(k, 1, 0)
+    vh = jnp.moveaxis(v, 1, 0)
+    if not use_kernel:
+        o = packed_prefill_ref(qh, kh, vh, seg_ids[0], sm_scale=sm_scale,
+                               window=window, softcap=softcap)
+        return jnp.moveaxis(o, 0, 1)
+
+    if block_q and block_kv:
+        bq, bkv = block_q, block_kv
+    else:
+        bq, bkv = _heuristic_blocks(t, t, d, q.dtype.itemsize)
+        bq = bkv = min(bq, bkv)    # one padded T must serve both grids
+    lcm = bq * bkv // math.gcd(bq, bkv)
+    tp = round_up(t, lcm)
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0))
+        qh, kh, vh = jnp.pad(qh, pad), jnp.pad(kh, pad), jnp.pad(vh, pad)
+        seg_ids = jnp.pad(seg_ids, ((0, 0), (0, tp - t)),
+                          constant_values=PACKED_PAD_SEG)
+    o = flash_prefill_packed_pallas(qh, kh, vh, seg_ids, sm_scale=sm_scale,
+                                    window=window, softcap=softcap,
+                                    block_q=bq, block_kv=bkv,
+                                    interpret=interpret)
+    return jnp.moveaxis(o[:, :t], 0, 1)
 
 
 def identity_block_table(b: int, n_log: int) -> jax.Array:

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.kernels.attn.kernel import NEG_INF
 
-__all__ = ["flash_prefill_ref", "paged_decode_ref", "gather_pages"]
+__all__ = ["flash_prefill_ref", "packed_prefill_ref", "paged_decode_ref",
+           "gather_pages"]
 
 
 def _softcap(s: jax.Array, cap: float) -> jax.Array:
@@ -31,23 +32,28 @@ def flash_prefill_ref(
     k: jax.Array,                 # [B, Hkv, S, D]
     v: jax.Array,                 # [B, Hkv, S, D]
     start: Optional[jax.Array] = None,    # [B, 1] int32
+    q_offset: Optional[jax.Array] = None,  # [B, 1] int32
     *,
     sm_scale: float,
     window: int = 0,
     softcap: float = 0.0,
 ) -> jax.Array:
-    """Quadratic reference: full score tensor + plain softmax."""
+    """Quadratic reference: full score tensor + plain softmax. ``q_offset``
+    shifts query row 0 to that absolute key slot (chunked-prefill
+    continuation, DESIGN.md §12)."""
     b, hq, t, d = q.shape
     hkv, s_len = k.shape[1], k.shape[2]
     g = hq // hkv
     if start is None:
         start = jnp.zeros((b, 1), jnp.int32)
+    if q_offset is None:
+        q_offset = jnp.zeros((b, 1), jnp.int32)
     kg = jnp.repeat(k, g, axis=1)                       # [B, Hq, S, D]
     vg = jnp.repeat(v, g, axis=1)
     s = jnp.einsum("bhtd,bhsd->bhts", q, kg,
                    preferred_element_type=jnp.float32) * sm_scale
     s = _softcap(s, softcap)
-    qi = jnp.arange(t)[None, None, :, None]
+    qi = (jnp.arange(t)[None, :] + q_offset)[:, None, :, None]
     kj = jnp.arange(s_len)[None, None, None, :]
     mask = (kj <= qi) & (kj >= start[:, None, :, None])
     if window > 0:
@@ -55,6 +61,44 @@ def flash_prefill_ref(
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhts,bhsd->bhtd", p.astype(v.dtype), vg,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def packed_prefill_ref(
+    q: jax.Array,                 # [Hq, T, D] — packed tokens, head-major
+    k: jax.Array,                 # [Hkv, T, D]
+    v: jax.Array,                 # [Hkv, T, D]
+    seg_ids: jax.Array,           # [T] int32, non-decreasing segment ids
+    *,
+    sm_scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Quadratic oracle for the packed (cu_seqlens) prefill kernel
+    (DESIGN.md §12): block-diagonal-causal mask — a query attends a key iff
+    they share a segment id and the key's packed position is not later.
+    Within a segment both positions carry the same cu_seqlens offset, so
+    absolute comparisons reproduce the per-request causal/window ladder."""
+    hq, t, d = q.shape
+    hkv = k.shape[0]
+    g = hq // hkv
+    seg_ids = jnp.asarray(seg_ids, jnp.int32).reshape(t)
+    kg = jnp.repeat(k, g, axis=0)                       # [Hq, T, D]
+    vg = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("htd,hsd->hts", q, kg,
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = _softcap(s, softcap)
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = (kj <= qi) & (seg_ids[:, None] == seg_ids[None, :])
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (padding sentinels) get a uniform softmax over
+    # NEG_INF scores — garbage the caller never gathers
+    o = jnp.einsum("hts,hsd->htd", p.astype(v.dtype), vg,
                    preferred_element_type=jnp.float32)
     return o.astype(q.dtype)
 

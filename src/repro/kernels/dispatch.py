@@ -104,6 +104,13 @@ class OpSpec:
     ragged: bool = False
     chunk: int = 1024
     flash_active: bool = False
+    # packed cu_seqlens batch: m/n are TOTAL tokens across the ragged batch,
+    # not a per-row T — the padded-batch routes must not claim these
+    packed_seq: bool = False
+    # rows in a padded batch (the vmapped leading dim the per-row (t, s)
+    # cost must scale by; packed specs keep batch=1 since m already IS the
+    # whole batch's token count)
+    batch: int = 1
     # decode extras
     page: int = 0
     ring: bool = False
@@ -756,6 +763,8 @@ def conv(x: jax.Array, w, bias=None, *, kh: int, kw: int, stride: int = 1,
 # ---------------------------------------------------------------------------
 
 def _guard_attn_flash(spec: OpSpec) -> str:
+    if spec.packed_seq:
+        return "packed cu_seqlens batch (block-diagonal masking required)"
     if not spec.flash_active:
         return ("flash backend inactive (attn_impl and gemm_impl pin the "
                 "XLA paths, or a mesh is live)")
@@ -768,6 +777,8 @@ def _guard_attn_flash(spec: OpSpec) -> str:
 
 
 def _guard_attn_chunked(spec: OpSpec) -> str:
+    if spec.packed_seq:
+        return "packed cu_seqlens batch (block-diagonal masking required)"
     if spec.ragged:
         return "ragged per-row positions (chunked masks assume one ladder)"
     if spec.m != spec.n:
@@ -778,10 +789,14 @@ def _guard_attn_chunked(spec: OpSpec) -> str:
 
 
 def _attn_cost(spec: OpSpec, score_passes: float) -> Tuple[float, float]:
-    t, s, d = spec.m, spec.n, spec.k
-    flops = 4.0 * t * s * d
-    nbytes = ((2 * t * d + 2 * s * d) * spec.itemsize
-              + score_passes * t * s * _F32)
+    # per-row (t, s) work × the padded batch rows. Packed specs carry the
+    # whole batch's token count in m with batch=1, which is exactly what
+    # makes their roofline honest: total_tokens · s_visible instead of
+    # B · T_max² (DESIGN.md §12)
+    t, s, d, b = spec.m, spec.n, spec.k, max(spec.batch, 1)
+    flops = 4.0 * b * t * s * d
+    nbytes = b * ((2 * t * d + 2 * s * d) * spec.itemsize
+                  + score_passes * t * s * _F32)
     return flops, nbytes
 
 
@@ -802,12 +817,53 @@ register_route(Route(
 
 register_route(Route(
     name="attn_naive", domain="attention", priority=2,
-    guard=lambda s: "",
+    guard=lambda s: ("packed cu_seqlens batch (block-diagonal masking "
+                     "required)" if s.packed_seq else ""),
     cost=lambda s: _attn_cost(s, 2.0),
     describe="quadratic oracle (full [T,S] score bias materialized)"))
 
+
+def _guard_attn_packed_flash(spec: OpSpec) -> str:
+    if not spec.packed_seq:
+        return "not a packed cu_seqlens batch"
+    if not spec.flash_active:
+        return ("flash backend inactive (attn_impl and gemm_impl pin the "
+                "XLA paths, or a mesh is live)")
+    if not spec.float_ok:
+        return "non-float operands"
+    from repro.kernels.attn.ops import flash_ok
+    if not flash_ok(spec.m, spec.n, spec.k, spec.itemsize):
+        return "smallest legal (bq, bkv) block pair exceeds VMEM"
+    return ""
+
+
+register_route(Route(
+    name="attn_packed_flash", domain="attention", priority=0,
+    guard=_guard_attn_packed_flash,
+    cost=lambda s: _attn_cost(s, 0.0),
+    describe="cu_seqlens flash kernel: block-diagonal-causal over packed "
+             "total_tokens, zero pad rows"))
+
+register_route(Route(
+    name="attn_packed_ref", domain="attention", priority=3,
+    guard=lambda s: ("" if s.packed_seq else "not a packed cu_seqlens "
+                     "batch"),
+    cost=lambda s: _attn_cost(s, 2.0),
+    describe="quadratic packed oracle (full [T,T] segment-mask score "
+             "tensor)"))
+
 _ATTN_IMPL_ROUTE = {"flash": "attn_flash", "chunked": "attn_chunked",
                     "naive": "attn_naive"}
+# packed calls have no chunked implementation: anything but flash drops to
+# the quadratic packed oracle
+_PACKED_IMPL_ROUTE = {"flash": "attn_packed_flash",
+                      "chunked": "attn_packed_ref",
+                      "naive": "attn_packed_ref"}
+# a kernel_routes pin on a padded route carries its intent (kernel vs XLA)
+# to the packed variant instead of tripping the forced-route warning
+_ATTN_TO_PACKED = {"attn_flash": "attn_packed_flash",
+                   "attn_chunked": "attn_packed_ref",
+                   "attn_naive": "attn_packed_ref"}
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -821,7 +877,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     spec = OpSpec(
         domain="attention", m=t, k=q.shape[-1], n=s,
         itemsize=q.dtype.itemsize, out_itemsize=q.dtype.itemsize,
-        ragged=ragged, chunk=cfg.attn_chunk,
+        ragged=ragged, chunk=cfg.attn_chunk, batch=q.shape[0],
         flash_active=flash_backend_active(cfg),
         float_ok=jnp.issubdtype(q.dtype, jnp.floating))
     cfg_routes = dict(routes_from_cfg(cfg))
@@ -842,6 +898,59 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         return A._chunked_causal_attention(q, k, v, cfg, cfg.attn_chunk)
     pos1d = positions[0] if positions.ndim > 1 else positions
     return A._naive_attention(q, k, v, pos1d, pos1d, cfg)
+
+
+# a continuation chunk is not a full-sequence call (T != S, per-row offset
+# ladder): the chunked path has no implementation for it, so a chunked pin
+# degrades to naive rather than warning every trace
+_CHUNK_IMPL_ROUTE = {"flash": "attn_flash", "chunked": "attn_naive",
+                     "naive": "attn_naive"}
+
+
+def chunk_attention_route(cfg, *, t: int, s: int, d: int, itemsize: int,
+                          floating: bool = True) -> str:
+    """Route gate for a chunked-prefill continuation (DESIGN.md §12): T
+    chunk queries at an absolute offset against one row's S cache slots.
+    Flash serves it through ``q_offset``; everything else drops to the
+    naive qpos/kpos mask."""
+    spec = OpSpec(domain="attention", m=t, k=d, n=s, itemsize=itemsize,
+                  out_itemsize=itemsize, ragged=True, chunk=cfg.attn_chunk,
+                  flash_active=flash_backend_active(cfg), float_ok=floating)
+    cfg_routes = dict(routes_from_cfg(cfg))
+    if cfg_routes.get("attention") == "attn_chunked":
+        cfg_routes["attention"] = "attn_naive"
+    if cfg.attn_impl in _CHUNK_IMPL_ROUTE:
+        cfg_routes.setdefault("attention", _CHUNK_IMPL_ROUTE[cfg.attn_impl])
+    name, _ = select(spec, cfg_routes)
+    return name
+
+
+def packed_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     seg_ids: jax.Array, cfg) -> jax.Array:
+    """Front door for packed (cu_seqlens) prefill attention: ``q/k/v
+    [1, T, H, D]`` where T is the ragged batch's TOTAL token count and
+    ``seg_ids [T]`` names the owning request per packed position
+    (DESIGN.md §12). The spec charges m = total_tokens with batch=1 — the
+    honest roofline the padded route table can't express."""
+    from repro.kernels.attn import packed_flash_attention
+    t = q.shape[1]
+    spec = OpSpec(
+        domain="attention", m=t, k=q.shape[-1], n=t,
+        itemsize=q.dtype.itemsize, out_itemsize=q.dtype.itemsize,
+        packed_seq=True, chunk=cfg.attn_chunk,
+        flash_active=flash_backend_active(cfg),
+        float_ok=jnp.issubdtype(q.dtype, jnp.floating))
+    cfg_routes = dict(routes_from_cfg(cfg))
+    if cfg_routes.get("attention") in _ATTN_TO_PACKED:
+        cfg_routes["attention"] = _ATTN_TO_PACKED[cfg_routes["attention"]]
+    if cfg.attn_impl in _PACKED_IMPL_ROUTE:
+        cfg_routes.setdefault("attention", _PACKED_IMPL_ROUTE[cfg.attn_impl])
+    name, _ = select(spec, cfg_routes)
+    o = packed_flash_attention(
+        q[0], k[0], v[0], seg_ids, window=cfg.sliding_window,
+        softcap=cfg.attn_logit_softcap,
+        use_kernel=(name == "attn_packed_flash"))
+    return o[None]
 
 
 # ---------------------------------------------------------------------------

@@ -26,14 +26,18 @@ from repro.serve.engine import ServeEngine
 __all__ = ["main"]
 
 
-def _log_routes(cfg, batch: int, smax: int, packed: bool) -> None:
+def _log_routes(cfg, batch: int, smax: int, packed: bool,
+                total_tokens: int = 0) -> None:
     """Print the dispatch registry's ranked route tables (DESIGN.md §11)
-    for this serving run's hot shapes — decode-batch layer GEMM and decode
+    for this serving run's hot shapes — decode-batch layer GEMM, prefill
+    attention at the shape the engine actually dispatches, and decode
     attention at the *actual* cache length — so the serve log shows *why*
     each kernel runs. ``smax`` and the page derivation mirror
     `decode_attention_apply` exactly (gcd-adaptive page when kv_page_size
     is unset); a fabricated shape here could log a route the engine never
-    takes."""
+    takes. ``total_tokens > 0`` means packed admission: prefill is charged
+    at the ragged batch's real token count (one cu_seqlens call), not the
+    padded B×T_max rectangle the legacy scheduler would dispatch."""
     import math
 
     import jax.numpy as jnp
@@ -42,6 +46,7 @@ def _log_routes(cfg, batch: int, smax: int, packed: bool) -> None:
     from repro.kernels.attn import DEFAULT_PAGE
 
     d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
     print(f"\nkernel routes (gemm_impl={cfg.gemm_impl!r}, "
           f"attn_impl={cfg.attn_impl!r}, overrides="
           f"{dict(cfg.kernel_routes) or 'none'}):")
@@ -50,10 +55,21 @@ def _log_routes(cfg, batch: int, smax: int, packed: bool) -> None:
     print(dispatch.format_table(dispatch.explain(
         "matmul", m=batch, k=d, n=ff, dtype=cfg.dtype, packed=packed,
         cfg=cfg, epilogue_ops=1)))   # the MLP GEMMs fuse one act/scale
+    if total_tokens > 0:
+        print(f"- prefill attention [total_tokens={total_tokens}, "
+              f"packed cu_seqlens]:")
+        print(dispatch.format_table(dispatch.explain(
+            "attention", m=total_tokens, k=hd, n=total_tokens,
+            dtype=cfg.dtype, cfg=cfg, packed_seq=True)))
+    else:
+        print(f"- prefill attention [B={batch}, T_max={smax}, padded]:")
+        print(dispatch.format_table(dispatch.explain(
+            "attention", m=smax, k=hd, n=smax, dtype=cfg.dtype, cfg=cfg,
+            batch=batch)))
     g = cfg.num_heads // max(1, cfg.num_kv_heads)
     page = cfg.kv_page_size or math.gcd(smax, DEFAULT_PAGE)
     route = dispatch.decode_attention_route(
-        cfg, group=g, head_dim=cfg.resolved_head_dim,
+        cfg, group=g, head_dim=hd,
         itemsize=jnp.dtype(cfg.dtype).itemsize, page=page, smax=smax)
     print(f"- decode attention (G={g}, smax={smax}, page={page}): "
           f"{route}\n")
@@ -85,6 +101,17 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pool-pages", type=int, default=0,
                     help="physical page pool size (with --kv-page-size); "
                          "0 = contiguous-cache HBM parity")
+    ap.add_argument("--prefill-mode", default="packed",
+                    choices=["packed", "padded"],
+                    help="prompt admission: 'packed' concatenates the "
+                         "ragged batch into one cu_seqlens prefill call "
+                         "(no pad rows in any GEMM, DESIGN.md §12); "
+                         "'padded' is the legacy per-row rectangle")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: split prompts into chunks of "
+                         "this many tokens so long prompts interleave "
+                         "with decode steps (bounds TTFT jitter); 0 = "
+                         "whole-prompt prefill (packed mode only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -111,18 +138,24 @@ def main(argv=None) -> int:
               f"{packed_bytes/1e6:.1f} MB "
               f"({100*packed_bytes/dense_bytes:.1f}%)")
 
-    # generate() caches prompt+budget slots; serve() buckets to powers of
-    # two — log the generate()-shaped cache length (the common case);
-    # "packed" only when the weights actually are (--packed AND dbb on)
-    _log_routes(cfg, args.batch, args.prompt_len + args.max_new,
-                packed=bool(args.packed and cfg.dbb.enabled))
-    eng = ServeEngine(cfg, params, max_batch=args.batch,
-                      kv_pool_pages=args.kv_pool_pages)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.batch
     prompts = [list(rng.integers(2, cfg.vocab_size,
                                  size=args.prompt_len))
                for _ in range(n_req)]
+    # generate() caches prompt+budget slots; serve() buckets to powers of
+    # two — log the generate()-shaped cache length (the common case);
+    # "packed" only when the weights actually are (--packed AND dbb on).
+    # Packed admission charges prefill at the first wave's real token
+    # count (sum over admitted prompts), not the B×T_max rectangle.
+    wave = sum(len(p) for p in prompts[:args.batch])
+    _log_routes(cfg, args.batch, args.prompt_len + args.max_new,
+                packed=bool(args.packed and cfg.dbb.enabled),
+                total_tokens=wave if args.prefill_mode == "packed" else 0)
+    eng = ServeEngine(cfg, params, max_batch=args.batch,
+                      kv_pool_pages=args.kv_pool_pages,
+                      prefill_mode=args.prefill_mode,
+                      prefill_chunk=args.prefill_chunk)
     if n_req > args.batch:
         outs = eng.serve(prompts, max_new_tokens=args.max_new)
     else:

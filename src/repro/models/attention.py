@@ -31,7 +31,8 @@ from repro.kernels.attn import (DEFAULT_PAGE, identity_block_table,
                                 paged_decode_attention)
 from repro.models.common import apply_rope, linear_init
 
-__all__ = ["attention_init", "attention_apply", "decode_attention_apply",
+__all__ = ["attention_init", "attention_apply", "packed_attention_apply",
+           "chunk_attention_apply", "decode_attention_apply",
            "paged_decode_attention_apply", "init_kv_cache"]
 
 _NEG_INF = -1e30
@@ -322,6 +323,52 @@ def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
         in_specs=(xspec, wspecs),
         out_specs=xspec,
         check_vma=False)(x, {k: p[k] for k in wspecs})
+
+
+def packed_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                           seg_ids: jax.Array, positions: jax.Array,
+                           qkv: Optional[Tuple] = None) -> jax.Array:
+    """Packed (cu_seqlens) prefill attention (DESIGN.md §12): x [1, T, d]
+    is a ragged batch's tokens concatenated along one axis, ``seg_ids [T]``
+    names the owning request per packed position (non-decreasing; padding
+    carries a larger sentinel), ``positions [1, T]`` the per-token logical
+    position within its request (RoPE). Block-diagonal-causal by
+    construction — no cross-request attention, no pad row in any GEMM with
+    real extent. qkv optionally reuses the prefill body's projections."""
+    q, k, v = qkv if qkv is not None else _project_qkv(p, cfg, x, positions)
+    from repro.kernels import dispatch
+    o = dispatch.packed_attention(q, k, v, seg_ids, cfg)
+    b, t, hq, hd = o.shape
+    return _lin(p["o_proj"], o.reshape(b, t, hq * hd), cfg)
+
+
+def chunk_attention_apply(p: Dict, cfg: ModelConfig, q: jax.Array,
+                          cache_k: jax.Array, cache_v: jax.Array,
+                          offset: jax.Array) -> jax.Array:
+    """Continuation attention for one chunk-prefilling row (DESIGN.md §12):
+    q [1, C, Hq, D] are the chunk's projected queries at absolute cache
+    positions ``offset .. offset+C-1``; cache_k/v [1, S, Hkv, D] is the
+    row's full cache (earlier chunks + this chunk already scattered in).
+    The causal mask bounds reads to slots <= qpos, all of which are real —
+    packed-admitted rows have no left-pad. Returns the o_proj output
+    [1, C, d]."""
+    from repro.kernels import dispatch
+    c, s = q.shape[1], cache_k.shape[1]
+    hq, hd = q.shape[2], q.shape[3]
+    route = dispatch.chunk_attention_route(
+        cfg, t=c, s=s, d=hd, itemsize=q.dtype.itemsize,
+        floating=jnp.issubdtype(q.dtype, jnp.floating))
+    if route == "attn_flash":
+        from repro.kernels.attn import flash_attention
+        o = flash_attention(q, cache_k, cache_v,
+                            q_offset=jnp.broadcast_to(offset, (1,)),
+                            window=cfg.sliding_window,
+                            softcap=cfg.attn_logit_softcap)
+    else:
+        qpos = offset + jnp.arange(c)
+        kpos = jnp.arange(s)
+        o = _naive_attention(q, cache_k, cache_v, qpos, kpos, cfg)
+    return _lin(p["o_proj"], o.reshape(1, c, hq * hd), cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,8 @@ from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 
 __all__ = ["init_params", "forward", "decode_step", "prefill",
-           "init_cache", "lm_head_weight"]
+           "prefill_packed", "prefill_continue", "init_cache",
+           "lm_head_weight"]
 
 
 # ---------------------------------------------------------------------------
@@ -486,6 +487,107 @@ def prefill(params: Dict, cfg: ModelConfig, tokens=None, embeds=None,
     if start is not None:
         new_cache["start"] = start
     return x, new_cache
+
+
+def prefill_packed(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                   seg_ids: jax.Array, positions: jax.Array,
+                   rows: jax.Array, cols: jax.Array, cache: Dict
+                   ) -> Tuple[jax.Array, Dict]:
+    """Padding-free packed prefill (DESIGN.md §12): the ragged batch's
+    tokens ride concatenated in ``tokens [1, Tp]`` (Tp = bucketed total),
+    with per-token metadata instead of a [B, T_max] grid —
+
+      seg_ids   [Tp]    owning request per packed position (non-decreasing;
+                        padding carries a larger sentinel)
+      positions [1, Tp] logical position within the owning request (RoPE +
+                        block-diagonal-causal masking)
+      rows/cols [Tp]    KV scatter address per token: (batch row, slot) for
+                        a contiguous cache, (physical page, offset) for a
+                        paged pool. Padding rows carry an out-of-range row
+                        sentinel and are DROPPED by the scatter — no pad
+                        token ever lands in a cache.
+
+    Returns (hidden [1, Tp, d], cache with K/V scattered in). Bookkeeping
+    leaves (length / start / block_table) are untouched: the engine
+    installs them when a request's prefill completes, which is what keeps
+    half-prefilled rows invisible to the decode batch."""
+    assert cfg.family in ("dense_lm", "moe_lm", "vlm_lm", "audio_lm"), cfg.family
+    x = _embed_inputs(params, cfg, tokens)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lp = _unpack_layer(lp, cfg)
+        h = norm_apply(cfg.norm, lp["ln_attn"], x)
+        q, k, v = attn._project_qkv(lp["attn"], cfg, h, positions)
+        nk = ck.at[rows, cols].set(k[0].astype(ck.dtype), mode="drop")
+        nv = cv.at[rows, cols].set(v[0].astype(cv.dtype), mode="drop")
+        y = attn.packed_attention_apply(lp["attn"], cfg, h, seg_ids,
+                                        positions, qkv=(q, k, v))
+        x = x + y
+        h = norm_apply(cfg.norm, lp["ln_mlp"], x)
+        if cfg.family == "moe_lm":
+            z, _ = moe_apply(lp["moe"], cfg, h)
+            x = x + z
+        else:
+            x = x + mlp_apply(lp["mlp"], cfg, h)
+        return x, (nk, nv)
+
+    kk, vv = (("k_pages", "v_pages") if "k_pages" in cache else ("k", "v"))
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache[kk],
+                                         cache[vv]))
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return x, dict(cache, **{kk: nk, vv: nv})
+
+
+def prefill_continue(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                     positions: jax.Array, rows: jax.Array, cols: jax.Array,
+                     kv_sel: jax.Array, cache: Dict
+                     ) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill continuation for ONE request (DESIGN.md §12):
+    ``tokens [1, C]`` is the next chunk of a long prompt whose earlier
+    chunks already sit in the cache; ``positions [1, C]`` its absolute
+    positions (``offset .. offset+C-1`` — packed-admitted rows have no
+    left-pad, so logical == absolute). rows/cols address the K/V scatter
+    exactly as in `prefill_packed`. ``kv_sel`` selects the row's cache for
+    attention: the slot index (contiguous) or the [n_log] block-table row
+    (paged). The chunk attends its own fresh keys plus every earlier slot
+    through the causal mask — never another row's."""
+    assert cfg.family in ("dense_lm", "moe_lm", "vlm_lm", "audio_lm"), cfg.family
+    x = _embed_inputs(params, cfg, tokens)
+    offset = positions[0, 0]
+    paged = "k_pages" in cache
+    if paged:
+        from repro.kernels.attn.ref import gather_pages
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lp = _unpack_layer(lp, cfg)
+        h = norm_apply(cfg.norm, lp["ln_attn"], x)
+        q, k, v = attn._project_qkv(lp["attn"], cfg, h, positions)
+        nk = ck.at[rows, cols].set(k[0].astype(ck.dtype), mode="drop")
+        nv = cv.at[rows, cols].set(v[0].astype(cv.dtype), mode="drop")
+        if paged:
+            krow = gather_pages(nk, kv_sel[None])       # [1, S, Hkv, D]
+            vrow = gather_pages(nv, kv_sel[None])
+        else:
+            krow = jax.lax.dynamic_slice_in_dim(nk, kv_sel, 1, axis=0)
+            vrow = jax.lax.dynamic_slice_in_dim(nv, kv_sel, 1, axis=0)
+        y = attn.chunk_attention_apply(lp["attn"], cfg, q, krow, vrow,
+                                       offset)
+        x = x + y
+        h = norm_apply(cfg.norm, lp["ln_mlp"], x)
+        if cfg.family == "moe_lm":
+            z, _ = moe_apply(lp["moe"], cfg, h)
+            x = x + z
+        else:
+            x = x + mlp_apply(lp["mlp"], cfg, h)
+        return x, (nk, nv)
+
+    kk, vv = (("k_pages", "v_pages") if paged else ("k", "v"))
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache[kk],
+                                         cache[vv]))
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return x, dict(cache, **{kk: nk, vv: nv})
 
 
 def _zamba2_prefill(params, cfg: ModelConfig, x: jax.Array, cache: Dict

@@ -49,8 +49,9 @@ from repro.dist.collectives import cross_entropy  # noqa: F401 (API surface)
 from repro.kernels import dispatch
 from repro.models import registry
 
-__all__ = ["make_decode_step", "make_prefill_step", "ServeEngine",
-           "greedy_from_hidden"]
+__all__ = ["make_decode_step", "make_prefill_step",
+           "make_packed_prefill_step", "make_chunk_prefill_step",
+           "ServeEngine", "greedy_from_hidden"]
 
 # Families whose decode cache is the attention [L, B, S, H, D] K/V layout
 # with per-row lengths — the continuous-batching scheduler scatters per-slot
@@ -131,6 +132,52 @@ def make_prefill_step(cfg: ModelConfig):
     return step
 
 
+def make_packed_prefill_step(cfg: ModelConfig):
+    """packed_prefill(params, cache, tokens [1, Tp], seg_ids [Tp],
+    positions [1, Tp], rows [Tp], cols [Tp], gather_idx [Gp])
+    -> (next tokens [Gp], cache).
+
+    One call prefills EVERY request packed into the token axis (DESIGN.md
+    §12): K/V scatter to (rows, cols) — padding carries an out-of-range
+    row and is dropped — and ``gather_idx`` names each request's last
+    packed position, whose hidden state feeds the greedy head."""
+
+    def step(params, cache, tokens, seg_ids, positions, rows, cols,
+             gather_idx):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.prefill_packed(
+            p, cfg, tokens, seg_ids, positions, rows, cols, cache)
+        last = jnp.take(hidden[0], gather_idx, axis=0)[:, None]  # [Gp, 1, d]
+        nxt = greedy_from_hidden(last, registry.lm_head_weight(p, cfg),
+                                 impl=_gemm_impl(cfg), cfg=cfg)
+        return nxt, new_cache
+
+    return step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig):
+    """chunk_prefill(params, cache, tokens [1, Cp], positions [1, Cp],
+    rows [Cp], cols [Cp], kv_sel, last_idx) -> (next token [1], cache).
+
+    One continuation chunk of a long prompt for ONE request (DESIGN.md
+    §12): scatter the chunk's K/V, attend the row's cache (selected by
+    ``kv_sel`` — slot index or block-table row), and return the greedy
+    token from the chunk's last real position (only consumed when this
+    chunk completes the prompt)."""
+
+    def step(params, cache, tokens, positions, rows, cols, kv_sel,
+             last_idx):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.prefill_continue(
+            p, cfg, tokens, positions, rows, cols, kv_sel, cache)
+        last = jnp.take(hidden, last_idx, axis=1)[:, None]       # [1, 1, d]
+        nxt = greedy_from_hidden(last, registry.lm_head_weight(p, cfg),
+                                 impl=_gemm_impl(cfg), cfg=cfg)
+        return nxt, new_cache
+
+    return step
+
+
 def _bucket_len(n: int, minimum: int = 8) -> int:
     """Pad a prompt length up to a power-of-two bucket (≥ minimum) so the
     per-slot admission prefill compiles once per bucket, not once per
@@ -190,6 +237,15 @@ class ServeEngine:
     # kernel's KV tile — the identity-block-table control the paged-vs-
     # contiguous bit-equivalence suite compares against.
     paged: Optional[bool] = None
+    # prefill layout for serve() (DESIGN.md §12): "packed" concatenates
+    # admitted prompts into one [total_tokens] axis (no pad token ever
+    # enters a GEMM); "padded" is the legacy per-slot left-padded bucket
+    # prefill the parity suite compares against.
+    prefill_mode: str = "packed"
+    # split prompts into fixed-size chunks so the scheduler interleaves
+    # prefill with decode chunks (bounds decode-row TTFT jitter under
+    # heavy admission). 0 = whole-prompt prefill. Packed mode only.
+    prefill_chunk: int = 0
 
     def __post_init__(self):
         # hoisted non-layer decompression: pay the embed/LM-head DBB
@@ -205,6 +261,13 @@ class ServeEngine:
         self._chunk_fns: Dict[int, Any] = {}
         self._admit = jax.jit(self._admit_fn, donate_argnums=0)
         self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
+        self._packed_prefill = jax.jit(make_packed_prefill_step(self.cfg),
+                                       donate_argnums=1)
+        self._prefill_continue = jax.jit(make_chunk_prefill_step(self.cfg),
+                                         donate_argnums=1)
+        self._install = jax.jit(self._install_fn, donate_argnums=0)
+        self._install_paged = jax.jit(self._install_paged_fn,
+                                      donate_argnums=0)
         # filled by the paged serve() scheduler (occupancy benchmarking)
         self.serve_stats: Dict[str, int] = {}
 
@@ -332,17 +395,50 @@ class ServeEngine:
         }
         return new, cur.at[slot].set(tok), done.at[slot].set(False)
 
+    @staticmethod
+    def _install_fn(cache, cur, done, slot, tok, length):
+        """Activate a slot whose prompt finished PACKED prefill: the K/V
+        already sits in the shared cache (scattered token-by-token by the
+        packed/chunk prefill calls), so activation only installs the
+        bookkeeping — length, a zero start (packed rows have no left-pad),
+        the first generated token, and the live done bit."""
+        new = dict(cache,
+                   length=cache["length"].at[slot].set(length),
+                   start=cache["start"].at[slot].set(0))
+        return new, cur.at[slot].set(tok), done.at[slot].set(False)
+
+    @staticmethod
+    def _install_paged_fn(cache, cur, done, table_row, slot, tok, length):
+        """Paged activation: same as `_install_fn` plus the block-table
+        row. Until this runs the slot's table points at the dummy page, so
+        the half-prefilled pages (written physically, table-bypassing)
+        were invisible to every decode step."""
+        new = dict(cache,
+                   block_table=cache["block_table"].at[slot].set(table_row),
+                   length=cache["length"].at[slot].set(length),
+                   start=cache["start"].at[slot].set(0))
+        return new, cur.at[slot].set(tok), done.at[slot].set(False)
+
     def serve(self, prompts: List[List[int]],
               max_new_tokens: Union[int, Sequence[int]] = 16,
               fetch_chunk: Optional[int] = None,
-              prompt_bucket: int = 8) -> List[List[int]]:
+              prompt_bucket: int = 8,
+              prefill_mode: Optional[str] = None,
+              prefill_chunk: Optional[int] = None) -> List[List[int]]:
         """Continuous-batching greedy decode over any number of requests.
 
         max_new_tokens: one budget for all requests, or one per request.
         Requests are admitted into free slots between decode chunks and
         retire the moment they hit EOS or their budget — the batch stays
         full whenever there is queued work, instead of draining to the
-        slowest request like a static wave."""
+        slowest request like a static wave.
+
+        prefill_mode / prefill_chunk override the engine defaults per
+        call: "packed" (default) prefills admitted prompts padding-free
+        through the cu_seqlens path, optionally split into
+        ``prefill_chunk``-token chunks interleaved with decode chunks;
+        "padded" is the legacy left-padded per-slot prefill (DESIGN.md
+        §12)."""
         n_req = len(prompts)
         if isinstance(max_new_tokens, int):
             budgets = [max_new_tokens] * n_req
@@ -396,6 +492,13 @@ class ServeEngine:
                 use_paged = False
         backend = (_PagedKvBackend(self, smax) if use_paged
                    else _ContiguousKvBackend(self, smax))
+        mode = prefill_mode if prefill_mode is not None else self.prefill_mode
+        assert mode in ("packed", "padded"), mode
+        if mode == "packed":
+            pchunk = (prefill_chunk if prefill_chunk is not None
+                      else self.prefill_chunk)
+            return self._serve_loop_packed(prompts, budgets, blens, smax,
+                                           chunk, backend, pchunk)
         return self._serve_loop(prompts, budgets, blens, smax, chunk,
                                 backend)
 
@@ -492,6 +595,214 @@ class ServeEngine:
         self.serve_stats = backend.stats
         return outs
 
+    def _serve_loop_packed(self, prompts: List[List[int]],
+                           budgets: List[int], blens: List[int], smax: int,
+                           chunk: int, backend, prefill_chunk: int
+                           ) -> List[List[int]]:
+        """Padding-free continuous batching (DESIGN.md §12). Differences
+        from `_serve_loop`:
+
+        * Admission splits into slot ASSIGNMENT (reserve cache space, no
+          compute) and PREFILL. Assigned-but-unfinished requests sit in
+          ``pending``; their rows stay done=True, so decode never sees a
+          half-prefilled prompt.
+        * All first chunks pack into ONE cu_seqlens call per scheduler
+          iteration — total_tokens of work, zero pad rows — and requests
+          admit with start=0 (no left-pad: packed rows are solo-exact by
+          construction, not by masking).
+        * With ``prefill_chunk > 0`` at most that many prompt tokens
+          prefill between consecutive decode chunks (continuations run
+          FIFO, one chunk per row per iteration), which bounds the TTFT
+          jitter a long admission inflicts on in-flight decode rows.
+
+        Half-prefilled/free rows still decode-step (the chunk scan is
+        whole-batch); their garbage K/V writes are neutralized by
+        construction: contiguous rows park their write cursor at ``smax``
+        (clamped writes land in slot smax-1, which chunk prefill never
+        addresses and a live row always real-overwrites before attending);
+        paged rows write through a block table still pointing at the
+        reserved dummy page."""
+        import time
+        t0 = time.perf_counter()
+        cache = backend.init_cache()
+        paged = "k_pages" in cache
+        if not paged:
+            cache = dict(cache, length=jnp.full((self.max_batch,), smax,
+                                                jnp.int32))
+        cur = jnp.zeros((self.max_batch,), jnp.int32)
+        done = jnp.ones((self.max_batch,), bool)
+        outs: List[List[int]] = [[] for _ in prompts]
+        queue = deque(range(len(prompts)))
+        free = list(range(self.max_batch))
+        active: Dict[int, int] = {}                  # slot -> request idx
+        left: Dict[int, int] = {}                    # request idx -> budget
+        # slot -> [ridx, prefilled_offset, grant] (insertion order = FIFO)
+        pending: Dict[int, list] = {}
+        stats = backend.stats
+        stats.update(prefill_calls=0, packed_prefill_tokens=0,
+                     prompt_tokens=0, max_prefill_call_tokens=0,
+                     prefill_iters=0)
+        ttft: Dict[int, float] = {}
+
+        def bump(tokens_padded: int, tokens_real: int):
+            stats["prefill_calls"] += 1
+            stats["packed_prefill_tokens"] += tokens_padded
+            stats["prompt_tokens"] += tokens_real
+            stats["max_prefill_call_tokens"] = max(
+                stats["max_prefill_call_tokens"], tokens_padded)
+
+        def complete(slot: int, st: list, tok: int):
+            nonlocal cache, cur, done
+            ridx, grant = st[0], st[2]
+            outs[ridx].append(tok)
+            ttft[ridx] = time.perf_counter() - t0
+            del pending[slot]
+            if tok == self.eos_id or budgets[ridx] <= 1:
+                backend.release(grant)
+                free.append(slot)
+                return
+            cache, cur, done = backend.install(
+                cache, cur, done, slot, jnp.int32(tok),
+                len(prompts[ridx]), grant)
+            active[slot] = ridx
+            left[ridx] = budgets[ridx] - 1
+
+        def run_continue(slot: int, st: list) -> int:
+            nonlocal cache
+            ridx, off = st[0], st[1]
+            p = prompts[ridx]
+            c = (min(len(p) - off, prefill_chunk) if prefill_chunk > 0
+                 else len(p) - off)
+            cp = _bucket_len(c, 8)
+            toks = np.zeros((1, cp), np.int32)
+            toks[0, :c] = p[off:off + c]
+            pos = off + np.arange(cp, dtype=np.int32)
+            rows = np.full((cp,), backend.pad_row(), np.int32)
+            cols = np.zeros((cp,), np.int32)
+            rows[:c], cols[:c] = backend.token_addr(
+                slot, st[2], np.arange(off, off + c, dtype=np.int64))
+            nxt, cache = self._prefill_continue(
+                self.params, cache, jnp.asarray(toks),
+                jnp.asarray(pos)[None], jnp.asarray(rows),
+                jnp.asarray(cols), backend.kv_sel(slot, st[2]),
+                jnp.int32(c - 1))
+            st[1] = off + c
+            bump(cp, c)
+            if st[1] == len(p):
+                complete(slot, st, int(jax.device_get(nxt)[0]))
+            return c
+
+        while queue or pending or active:
+            # 1) slot assignment: reservation only, arrival order; a
+            # deferred reservation (paged pool exhausted) is skipped, not
+            # head-of-line blocking
+            skipped: List[int] = []
+            while queue and free:
+                ridx = queue.popleft()
+                if budgets[ridx] <= 0:
+                    continue
+                grant = backend.reserve(ridx, len(prompts[ridx]),
+                                        budgets[ridx])
+                if grant is None:
+                    skipped.append(ridx)
+                    stats["deferred_admissions"] += 1
+                    continue
+                pending[free.pop()] = [ridx, 0, grant]
+            queue.extendleft(reversed(skipped))
+            if not pending and not active:
+                if queue:        # deferred with nothing left to retire
+                    backend.starved(queue[0], blens, budgets)
+                continue
+
+            # 2) prefill: ≤ prefill_chunk prompt tokens this iteration
+            # (always ≥ one chunk of progress when anything is pending) —
+            # continuations first, then the packed first-chunk call
+            budget = prefill_chunk if prefill_chunk > 0 else float("inf")
+            spent = 0
+            if pending:
+                stats["prefill_iters"] += 1
+            for slot, st in list(pending.items()):
+                if st[1] == 0:
+                    continue
+                if spent >= budget:
+                    break
+                spent += run_continue(slot, st)
+            items = []
+            for slot, st in list(pending.items()):
+                if st[1] != 0:
+                    continue
+                length = len(prompts[st[0]])
+                c = (min(length, prefill_chunk) if prefill_chunk > 0
+                     else length)
+                if (spent > 0 or items) and spent + c > budget:
+                    break
+                items.append((slot, st, c))
+                spent += c
+            if items:
+                total = sum(c for _, _, c in items)
+                tp = _bucket_len(total, 8)
+                toks = np.zeros((tp,), np.int32)
+                # pad positions carry segment id n_items: larger than every
+                # real id (keeps seg non-decreasing), matched by nothing
+                seg = np.full((tp,), len(items), np.int32)
+                pos = np.zeros((tp,), np.int32)
+                rows = np.full((tp,), backend.pad_row(), np.int32)
+                cols = np.zeros((tp,), np.int32)
+                gidx = np.zeros((_bucket_len(len(items), 1),), np.int32)
+                off = 0
+                for i, (slot, st, c) in enumerate(items):
+                    toks[off:off + c] = prompts[st[0]][:c]
+                    seg[off:off + c] = i
+                    pos[off:off + c] = np.arange(c)
+                    rows[off:off + c], cols[off:off + c] = \
+                        backend.token_addr(slot, st[2],
+                                           np.arange(c, dtype=np.int64))
+                    gidx[i] = off + c - 1
+                    off += c
+                nxt, cache = self._packed_prefill(
+                    self.params, cache, jnp.asarray(toks)[None],
+                    jnp.asarray(seg), jnp.asarray(pos)[None],
+                    jnp.asarray(rows), jnp.asarray(cols),
+                    jnp.asarray(gidx))
+                bump(tp, total)
+                host_tok = None
+                for i, (slot, st, c) in enumerate(items):
+                    st[1] = c
+                    if c == len(prompts[st[0]]):
+                        if host_tok is None:     # one sync per packed call
+                            host_tok = np.asarray(jax.device_get(nxt))
+                        complete(slot, st, int(host_tok[i]))
+
+            # 3) decode chunk + retirement (same accounting as _serve_loop)
+            if not active:
+                continue
+            stats["peak_active"] = max(stats["peak_active"], len(active))
+            cur, cache, done, toks_d = self._chunk_fn(chunk)(
+                self.params, cache, cur, done)
+            host = np.asarray(toks_d)                # one fetch per chunk
+            retired = []
+            for slot, ridx in active.items():
+                for t in host[:, slot]:
+                    outs[ridx].append(int(t))
+                    left[ridx] -= 1
+                    if t == self.eos_id or left[ridx] <= 0:
+                        retired.append(slot)
+                        break
+            for slot in retired:
+                del active[slot]
+                free.append(slot)
+                done = done.at[slot].set(True)
+                cache = backend.retire(cache, slot)
+                if not paged:
+                    # park the freed stripe's write cursor back at smax
+                    # (see the loop docstring)
+                    cache = dict(cache, length=cache["length"].at[slot]
+                                 .set(smax))
+        stats["ttft_s"] = [ttft.get(i, float("nan"))
+                           for i in range(len(prompts))]
+        self.serve_stats = stats
+        return outs
+
 
 # ---------------------------------------------------------------------------
 # serve() KV backends: how cache space is reserved and admissions scatter
@@ -551,6 +862,24 @@ class _ContiguousKvBackend:
 
     def starved(self, ridx: int, blens, budgets) -> None:
         raise AssertionError("contiguous reservations cannot defer")
+
+    # -- packed-prefill addressing (DESIGN.md §12) ------------------------
+
+    def pad_row(self) -> int:
+        """Out-of-range scatter row for packed padding tokens (dropped)."""
+        return self.eng.max_batch
+
+    def token_addr(self, slot: int, grant, pos: np.ndarray):
+        """(rows, cols) scatter address for this request's token at each
+        absolute position: its slot stripe, slot index = position."""
+        return (np.full(pos.shape, slot, np.int32), pos.astype(np.int32))
+
+    def kv_sel(self, slot: int, grant):
+        return jnp.int32(slot)
+
+    def install(self, cache, cur, done, slot: int, tok, length: int, grant):
+        return self.eng._install(cache, cur, done, jnp.int32(slot), tok,
+                                 jnp.int32(length))
 
 
 class _PagedKvBackend:
@@ -630,3 +959,32 @@ class _PagedKvBackend:
             f"request {ridx} cannot be admitted: needs "
             f"{pages_needed(blens[ridx], budgets[ridx], self.page)} "
             f"pages, pool has {self.alloc.free_pages} free")
+
+    # -- packed-prefill addressing (DESIGN.md §12) ------------------------
+
+    def pad_row(self) -> int:
+        """Out-of-range scatter row for packed padding tokens: one past
+        the pool (the dummy page 0 is a real pool page — pads must not
+        collide with it)."""
+        return self.pool_pages
+
+    def token_addr(self, slot: int, grant, pos: np.ndarray):
+        """Physical (page, offset) per absolute position through the
+        granted page list — packed prefill writes the pool directly; the
+        block table only learns about these pages at install time."""
+        g = np.asarray(grant, np.int64)
+        return (g[pos // self.page].astype(np.int32),
+                (pos % self.page).astype(np.int32))
+
+    def kv_sel(self, slot: int, grant):
+        row = np.zeros((self.n_log,), np.int32)      # tail -> dummy page
+        row[:len(grant)] = grant
+        return jnp.asarray(row)
+
+    def install(self, cache, cur, done, slot: int, tok, length: int, grant):
+        row = np.zeros((self.n_log,), np.int32)      # tail -> dummy page
+        row[:len(grant)] = grant
+        self.slot_pages[slot] = grant
+        return self.eng._install_paged(cache, cur, done, jnp.asarray(row),
+                                       jnp.int32(slot), tok,
+                                       jnp.int32(length))

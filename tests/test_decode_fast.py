@@ -336,6 +336,24 @@ class TestContinuousBatching:
                 .generate(prompts, max_new_tokens=7) for fc in (1, 3, 8)]
         assert outs[0] == outs[1] == outs[2]
 
+    def test_decode_unperturbed_by_concurrent_chunk_prefill(self, small_lm):
+        """Mid-stream chunked prefill (DESIGN.md §12): a decoding row's
+        tokens must be bit-identical whether or not another slot is
+        chunk-prefilling a long prompt between its decode steps."""
+        from repro.serve.engine import ServeEngine
+
+        cfg, params = small_lm
+        eng = ServeEngine(cfg, params, max_batch=2)
+        short = [5, 17, 3]
+        long = [int(x) % 200 + 2 for x in range(24)]
+        # chunk=4: the short prompt admits whole in the first packed call
+        # and starts decoding while the long prompt still owes five
+        # continuation chunks — every decode step interleaves with one.
+        both = eng.serve([short, long], max_new_tokens=[8, 4],
+                         prefill_mode="packed", prefill_chunk=4)
+        assert both[0] == eng.generate([short], max_new_tokens=8)[0]
+        assert both[1] == eng.generate([long], max_new_tokens=4)[0]
+
     def test_ssm_falls_back_to_waves(self):
         from repro.configs import get_config
         from repro.models import registry

@@ -106,6 +106,32 @@ class TestGoldenRouteTable:
                                 cfg=xla_cfg, ragged=True)
         assert _chosen(decs) == "attn_naive"
 
+    def test_packed_route_charged_at_total_tokens(self):
+        """Ragged 8:1 max:median mix (DESIGN.md §12): the packed
+        cu_seqlens route is costed at the batch's real token count, while
+        the padded cost model charges the B×T_max rectangle — on this mix
+        the rectangle mis-ranks the same traffic by > 2×. Padded routes
+        must also refuse the packed spec outright (block-diagonal masking
+        is not optional)."""
+        flash_cfg = ModelConfig(gemm_impl="pallas", dtype="float32")
+        lens = [512] + [64] * 7
+        total, b, t_max = sum(lens), len(lens), max(lens)
+        packed = dispatch.explain("attention", m=total, k=64, n=total,
+                                  cfg=flash_cfg, packed_seq=True)
+        assert _chosen(packed) == "attn_packed_flash"
+        by = {d.name: d for d in packed}
+        for name in ("attn_flash", "attn_chunked", "attn_naive"):
+            assert not by[name].applicable
+            assert "packed" in by[name].reason
+        # charged at total_tokens, not a padded rectangle
+        assert by["attn_packed_flash"].flops == 4.0 * total * total * 64
+        padded = dispatch.explain("attention", m=t_max, k=64, n=t_max,
+                                  cfg=flash_cfg, batch=b)
+        assert _chosen(padded) == "attn_flash"
+        cost_packed = by["attn_packed_flash"].cost_s
+        cost_padded = next(d for d in padded if d.chosen).cost_s
+        assert cost_padded > 2.0 * cost_packed
+
     def test_decode_routes(self):
         flash_cfg = ModelConfig(gemm_impl="pallas", dtype="float32",
                                 num_heads=4, num_kv_heads=4)
