@@ -44,24 +44,10 @@ def _best_of(fn, n: int = 3) -> float:
 
 
 def _peak_intermediate(fn, *args) -> int:
-    """Largest intermediate aval (elements) in the traced computation."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def walk(jaxpr):
-        peak = 0
-        for eqn in jaxpr.eqns:
-            for v in eqn.outvars:
-                if hasattr(v.aval, "shape"):
-                    peak = max(peak, int(np.prod(v.aval.shape)))
-            for val in eqn.params.values():
-                for sub in (val if isinstance(val, (tuple, list)) else [val]):
-                    if isinstance(sub, ClosedJaxpr):
-                        peak = max(peak, walk(sub.jaxpr))
-                    elif isinstance(sub, Jaxpr):
-                        peak = max(peak, walk(sub))
-        return peak
-
-    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    """Largest intermediate aval (elements) in the traced computation —
+    the shared walker from the static verifier."""
+    from repro.analysis.materialize import max_intermediate_elems
+    return max_intermediate_elems(fn, *args)
 
 
 def _flash_vs_chunked(fast: bool) -> Dict:

@@ -1,0 +1,29 @@
+"""Static kernel-contract verifier (DESIGN.md §13).
+
+Five passes over declarative `KernelContract`s — no kernel execution:
+
+  vmem           worst-case VMEM residency vs the named budgets, cross-
+                 checked against the dispatch guards (drift both ways)
+  races          grid-revisit analysis: revisited output blocks need
+                 declared accumulation + guarded init/final-store
+  bounds         BlockSpec index maps evaluated over the whole grid:
+                 out-of-bounds blocks and overlapping writes
+  materialize    shared jaxpr walk (`assert_no_intermediate_larger_than`)
+                 proving the no-score / no-dense-DBB / no-im2col claims
+  dispatch       registry consistency: unreachable or shadowed routes,
+                 cost monotonicity in M/N/K
+
+Plus the repo-wide import-layering pass (`layering`). CLI:
+``python -m repro.analysis.lint`` (JSON report via ``--json``).
+"""
+from repro.analysis.contracts import (BlockDecl, KernelContract, ScratchDecl,
+                                      Violation, all_contracts)
+from repro.analysis.materialize import (MaterializationCheck,
+                                        assert_no_intermediate_larger_than,
+                                        iter_avals, max_intermediate_elems)
+
+__all__ = [
+    "BlockDecl", "ScratchDecl", "KernelContract", "Violation",
+    "all_contracts", "iter_avals", "max_intermediate_elems",
+    "assert_no_intermediate_larger_than", "MaterializationCheck",
+]

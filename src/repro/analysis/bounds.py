@@ -1,0 +1,111 @@
+"""Pass 3 — index-map bounds analysis (DESIGN.md §13).
+
+Evaluate every BlockSpec index map over the whole grid (exhaustively up
+to a cap, corner/edge-sampled beyond it) at the contract's *padded*
+array shapes, and flag:
+
+  * ``oob`` — a block index addressing elements outside the array
+    (Pallas block semantics: block ``i`` covers
+    ``[i·bs, (i+1)·bs)`` per dim);
+  * ``index-map-arity`` / ``index-map-rank`` — maps whose signature
+    doesn't match the grid or whose result doesn't match the block rank;
+  * ``overlapping-write`` — two grid points writing the same output
+    block while differing in a non-accumulation dim (accumulation
+    revisits are sequential by pass 2's discipline; anything else is a
+    write conflict).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from repro.analysis.contracts import (BlockDecl, KernelContract, Violation)
+
+__all__ = ["grid_points", "check_contracts", "GRID_ENUM_CAP"]
+
+# full enumeration up to this many grid points; beyond it sample the
+# corner/mid lattice (3^rank points) — affine maps fail at corners first
+GRID_ENUM_CAP = 65536
+
+
+def grid_points(grid: Sequence[int], cap: int = GRID_ENUM_CAP
+                ) -> Iterator[Tuple[int, ...]]:
+    total = 1
+    for g in grid:
+        total *= max(int(g), 1)
+    if total <= cap:
+        yield from itertools.product(*(range(g) for g in grid))
+        return
+    axes = []
+    for g in grid:
+        vals = sorted({0, g // 2, g - 1})
+        axes.append(vals)
+    yield from itertools.product(*axes)
+
+
+def _eval(blk: BlockDecl, ids: Tuple[int, ...]):
+    idx = blk.index_map(*ids)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def _check_block(c: KernelContract, blk: BlockDecl, is_output: bool,
+                 out: List[Violation]) -> None:
+    subject = f"{c.name}:{blk.name}"
+    # writes per output block: grid-dim value sets seen at each block idx
+    seen: Dict[Tuple[int, ...], List[set]] = {}
+    for ids in grid_points(c.grid):
+        try:
+            idx = _eval(blk, ids)
+        except TypeError as e:
+            out.append(Violation(
+                pass_name="bounds", code="index-map-arity",
+                subject=subject,
+                message=f"index map rejected grid ids {ids}: {e}"))
+            return
+        if len(idx) != len(blk.block_shape):
+            out.append(Violation(
+                pass_name="bounds", code="index-map-rank",
+                subject=subject,
+                message=f"index map returned rank {len(idx)} for a "
+                        f"rank-{len(blk.block_shape)} block"))
+            return
+        for d, (i, bs, asz) in enumerate(
+                zip(idx, blk.block_shape, blk.array_shape)):
+            if i < 0 or (i + 1) * bs > asz:
+                out.append(Violation(
+                    pass_name="bounds", code="oob", subject=subject,
+                    message=f"grid ids {ids} → block {idx}: dim {d} "
+                            f"covers [{i * bs}, {(i + 1) * bs}) outside "
+                            f"array extent {asz}"))
+                return          # one witness per block is enough
+        if is_output:
+            slot = seen.setdefault(
+                idx, [set() for _ in range(len(c.grid))])
+            for d, v in enumerate(ids):
+                slot[d].add(v)
+    if is_output:
+        acc = set(c.acc_dims)
+        for idx, dimvals in seen.items():
+            conflict = [d for d, vals in enumerate(dimvals)
+                        if len(vals) > 1 and d not in acc]
+            if conflict:
+                out.append(Violation(
+                    pass_name="bounds", code="overlapping-write",
+                    subject=subject,
+                    message=f"output block {idx} written from multiple "
+                            f"values of non-accumulation grid dims "
+                            f"{conflict}"))
+                return
+
+
+def check_contracts(contracts: Sequence[KernelContract]
+                    ) -> Tuple[int, List[Violation]]:
+    out: List[Violation] = []
+    for c in contracts:
+        for blk in c.inputs:
+            _check_block(c, blk, is_output=False, out=out)
+        for blk in c.outputs:
+            _check_block(c, blk, is_output=True, out=out)
+    return len(contracts), out

@@ -1,0 +1,145 @@
+"""Declarative kernel contracts — the verifier's input (DESIGN.md §13).
+
+Each kernel package exports a ``contract`` module with one function
+``contracts() -> List[KernelContract]`` describing representative
+instances of every Pallas kernel it owns: the grid, every BlockSpec
+(block shape + index map + the padded array it tiles), scratch buffers,
+which grid dims the output accumulates over, and the VMEM budgets the
+dispatch guards enforce. Contracts mirror the ``pallas_call`` sites in
+``kernel.py`` 1:1 — they are the checkable statement of what the kernel
+*claims*, and the passes in this package hold both the claims and the
+dispatch guards to it.
+
+Conventions:
+
+  * index maps take the grid ids as plain ints (one per grid dim, in
+    grid order) and return a tuple of *block* indices, exactly like the
+    Pallas ``BlockSpec`` index_map;
+  * ``admitted`` records the verdict of the real dispatch guard
+    (`skinny_ok` / `flash_ok` / `paged_decode_ok` / `_vmem_fits` /
+    `choose_block_shape`) on this instance, and ``vmem_reject`` whether
+    a rejection was specifically a VMEM rejection — the vmem pass
+    cross-checks both directions (guard admits what doesn't fit; guard
+    rejects what does = dead headroom);
+  * contracts include boundary instances the guards *reject*, so guard
+    drift is observable, not just in-budget happy paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["BlockDecl", "ScratchDecl", "KernelContract", "Violation",
+           "all_contracts", "CONTRACT_MODULES"]
+
+IndexMap = Callable[..., Tuple[int, ...]]
+
+# every kernel package that exports a contract module
+CONTRACT_MODULES = (
+    "repro.kernels.sta_gemm.contract",
+    "repro.kernels.dbb_gemm.contract",
+    "repro.kernels.skinny.contract",
+    "repro.kernels.conv_gemm.contract",
+    "repro.kernels.attn.contract",
+)
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDecl:
+    """One BlockSpec of a ``pallas_call``: a block of ``block_shape``
+    carved out of a (padded) ``array_shape`` operand by ``index_map``."""
+    name: str
+    block_shape: Tuple[int, ...]
+    index_map: IndexMap
+    array_shape: Tuple[int, ...]
+    itemsize: int = 4
+    resident: bool = False       # declared grid-constant (skinny A block)
+
+    @property
+    def block_bytes(self) -> int:
+        return _prod(self.block_shape) * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchDecl:
+    """One VMEM scratch buffer (accumulator / running-softmax state)."""
+    name: str
+    shape: Tuple[int, ...]
+    itemsize: int = 4
+
+    @property
+    def nbytes(self) -> int:
+        return _prod(self.shape) * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Everything the static passes need about one kernel instance."""
+    name: str                    # unique, e.g. "sta_gemm[m256 k512 n1024]"
+    route: str                   # dispatch route family this belongs to
+    domain: str                  # dispatch domain
+    grid: Tuple[int, ...]
+    dimension_semantics: Tuple[str, ...]
+    inputs: Tuple[BlockDecl, ...]
+    outputs: Tuple[BlockDecl, ...]
+    scratch: Tuple[ScratchDecl, ...] = ()
+    acc_dims: Tuple[int, ...] = ()       # grid dims the output sums over
+    guarded_init: bool = False           # pl.when(first)-guarded acc init
+    guarded_store: bool = False          # pl.when(last)-guarded final store
+    vmem_budget: int = 0                 # whole-working-set budget (bytes)
+    resident_budget: int = 0             # budget for resident blocks only
+    extra_vmem_bytes: int = 0            # body intermediates (score tile)
+    admitted: bool = True                # the real dispatch guard's verdict
+    vmem_reject: bool = False            # ...and whether a "no" was VMEM
+    notes: str = ""
+
+    def residency_bytes(self) -> int:
+        """Worst-case single-buffered VMEM working set: every operand and
+        output block live at once, plus scratch and declared body
+        intermediates (double-buffering is what the budget's /2 headroom
+        pays for — see KERNEL_VMEM_BUDGET)."""
+        blocks = sum(b.block_bytes for b in self.inputs + self.outputs)
+        return (blocks + sum(s.nbytes for s in self.scratch)
+                + self.extra_vmem_bytes)
+
+    def resident_bytes(self) -> int:
+        """Bytes of blocks declared grid-constant (resident)."""
+        return sum(b.block_bytes for b in self.inputs + self.outputs
+                   if b.resident)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: which pass, which rule, on what, and why."""
+    pass_name: str
+    code: str                    # stable rule id, e.g. "vmem-overflow"
+    subject: str                 # contract / route / file the rule hit
+    message: str
+
+    def as_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+
+def all_contracts(modules: Optional[Tuple[str, ...]] = None
+                  ) -> List[KernelContract]:
+    """Collect every kernel package's declared contracts (unique names)."""
+    out: List[KernelContract] = []
+    seen: Dict[str, str] = {}
+    for modname in (modules or CONTRACT_MODULES):
+        mod: Any = importlib.import_module(modname)
+        for c in mod.contracts():
+            if c.name in seen:
+                raise ValueError(
+                    f"duplicate contract name {c.name!r} "
+                    f"({modname} and {seen[c.name]})")
+            seen[c.name] = modname
+            out.append(c)
+    return out

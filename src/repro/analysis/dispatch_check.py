@@ -1,0 +1,203 @@
+"""Pass 5 — dispatch registry consistency (DESIGN.md §13).
+
+Sweeps each domain's route table over a grid of `OpSpec`s spanning the
+shapes the ``configs/`` model zoo actually produces (decode GEMV through
+prefill GEMM, packed and dense, flash on and off) and flags:
+
+  * ``unreachable`` — a route whose guard rejects every spec in the
+    sweep: its guard (or the sweep) has drifted and the kernel is dead
+    code in practice;
+  * ``shadowed`` — a route that is applicable somewhere but *chosen*
+    nowhere: its cost/priority combination can never win, so either the
+    cost model or the priority is wrong;
+  * ``non-monotone-cost`` — a route whose modeled cost decreases when a
+    problem dimension (M, N, or K) grows, all else fixed. The roofline
+    terms are all sums of monotone products, so a decrease means a
+    typo'd term (the bug class that silently flips a route choice).
+
+The sweep replays `dispatch.select`'s auto path (guards, costs, defer,
+cost-tie priority break) over the *given* route table — hermetic, so it
+analyzes fixture registries the same way as the real one, and no
+``REPRO_FORCE_ROUTE`` override can distort reachability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.contracts import Violation
+
+__all__ = ["default_specs", "check_registry"]
+
+# canonical M ladder: decode token, GQA group, skinny cap, prefill tiles
+_MS = (1, 8, 32, 256, 1024)
+
+
+def default_specs() -> Dict[str, List]:
+    """Per-domain OpSpec sweep derived from the configs/ model zoo dims
+    (d_model / d_ff / vocab of the smoke zoo) plus the canonical M
+    ladder."""
+    from repro.configs import get_config
+    from repro.kernels.dispatch import OpSpec
+
+    cfg = get_config("olmo-1b", smoke=True)
+    dims = sorted({cfg.d_model, cfg.d_ff, cfg.vocab_size, 256, 4096})
+
+    mm: List[OpSpec] = []
+    for m in _MS:
+        for k in dims:
+            for n in dims:
+                for packed in (False, True):
+                    mm.append(OpSpec(
+                        domain="matmul", m=m, k=k, n=n, itemsize=4,
+                        packed=packed, pallas=True))
+    # reachability extremes: XLA-only call sites and the decode GEMV
+    mm.append(OpSpec(domain="matmul", m=8, k=256, n=256, pallas=False))
+    mm.append(OpSpec(domain="matmul", m=8, k=256, n=32000, pallas=True,
+                     gemv=True))
+    mm.append(OpSpec(domain="matmul", m=8, k=250, n=256, pallas=True,
+                     packed=True))          # K % block != 0
+
+    conv: List[OpSpec] = []
+    for (b, h, w, c) in ((2, 8, 8, 8), (2, 16, 16, 16), (4, 32, 32, 32)):
+        for packed in (False, True):
+            for pallas in (True, False):
+                conv.append(_conv_spec(b, h, w, c, 3, 3, 1, 32,
+                                       packed=packed, pallas=pallas))
+
+    attn: List[OpSpec] = []
+    for t in (256, 2048):
+        for flash in (True, False):
+            attn.append(OpSpec(
+                domain="attention", m=t, k=64, n=t, itemsize=4, batch=2,
+                chunk=256, flash_active=flash, float_ok=True))
+    for flash in (True, False):
+        attn.append(OpSpec(
+            domain="attention", m=1024, k=64, n=1024, itemsize=4,
+            batch=1, chunk=256, flash_active=flash, float_ok=True,
+            packed_seq=True))
+
+    dec: List[OpSpec] = []
+    for flash in (True, False):
+        for ring in (False, True):
+            dec.append(OpSpec(
+                domain="attn_decode", m=4, k=64, n=512, itemsize=4,
+                page=64, ring=ring, flash_active=flash, float_ok=True))
+
+    return {"matmul": mm, "conv": conv, "attention": attn,
+            "attn_decode": dec}
+
+
+def _conv_spec(b, h, w, c, kh, kw, stride, n, *, packed, pallas):
+    from repro.kernels.conv_gemm.ops import out_spatial
+    from repro.kernels.dispatch import OpSpec
+    ho, _, _ = out_spatial(h, kh, stride, "SAME")
+    wo, _, _ = out_spatial(w, kw, stride, "SAME")
+    return OpSpec(domain="conv", m=b * ho * wo, k=kh * kw * c, n=n,
+                  itemsize=4, packed=packed, pallas=pallas,
+                  conv_geom=(b, h, w, c, kh, kw, stride, "SAME"))
+
+
+def _grow(spec, dim: str):
+    """The same spec with one problem dimension doubled (conv specs grow
+    the generating geometry so conv_geom stays consistent)."""
+    if spec.domain == "conv" and spec.conv_geom:
+        b, h, w, c, kh, kw, stride = spec.conv_geom[:7]
+        if dim == "m":
+            return _conv_spec(b, 2 * h, w, c, kh, kw, stride, spec.n,
+                              packed=spec.packed, pallas=spec.pallas)
+        if dim == "k":
+            return _conv_spec(b, h, w, 2 * c, kh, kw, stride, spec.n,
+                              packed=spec.packed, pallas=spec.pallas)
+        return dataclasses.replace(spec, n=2 * spec.n)
+    if spec.domain == "attention" and dim in ("m", "n"):
+        # T and S grow together for self-attention specs (T != S flips
+        # the chunked guard rather than testing cost shape)
+        return dataclasses.replace(spec, m=2 * spec.m, n=2 * spec.n)
+    return dataclasses.replace(spec, **{dim: 2 * getattr(spec, dim)})
+
+
+def _auto_select(table: Dict, spec) -> Optional[str]:
+    """`dispatch.select`'s auto path over an explicit route table."""
+    from repro.kernels.dispatch import COST_TIE_RTOL, _decide
+    from repro.roofline.analysis import HW_V5E
+    decisions = [_decide(r, spec, HW_V5E) for r in table.values()]
+    cands = [d for d in decisions if d.applicable and not d.deferred]
+    if not cands:
+        cands = [d for d in decisions if d.applicable]
+    if not cands:
+        return None
+    best = min(d.cost_s for d in cands)
+    tied = [d for d in cands if d.cost_s <= best * (1.0 + COST_TIE_RTOL)]
+    return min(tied, key=lambda d: (d.priority, d.cost_s, d.name)).name
+
+
+def check_registry(routes_by_domain: Dict[str, Dict],
+                   specs_by_domain: Dict[str, Sequence],
+                   ) -> Tuple[int, List[Violation]]:
+    """Run the three registry checks. ``routes_by_domain`` maps domain →
+    {name: Route}; ``specs_by_domain`` maps domain → OpSpec sweep."""
+    out: List[Violation] = []
+    checked = 0
+    for domain, table in routes_by_domain.items():
+        specs = list(specs_by_domain.get(domain, ()))
+        if not specs:
+            continue
+        applicable = {name: 0 for name in table}
+        chosen = {name: 0 for name in table}
+        for spec in specs:
+            checked += 1
+            for name, route in table.items():
+                if route.guard(spec) == "":
+                    applicable[name] += 1
+            name = _auto_select(table, spec)
+            if name in chosen:
+                chosen[name] += 1
+        for name, route in table.items():
+            if applicable[name] == 0:
+                out.append(Violation(
+                    pass_name="dispatch", code="unreachable",
+                    subject=f"{domain}:{name}",
+                    message=f"guard rejects all {len(specs)} specs "
+                            f"in the sweep"))
+            elif chosen[name] == 0:
+                out.append(Violation(
+                    pass_name="dispatch", code="shadowed",
+                    subject=f"{domain}:{name}",
+                    message=f"applicable on {applicable[name]} "
+                            f"specs but never selected (cost/"
+                            f"priority can never win)"))
+        out.extend(_check_monotone(domain, table, specs))
+    return checked, out
+
+
+def _check_monotone(domain: str, table: Dict, specs: Sequence
+                    ) -> List[Violation]:
+    from repro.roofline.analysis import HW_V5E
+    out: List[Violation] = []
+    flagged = set()
+    for spec in specs:
+        for dim in ("m", "k", "n"):
+            try:
+                grown = _grow(spec, dim)
+            except Exception:
+                continue
+            for name, route in table.items():
+                if name in flagged:
+                    continue
+                c0 = _cost_s(route, spec, HW_V5E)
+                c1 = _cost_s(route, grown, HW_V5E)
+                if c1 < c0 * (1.0 - 1e-9):
+                    flagged.add(name)
+                    out.append(Violation(
+                        pass_name="dispatch", code="non-monotone-cost",
+                        subject=f"{domain}:{name}",
+                        message=f"cost decreases when {dim.upper()} "
+                                f"doubles ({c0:.3e}s → {c1:.3e}s at "
+                                f"m={spec.m} k={spec.k} n={spec.n})"))
+    return out
+
+
+def _cost_s(route, spec, hw) -> float:
+    flops, nbytes = route.cost(spec)
+    return max(flops / hw.peak_flops, nbytes / hw.hbm_bw)

@@ -1,0 +1,136 @@
+"""Repo-wide import-layering pass (DESIGN.md §13).
+
+Promotes the old single-test grep (`test_dispatch.py`) into a linter
+rule over all of ``src/repro``:
+
+  * **kernels stay at the bottom**: ``repro.kernels.*`` must not import
+    the upper layers (``models`` / ``serve`` / ``train`` / ``launch`` /
+    ``data``). One documented exception: ``kernels/dispatch.py`` front
+    doors delegate the attention *implementations* back to
+    ``models.attention`` (the registry owns the decision, the model
+    layer owns the math).
+  * **kernel internals go through the front doors**: outside
+    ``kernels/`` (and this analysis package), the kernel subsystem
+    packages (``sta_gemm`` / ``dbb_gemm`` / ``skinny`` / ``conv_gemm`` /
+    ``attn`` / ``epilogue``) are private — model/serve layers import
+    ``repro.kernels`` root, ``dispatch``, ``common`` or ``autotune``.
+    Documented exceptions: the attention/conv model layers and the
+    serving engine reach named ``attn`` / ``conv_gemm.ref`` helpers
+    (wrappers and reference oracles, not kernels).
+
+Only genuine ``import`` / ``from`` statements count — mentions in
+docstrings or comments don't trip the pass.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.contracts import Violation
+
+__all__ = ["check", "LayerRule", "DEFAULT_RULES"]
+
+_IMPORT_RE = re.compile(
+    r"^\s*(?:from\s+(?P<from>[\w.]+)\s+import|import\s+(?P<mod>[\w.]+))")
+
+
+class LayerRule:
+    """One layering rule: files under ``scope`` must not import modules
+    matching ``banned`` (regex on the dotted module path), except the
+    (file-suffix → allowed-module-prefixes) pairs in ``allow``."""
+
+    def __init__(self, name: str, scope: str, banned: str,
+                 allow: Dict[str, Sequence[str]] = (), describe: str = ""):
+        self.name = name
+        self.scope = scope
+        self.banned = re.compile(banned)
+        self.allow = dict(allow or {})
+        self.describe = describe
+
+    def allowed(self, rel: str, module: str) -> bool:
+        for pat, prefixes in self.allow.items():
+            # trailing-separator patterns match whole directories,
+            # otherwise match the file path suffix
+            hit = (rel.startswith(pat) if pat.endswith(os.sep)
+                   else rel.endswith(pat))
+            if hit and any(module == p or module.startswith(p + ".")
+                           for p in prefixes):
+                return True
+        return False
+
+
+DEFAULT_RULES = (
+    LayerRule(
+        name="kernels-no-upper-layers",
+        scope=os.path.join("repro", "kernels"),
+        banned=r"^repro\.(models|serve|train|launch|data)(\.|$)",
+        allow={
+            # dispatch front doors delegate attention impls to the model
+            # layer — the one sanctioned upward edge
+            os.path.join("kernels", "dispatch.py"): ("repro.models",),
+        },
+        describe="kernels/ never imports models/ serve/ train/ launch/ "
+                 "data/"),
+    LayerRule(
+        name="kernel-internals-private",
+        scope="repro",
+        banned=r"^repro\.kernels\.(sta_gemm|dbb_gemm|skinny|conv_gemm"
+               r"|attn|epilogue)(\.|$)",
+        allow={
+            # kernels may use their own internals, and the analysis
+            # package reads the contract/ops modules by design
+            os.path.join("repro", "kernels") + os.sep: ("repro.kernels",),
+            os.path.join("repro", "analysis") + os.sep: ("repro.kernels",),
+            # sanctioned named helpers (wrappers / reference oracles)
+            os.path.join("models", "attention.py"): ("repro.kernels.attn",),
+            os.path.join("models", "transformer.py"):
+                ("repro.kernels.attn.ref",),
+            os.path.join("models", "cnn.py"): ("repro.kernels.conv_gemm.ref",),
+            os.path.join("serve", "engine.py"): ("repro.kernels.attn",),
+            os.path.join("launch", "serve.py"): ("repro.kernels.attn",),
+        },
+        describe="kernel subsystem packages are private — go through "
+                 "repro.kernels / dispatch / common / autotune"),
+)
+
+
+def _scan_imports(path: str) -> List[Tuple[int, str]]:
+    """(lineno, dotted module) for every import statement in the file."""
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            m = _IMPORT_RE.match(line)
+            if m:
+                out.append((lineno, m.group("from") or m.group("mod")))
+    return out
+
+
+def check(src_root: str, rules: Sequence[LayerRule] = DEFAULT_RULES
+          ) -> Tuple[int, List[Violation]]:
+    """Scan ``src_root`` (the directory containing ``repro/``)."""
+    out: List[Violation] = []
+    checked = 0
+    for dirpath, _, files in os.walk(os.path.join(src_root, "repro")):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root)
+            checked += 1
+            imports = None
+            for rule in rules:
+                if rule.scope and not rel.startswith(rule.scope + os.sep):
+                    continue
+                if imports is None:
+                    imports = _scan_imports(path)
+                for lineno, module in imports:
+                    if not rule.banned.match(module):
+                        continue
+                    if rule.allowed(rel, module):
+                        continue
+                    out.append(Violation(
+                        pass_name="layering", code=rule.name,
+                        subject=f"{rel}:{lineno}",
+                        message=f"imports {module} ({rule.describe})"))
+    return checked, out

@@ -1,0 +1,149 @@
+"""``python -m repro.analysis.lint`` — run the static verifier.
+
+Default: all contracts from the kernel packages' ``contract`` modules,
+the repo materialization checks, the real dispatch registry, and the
+repo-wide source passes (headroom constants, import layering). Exit 0
+when clean, 1 when any pass reports a violation.
+
+``--contracts MODULE`` swaps the inputs for a module (dotted path or
+``.py`` file) exporting any of ``CONTRACTS`` (list of KernelContract),
+``MATERIALIZATION_CHECKS``, ``ROUTES`` + ``SPECS`` (dicts keyed by
+domain); passes without input are skipped, as are the repo-wide source
+scans. This is how the known-bad fixture kernels under
+``tests/fixtures/`` prove each pass catches its bug class.
+
+``--json PATH`` writes the machine-readable report (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.analysis import bounds, dispatch_check, layering, races, vmem
+from repro.analysis import materialize
+from repro.analysis.contracts import Violation, all_contracts
+
+__all__ = ["run", "main"]
+
+
+def _load_module(spec: str):
+    if spec.endswith(".py"):
+        name = os.path.splitext(os.path.basename(spec))[0]
+        modspec = importlib.util.spec_from_file_location(name, spec)
+        mod = importlib.util.module_from_spec(modspec)
+        modspec.loader.exec_module(mod)
+        return mod
+    return importlib.import_module(spec)
+
+
+def _src_root() -> str:
+    # .../src/repro/analysis/lint.py → .../src
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def run(contracts_module: Optional[str] = None) -> Dict[str, Any]:
+    """Execute every pass; returns the JSON-able report."""
+    repo_mode = contracts_module is None
+    if repo_mode:
+        contracts = all_contracts()
+        checks = materialize.repo_checks()
+        from repro.kernels import dispatch
+        routes = {d: dispatch.routes_for(d) for d in dispatch.DOMAINS}
+        specs = dispatch_check.default_specs()
+    else:
+        mod = _load_module(contracts_module)
+        contracts = list(getattr(mod, "CONTRACTS", ()))
+        checks = list(getattr(mod, "MATERIALIZATION_CHECKS", ()))
+        routes = dict(getattr(mod, "ROUTES", {}))
+        specs = dict(getattr(mod, "SPECS", {}))
+
+    passes: Dict[str, Dict[str, Any]] = {}
+
+    def record(name: str, checked: int, violations: List[Violation],
+               skipped: bool = False) -> None:
+        passes[name] = {
+            "checked": checked, "skipped": skipped,
+            "violations": [v.as_dict() for v in violations]}
+
+    if contracts:
+        n, v = vmem.check_contracts(contracts)
+        if repo_mode:
+            n2, v2 = vmem.check_headroom_constants(_src_root())
+            n, v = n + n2, v + v2
+        record("vmem", n, v)
+        record("races", *races.check_contracts(contracts))
+        record("bounds", *bounds.check_contracts(contracts))
+    else:
+        record("vmem", 0, [], skipped=True)
+        record("races", 0, [], skipped=True)
+        record("bounds", 0, [], skipped=True)
+
+    if checks:
+        record("materialize", *materialize.run_checks(checks))
+    else:
+        record("materialize", 0, [], skipped=True)
+
+    if routes and specs:
+        record("dispatch", *dispatch_check.check_registry(routes, specs))
+    else:
+        record("dispatch", 0, [], skipped=True)
+
+    if repo_mode:
+        record("layering", *layering.check(_src_root()))
+    else:
+        record("layering", 0, [], skipped=True)
+
+    total = sum(len(p["violations"]) for p in passes.values())
+    return {"ok": total == 0, "violation_count": total,
+            "contracts": [c.name for c in contracts], "passes": passes}
+
+
+def _render(report: Dict[str, Any]) -> str:
+    lines = []
+    for name, p in report["passes"].items():
+        if p["skipped"]:
+            lines.append(f"  {name:<12} skipped (no input)")
+            continue
+        n_v = len(p["violations"])
+        status = "OK" if n_v == 0 else f"{n_v} violation(s)"
+        lines.append(f"  {name:<12} checked {p['checked']:<4} {status}")
+        for v in p["violations"]:
+            lines.append(f"    [{v['code']}] {v['subject']}")
+            lines.append(f"        {v['message']}")
+    verdict = ("clean" if report["ok"]
+               else f"{report['violation_count']} violation(s)")
+    lines.append(f"repro.analysis.lint: {verdict}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static kernel-contract verifier (DESIGN.md §13)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON report here")
+    ap.add_argument("--contracts", metavar="MODULE",
+                    help="dotted module or .py file supplying CONTRACTS/"
+                         "MATERIALIZATION_CHECKS/ROUTES+SPECS instead of "
+                         "the repo's own")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the human-readable report")
+    args = ap.parse_args(argv)
+
+    report = run(contracts_module=args.contracts)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+    if not args.quiet:
+        print(_render(report))
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Pass 2 — grid revisit / race analysis (DESIGN.md §13).
+
+A grid dim that an output block's index map *ignores* revisits that
+block once per step of the dim. Revisiting is how output-stationary
+accumulation works (the K grid dim of every GEMM kernel here), but it is
+only safe under the full discipline:
+
+  * the contract must *declare* the dim as an accumulation dim
+    (``acc_dims``) — an undeclared revisit is an unintended overwrite;
+  * the kernel must guard accumulator init on the first visit and the
+    final store on the last visit (``pl.when`` — ``guarded_init`` /
+    ``guarded_store``);
+  * the dim's ``dimension_semantics`` must be ``"arbitrary"`` —
+    declaring it ``"parallel"`` tells Mosaic the visits are reorderable
+    or concurrent, a read-modify-write race on the block.
+
+The inverse is also checked: a declared acc dim that no output is
+actually revisited over is dead declaration drift. Blocks declared
+``resident`` must really be grid-constant.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Set, Tuple
+
+from repro.analysis.contracts import (BlockDecl, KernelContract, Violation)
+
+__all__ = ["ignored_dims", "check_contracts"]
+
+
+def _eval_map(blk: BlockDecl, ids: Sequence[int]) -> Tuple[int, ...]:
+    idx = blk.index_map(*ids)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def ignored_dims(blk: BlockDecl, grid: Sequence[int]) -> Set[int]:
+    """Grid dims (with extent > 1) whose value never changes the block
+    index. Probed from two base points (all-low / all-high) so a map
+    that varies only jointly with other dims is still seen as varying."""
+    out: Set[int] = set()
+    lo = [0] * len(grid)
+    hi = [g - 1 for g in grid]
+    for d, extent in enumerate(grid):
+        if extent <= 1:
+            continue
+        varies = False
+        for base in (lo, hi):
+            ids = list(base)
+            ids[d] = 0
+            first = _eval_map(blk, ids)
+            for v in range(1, extent):
+                ids[d] = v
+                if _eval_map(blk, ids) != first:
+                    varies = True
+                    break
+            if varies:
+                break
+        if not varies:
+            out.add(d)
+    return out
+
+
+def check_contracts(contracts: Sequence[KernelContract]
+                    ) -> Tuple[int, List[Violation]]:
+    out: List[Violation] = []
+    for c in contracts:
+        revisit_union: Set[int] = set()
+        for blk in c.outputs:
+            rd = ignored_dims(blk, c.grid)
+            revisit_union |= rd
+            undeclared = rd - set(c.acc_dims)
+            if undeclared:
+                out.append(Violation(
+                    pass_name="races", code="undeclared-accumulation",
+                    subject=f"{c.name}:{blk.name}",
+                    message=f"output revisited over grid dims "
+                            f"{sorted(undeclared)} not declared in "
+                            f"acc_dims {list(c.acc_dims)}"))
+            if rd and not (c.guarded_init and c.guarded_store):
+                out.append(Violation(
+                    pass_name="races", code="unguarded-accumulation",
+                    subject=f"{c.name}:{blk.name}",
+                    message="revisited output without pl.when-guarded "
+                            "init + final store "
+                            f"(init={c.guarded_init}, "
+                            f"store={c.guarded_store})"))
+            for d in sorted(rd):
+                if (d < len(c.dimension_semantics)
+                        and c.dimension_semantics[d] != "arbitrary"):
+                    out.append(Violation(
+                        pass_name="races", code="race",
+                        subject=f"{c.name}:{blk.name}",
+                        message=f"grid dim {d} revisits this output but "
+                                f"is declared "
+                                f"{c.dimension_semantics[d]!r} — "
+                                f"read-modify-write order is not "
+                                f"guaranteed (must be 'arbitrary')"))
+        dead = set(c.acc_dims) - revisit_union
+        # acc dims with grid extent 1 revisit trivially; only flag dims
+        # the kernel actually iterates
+        dead = {d for d in dead if d < len(c.grid) and c.grid[d] > 1}
+        if dead:
+            out.append(Violation(
+                pass_name="races", code="dead-acc-declaration",
+                subject=c.name,
+                message=f"declared acc_dims {sorted(dead)} revisit no "
+                        f"output block"))
+        for blk in c.inputs + c.outputs:
+            if blk.resident:
+                live = {d for d, g in enumerate(c.grid) if g > 1}
+                if live - ignored_dims(blk, c.grid):
+                    out.append(Violation(
+                        pass_name="races", code="not-resident",
+                        subject=f"{c.name}:{blk.name}",
+                        message="block declared resident but its index "
+                                "map varies with the grid"))
+        if len(c.dimension_semantics) != len(c.grid):
+            out.append(Violation(
+                pass_name="races", code="semantics-arity",
+                subject=c.name,
+                message=f"dimension_semantics rank "
+                        f"{len(c.dimension_semantics)} != grid rank "
+                        f"{len(c.grid)}"))
+    return len(contracts), out

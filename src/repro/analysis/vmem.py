@@ -1,0 +1,91 @@
+"""Pass 1 — VMEM budget analysis (DESIGN.md §13).
+
+Two obligations, checked in both directions against the dispatch guards:
+
+  * every contract instance the guard *admitted* must actually fit: its
+    worst-case residency (operand + output blocks + scratch + declared
+    body intermediates) within ``vmem_budget``, and its grid-constant
+    resident blocks within ``resident_budget`` when one is declared;
+  * every instance the guard rejected *for VMEM reasons*
+    (``vmem_reject``) must actually not fit — a rejected instance whose
+    residency satisfies every declared budget is dead headroom: the
+    guard drifted conservative and turns away work the kernel could run.
+
+Plus a source-level check that the headroom fractions stay *named*:
+``VMEM_BYTES // n`` literals may appear only where the named constants
+(`KERNEL_VMEM_BUDGET`, `SKINNY_RESIDENT_BUDGET`) are defined, so guards
+can't quietly fork their own fraction again.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Sequence, Tuple
+
+from repro.analysis.contracts import KernelContract, Violation
+
+__all__ = ["check_contracts", "check_headroom_constants"]
+
+# files allowed to spell a raw VMEM fraction: the definition sites
+_FRACTION_DEF_SITES = (
+    os.path.join("core", "sta.py"),         # KERNEL_VMEM_BUDGET
+    os.path.join("kernels", "common.py"),   # SKINNY_RESIDENT_BUDGET
+)
+_FRACTION_RE = re.compile(r"VMEM_BYTES\s*//\s*\d")
+
+
+def check_contracts(contracts: Sequence[KernelContract]
+                    ) -> Tuple[int, List[Violation]]:
+    out: List[Violation] = []
+    for c in contracts:
+        res = c.residency_bytes()
+        rb = c.resident_bytes()
+        over = []
+        if c.vmem_budget and res > c.vmem_budget:
+            over.append(f"residency {res} > budget {c.vmem_budget}")
+        if c.resident_budget and rb > c.resident_budget:
+            over.append(f"resident blocks {rb} > resident budget "
+                        f"{c.resident_budget}")
+        if c.admitted and over:
+            out.append(Violation(
+                pass_name="vmem", code="vmem-overflow", subject=c.name,
+                message="guard admits an instance that does not fit: "
+                        + "; ".join(over)))
+        if (not c.admitted) and c.vmem_reject and not over:
+            out.append(Violation(
+                pass_name="vmem", code="dead-headroom", subject=c.name,
+                message=f"guard rejects for VMEM but residency {res} "
+                        f"(resident {rb}) satisfies every declared "
+                        f"budget — conservative drift"))
+        if not c.vmem_budget:
+            out.append(Violation(
+                pass_name="vmem", code="no-budget", subject=c.name,
+                message="contract declares no vmem_budget"))
+    return len(contracts), out
+
+
+def check_headroom_constants(src_root: str) -> Tuple[int, List[Violation]]:
+    """Raw ``VMEM_BYTES // n`` fractions outside the definition sites."""
+    out: List[Violation] = []
+    checked = 0
+    for dirpath, _, files in os.walk(src_root):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root)
+            checked += 1
+            if any(rel.endswith(site) for site in _FRACTION_DEF_SITES):
+                continue
+            with open(path, encoding="utf-8") as f:
+                for lineno, line in enumerate(f, 1):
+                    if _FRACTION_RE.search(line):
+                        out.append(Violation(
+                            pass_name="vmem",
+                            code="raw-headroom-fraction",
+                            subject=f"{rel}:{lineno}",
+                            message="raw VMEM_BYTES fraction — use "
+                                    "KERNEL_VMEM_BUDGET / "
+                                    "SKINNY_RESIDENT_BUDGET from "
+                                    "kernels.common"))
+    return checked, out

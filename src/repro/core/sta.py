@@ -22,12 +22,22 @@ from repro.config import StaConfig
 __all__ = [
     "PeResources", "sta_pe_resources", "sa_pe_resources", "dbb_pe_resources",
     "choose_block_shape", "mxu_utilization",
+    "VMEM_BYTES", "KERNEL_VMEM_BUDGET",
 ]
 
 MXU_DIM = 128          # TPU MXU systolic dimension
 LANE = 128             # VREG lane count (last-dim tiling quantum)
 SUBLANE = 8            # sublane quantum for f32
 VMEM_BYTES = 16 * 2**20  # ~16 MiB usable VMEM per core (v5e)
+
+# Per-kernel working-set budget: every VMEM guard (choose_block_shape,
+# flash_ok, paged_decode_ok, conv _vmem_fits, autotune candidate filters)
+# admits a block-shape candidate only if its single-buffered footprint fits
+# half of VMEM — the other half is the pipeline's double buffers. The
+# analysis verifier (repro.analysis) cross-checks contracts against this
+# constant, so headroom fractions must not be respelled as ad-hoc
+# ``VMEM_BYTES // 2`` literals elsewhere.
+KERNEL_VMEM_BUDGET = VMEM_BYTES // 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,11 +119,11 @@ def choose_block_shape(m: int, k: int, n: int, cfg: StaConfig,
     def footprint(bm, bk, bn):
         return (bm * bk + bk * bn) * itemsize + bm * bn * 4
 
-    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bk > LANE:
+    while footprint(bm, bk, bn) > KERNEL_VMEM_BUDGET and bk > LANE:
         bk //= 2
-    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bm > SUBLANE:
+    while footprint(bm, bk, bn) > KERNEL_VMEM_BUDGET and bm > SUBLANE:
         bm //= 2
-    while footprint(bm, bk, bn) > VMEM_BYTES // 2 and bn > LANE:
+    while footprint(bm, bk, bn) > KERNEL_VMEM_BUDGET and bn > LANE:
         bn //= 2
     return bm, bk, bn
 

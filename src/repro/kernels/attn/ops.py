@@ -28,13 +28,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sta import SUBLANE, VMEM_BYTES
+from repro.core.sta import SUBLANE
 from repro.kernels.attn.kernel import (flash_prefill_packed_pallas,
                                        flash_prefill_pallas,
                                        paged_decode_pallas)
 from repro.kernels.attn.ref import (flash_prefill_ref, packed_prefill_ref,
                                     paged_decode_ref)
-from repro.kernels.common import default_interpret, round_up
+from repro.kernels.common import (KERNEL_VMEM_BUDGET, default_interpret,
+                                  round_up)
 
 __all__ = ["flash_attention", "packed_flash_attention",
            "paged_decode_attention", "flash_ok", "paged_decode_ok",
@@ -61,9 +62,11 @@ def _heuristic_blocks(t: int, s: int, d: int, itemsize: int
                       ) -> Tuple[int, int]:
     bq = min(128, round_up(max(t, 1), SUBLANE))
     bkv = min(128, round_up(max(s, 1), SUBLANE))
-    while _footprint(bq, bkv, d, itemsize) > VMEM_BYTES // 2 and bkv > SUBLANE:
+    while (_footprint(bq, bkv, d, itemsize) > KERNEL_VMEM_BUDGET
+           and bkv > SUBLANE):
         bkv //= 2
-    while _footprint(bq, bkv, d, itemsize) > VMEM_BYTES // 2 and bq > SUBLANE:
+    while (_footprint(bq, bkv, d, itemsize) > KERNEL_VMEM_BUDGET
+           and bq > SUBLANE):
         bq //= 2
     return bq, bkv
 
@@ -72,7 +75,7 @@ def flash_ok(t: int, s: int, d: int, itemsize: int) -> bool:
     """Whether the flash kernel applies: the minimal legal block pair fits
     the VMEM budget (it always does for transformer head dims; a pathologic
     head_dim opts back into the chunked XLA path)."""
-    return _footprint(SUBLANE, SUBLANE, d, itemsize) <= VMEM_BYTES // 2
+    return _footprint(SUBLANE, SUBLANE, d, itemsize) <= KERNEL_VMEM_BUDGET
 
 
 def paged_decode_ok(page: int, d: int, itemsize: int) -> bool:
@@ -85,7 +88,7 @@ def paged_decode_ok(page: int, d: int, itemsize: int) -> bool:
     block (SKINNY_M_MAX rows)."""
     from repro.kernels.common import SKINNY_M_MAX
     return _footprint(round_up(SKINNY_M_MAX, SUBLANE), page, d,
-                      itemsize) <= VMEM_BYTES // 2
+                      itemsize) <= KERNEL_VMEM_BUDGET
 
 
 def _autotuned_blocks(t: int, s: int, d: int, dtype, window: int,
@@ -111,7 +114,7 @@ def _autotuned_blocks(t: int, s: int, d: int, dtype, window: int,
             bq, bkv = round_up(bq, SUBLANE), round_up(bkv, SUBLANE)
             c = (bq, d, bkv)
             if c not in cands and _footprint(bq, bkv, d, itemsize) \
-                    <= VMEM_BYTES // 2:
+                    <= KERNEL_VMEM_BUDGET:
                 cands.append(c)
     if not cands:
         cands = [(bq0, d, bkv0)]

@@ -38,7 +38,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.config import StaConfig
-from repro.core.sta import LANE, SUBLANE, VMEM_BYTES, choose_block_shape
+from repro.core.sta import (KERNEL_VMEM_BUDGET, LANE, SUBLANE,
+                            choose_block_shape)
 
 __all__ = [
     "autotune_enabled", "cache_path", "candidate_block_shapes",
@@ -144,7 +145,7 @@ def candidate_block_shapes(m: int, k: int, n: int,
                 c = (bm, bk, bn)
                 if c in cands:
                     continue
-                if _footprint(bm, bk, bn, itemsize) > VMEM_BYTES // 2:
+                if _footprint(bm, bk, bn, itemsize) > KERNEL_VMEM_BUDGET:
                     continue
                 cands.append(c)
     if not cands:                       # over-constrained: trust the prior
@@ -181,7 +182,8 @@ def skinny_candidate_block_shapes(m: int, k: int, n: int,
             if c in cands:
                 continue
             kp = _round_up(max(k, 1), bk)
-            if (mp * kp + bk * bn) * itemsize + mp * bn * 4 > VMEM_BYTES // 2:
+            if (mp * kp + bk * bn) * itemsize + mp * bn * 4 \
+                    > KERNEL_VMEM_BUDGET:
                 continue
             cands.append(c)
     if not cands:

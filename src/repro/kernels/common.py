@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.sta import KERNEL_VMEM_BUDGET, SUBLANE, VMEM_BYTES
+
 try:  # jax >= 0.7 name
     from jax.experimental.pallas import tpu as pltpu
     CompilerParams = pltpu.CompilerParams
@@ -16,7 +18,8 @@ except AttributeError:  # pragma: no cover - older naming
 __all__ = ["pltpu", "CompilerParams", "on_cpu", "default_interpret",
            "cdiv", "round_up", "popcount_u32", "acc_dtype_for",
            "SKINNY_M_MAX", "skinny_ok", "skinny_dispatch",
-           "coerce_bias_scale", "pad_cols"]
+           "coerce_bias_scale", "pad_cols",
+           "KERNEL_VMEM_BUDGET", "SKINNY_RESIDENT_BUDGET"]
 
 
 def on_cpu() -> bool:
@@ -84,6 +87,16 @@ def acc_dtype_for(operand_dtype) -> jnp.dtype:
 # (the resident A block would crowd out weight streaming double-buffers).
 SKINNY_M_MAX = 32
 
+# Named headroom fractions (DESIGN.md §13). KERNEL_VMEM_BUDGET bounds a
+# kernel's whole single-buffered working set (defined next to VMEM_BYTES in
+# core.sta; re-exported here as the guards' import surface).
+# SKINNY_RESIDENT_BUDGET bounds just the grid-constant resident [M, K]
+# block of the skinny kernels: a quarter of VMEM, so the streamed weight
+# tiles keep their double buffers even at the largest admitted K. The
+# analysis verifier asserts the dispatch guards agree with these constants
+# (repro.analysis.vmem), so don't respell them as VMEM_BYTES // n literals.
+SKINNY_RESIDENT_BUDGET = VMEM_BYTES // 4
+
 
 def skinny_ok(m: int, k: int, itemsize: int) -> bool:
     """Whether the resident-row-block (skinny) regime applies: M small
@@ -91,12 +104,11 @@ def skinny_ok(m: int, k: int, itemsize: int) -> bool:
     to the streamed operand's double buffers. Used for the skinny GEMM
     kernels (K = d_model) and as the attn decode kernel's M-gate
     (M = GQA group size, K = head_dim)."""
-    from repro.core.sta import SUBLANE, VMEM_BYTES
     if m > SKINNY_M_MAX:
         return False
     mp = round_up(max(m, 1), SUBLANE)
     kp = round_up(max(k, 1), 128)
-    return mp * kp * itemsize <= VMEM_BYTES // 4
+    return mp * kp * itemsize <= SKINNY_RESIDENT_BUDGET
 
 
 def skinny_dispatch(m: int, k: int, itemsize: int, *pinned) -> bool:

@@ -1,0 +1,84 @@
+"""KernelContract declarations for the implicit-GEMM conv kernels
+(`conv_gemm_pallas` / `conv_gemm_dbb_pallas`) — DESIGN.md §13.
+
+Grid (B, Hot/th, Np/bn, kh): the padded NHWC image block for one batch
+row stays in VMEM across the kh K steps (its index map ignores every
+grid dim but the batch), the weight K tile ``[kw·C, bn]`` streams per
+kernel row, and the output tile accumulates over the kh dim. Admission
+is the real `_vmem_fits` guard; a deliberately oversized image instance
+pins the reject direction.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET
+from repro.kernels.common import round_up
+from repro.kernels.conv_gemm.ops import _default_tiles, _vmem_fits, \
+    out_spatial
+
+__all__ = ["contracts"]
+
+
+def _instance(b: int, h: int, w: int, c: int, kh: int, kw: int,
+              stride: int, n: int, *, itemsize: int = 4,
+              dbb: bool = False, block: int = 8, nnz: int = 4
+              ) -> KernelContract:
+    ho, _, _ = out_spatial(h, kh, stride, "SAME")
+    wo, _, _ = out_spatial(w, kw, stride, "SAME")
+    th, bn = _default_tiles(ho, wo)
+    hot = round_up(ho, th)
+    hp = (hot - 1) * stride + kh
+    wp = (wo - 1) * stride + kw
+    np_ = round_up(n, bn)
+    grid = (b, hot // th, np_ // bn, kh)
+    admitted = _vmem_fits(hp, wp, c, kw, th, wo, bn, itemsize, dbb)
+    if dbb:
+        admitted = admitted and (kw * c) % block == 0
+
+    inputs = [BlockDecl("x", (1, hp, wp, c),
+                        lambda bb, ih, jn, ki: (bb, 0, 0, 0),
+                        (b, hp, wp, c), itemsize)]
+    extra = 0
+    if dbb:
+        nb_step = kw * c // block
+        nb_total = kh * nb_step
+        inputs += [
+            BlockDecl("values", (nb_step * nnz, bn),
+                      lambda bb, ih, jn, ki: (ki, jn),
+                      (nb_total * nnz, np_), itemsize),
+            BlockDecl("bitmask", (nb_step, bn),
+                      lambda bb, ih, jn, ki: (ki, jn), (nb_total, np_), 4),
+        ]
+        extra = kw * c * bn * itemsize  # decompressed dense K tile
+    else:
+        inputs.append(BlockDecl("w", (kw * c, bn),
+                                lambda bb, ih, jn, ki: (ki, jn),
+                                (kh * kw * c, np_), itemsize))
+
+    kind = "conv_dbb" if dbb else "conv_sta"
+    tag = f"b{b} {h}x{w}x{c} k{kh}x{kw} s{stride} n{n}"
+    return KernelContract(
+        name=f"{kind}[{tag}]", route=kind, domain="conv",
+        grid=grid,
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"),
+        inputs=tuple(inputs),
+        outputs=(BlockDecl("out", (1, th, wo, bn),
+                           lambda bb, ih, jn, ki: (bb, ih, 0, jn),
+                           (b, hot, wo, np_), 4),),
+        scratch=(ScratchDecl("acc", (th * wo, bn), 4),),
+        acc_dims=(3,), guarded_init=True, guarded_store=True,
+        vmem_budget=KERNEL_VMEM_BUDGET,
+        extra_vmem_bytes=extra,
+        admitted=admitted, vmem_reject=not admitted)
+
+
+def contracts() -> List[KernelContract]:
+    return [
+        _instance(2, 16, 16, 16, 3, 3, 1, 32),        # smoke convnet block
+        _instance(4, 32, 32, 32, 3, 3, 2, 64),        # strided downsample
+        _instance(2, 16, 16, 16, 3, 3, 1, 32, dbb=True),
+        _instance(1, 256, 256, 64, 3, 3, 1, 64),      # rejected: image > VMEM
+    ]

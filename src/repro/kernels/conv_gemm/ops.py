@@ -35,9 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
-from repro.core.sta import VMEM_BYTES
-from repro.kernels.common import (coerce_bias_scale, default_interpret,
-                                  pad_cols, round_up)
+from repro.kernels.common import (KERNEL_VMEM_BUDGET, coerce_bias_scale,
+                                  default_interpret, pad_cols, round_up)
 from repro.kernels.conv_gemm.kernel import (conv_gemm_dbb_pallas,
                                             conv_gemm_pallas)
 from repro.kernels.conv_gemm.ref import conv_gemm_dbb_ref, conv_gemm_ref
@@ -68,7 +67,7 @@ def _vmem_fits(hp: int, wp: int, c: int, kw: int, th: int, wo: int, bn: int,
             + (w_tile if dbb else 0)          # in-VMEM decompressed dense
             + th * wo * bn * 4                # accumulator scratch
             + th * wo * bn * 4)               # output tile
-    return foot <= VMEM_BYTES // 2
+    return foot <= KERNEL_VMEM_BUDGET
 
 
 def _default_tiles(ho: int, wo: int) -> Tuple[int, int]:

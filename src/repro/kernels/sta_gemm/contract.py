@@ -1,0 +1,61 @@
+"""KernelContract declarations for the dense M-tiled STA GEMM
+(`sta_gemm_pallas`) — see DESIGN.md §13 and `repro.analysis.contracts`.
+
+Mirrors ``kernel.py`` 1:1: grid (M/bm, N/bn, K/bk); x and w stream by
+block, bias/scale ride as [1, bn] rows, the output block is revisited
+over the K grid dim with a ``pl.when(kk == 0)`` accumulator init and a
+``pl.when(kk == n_k - 1)`` epilogue store.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.config import StaConfig
+from repro.core.sta import KERNEL_VMEM_BUDGET, choose_block_shape
+from repro.kernels.common import round_up
+
+__all__ = ["contracts"]
+
+
+def _instance(m: int, k: int, n: int, itemsize: int,
+              with_epilogue: bool) -> KernelContract:
+    bm, bk, bn = choose_block_shape(m, k, n, StaConfig(), itemsize=itemsize)
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    # the shrink loop's own footprint (operand tiles + f32 accumulator) —
+    # the guard this contract is cross-checked against
+    admitted = (bm * bk + bk * bn) * itemsize + bm * bn * 4 \
+        <= KERNEL_VMEM_BUDGET
+
+    inputs = [
+        BlockDecl("x", (bm, bk), lambda i, j, kk: (i, kk), (mp, kp),
+                  itemsize),
+        BlockDecl("w", (bk, bn), lambda i, j, kk: (kk, j), (kp, np_),
+                  itemsize),
+    ]
+    if with_epilogue:
+        inputs += [
+            BlockDecl("bias", (1, bn), lambda i, j, kk: (0, j), (1, np_), 4),
+            BlockDecl("scale", (1, bn), lambda i, j, kk: (0, j), (1, np_), 4),
+        ]
+    tag = f"m{m} k{k} n{n} i{itemsize}" + (" ep" if with_epilogue else "")
+    return KernelContract(
+        name=f"sta_gemm[{tag}]", route="sta", domain="matmul",
+        grid=grid,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        inputs=tuple(inputs),
+        outputs=(BlockDecl("out", (bm, bn), lambda i, j, kk: (i, j),
+                           (mp, np_), 4),),
+        scratch=(ScratchDecl("acc", (bm, bn), 4),),
+        acc_dims=(2,), guarded_init=True, guarded_store=True,
+        vmem_budget=KERNEL_VMEM_BUDGET,
+        admitted=admitted, vmem_reject=not admitted)
+
+
+def contracts() -> List[KernelContract]:
+    return [
+        _instance(256, 512, 1024, itemsize=4, with_epilogue=True),
+        _instance(8, 256, 128, itemsize=4, with_epilogue=False),
+        _instance(1024, 4096, 4096, itemsize=2, with_epilogue=True),
+    ]

@@ -1,0 +1,9 @@
+"""Known-bad kernel fixtures for the static verifier.
+
+Each ``bad_*.py`` module exports lint inputs (``CONTRACTS``,
+``MATERIALIZATION_CHECKS``, or ``ROUTES`` + ``SPECS``) containing
+exactly the bug class one analysis pass exists to catch, so
+``python -m repro.analysis.lint --contracts tests/fixtures/bad_X.py``
+must exit nonzero with that pass's violation code in the JSON report.
+tests/test_analysis.py pins this.
+"""

@@ -1,0 +1,34 @@
+"""Known-bad fixture for the bounds pass: one input whose index map is
+shifted off-by-one (last grid step reads a block past the padded array)
+and one output whose index map collapses two grid steps onto the same
+block without declaring accumulation (two grid cells write the same
+tile). Expected codes: ``oob`` and ``overlapping-write``.
+"""
+from repro.analysis.contracts import BlockDecl, KernelContract
+from repro.core.sta import KERNEL_VMEM_BUDGET
+
+oob = KernelContract(
+    name="bad_bounds_off_by_one", route="fixture", domain="matmul",
+    grid=(4,),
+    dimension_semantics=("parallel",),
+    # classic fencepost: block index i+1 — grid step 3 covers rows
+    # [32, 40) of a 32-row array
+    inputs=(BlockDecl("x", (8, 128), lambda i: (i + 1, 0),
+                      (32, 128), 4),),
+    outputs=(BlockDecl("out", (8, 128), lambda i: (i, 0), (32, 128), 4),),
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=True)
+
+overlap = KernelContract(
+    name="bad_bounds_overlapping_write", route="fixture", domain="matmul",
+    grid=(4,),
+    dimension_semantics=("parallel",),
+    inputs=(BlockDecl("x", (8, 128), lambda i: (i, 0), (32, 128), 4),),
+    # i // 2 maps grid steps {0,1} and {2,3} onto the same output block
+    # with no acc_dims declaration: concurrent writers to one tile
+    outputs=(BlockDecl("out", (8, 128), lambda i: (i // 2, 0),
+                       (16, 128), 4),),
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=True)
+
+CONTRACTS = [oob, overlap]

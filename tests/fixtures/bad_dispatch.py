@@ -1,0 +1,63 @@
+"""Known-bad fixture for the dispatch pass: a registry with all three
+route-table rot modes.
+
+  * ``dead_route`` — guard rejects every spec: ``unreachable``;
+  * ``overpriced`` — applicable everywhere but its cost is 1000x the
+    winner's, so auto-dispatch can never pick it: ``shadowed``;
+  * ``inverse`` — typo'd cost model whose modeled time *falls* as M
+    grows: ``non-monotone-cost`` (and, since the inflated floor also
+    keeps it from ever winning, ``shadowed``).
+"""
+from repro.kernels.dispatch import OpSpec, Route
+
+
+def _ok(spec):
+    return ""
+
+
+def _never(spec):
+    return "fixture: permanently disabled"
+
+
+def _cost_good(spec):
+    flops = 2.0 * spec.m * spec.k * spec.n
+    nbytes = 4.0 * (spec.m * spec.k + spec.k * spec.n + spec.m * spec.n)
+    return flops, nbytes
+
+
+def _cost_overpriced(spec):
+    flops, nbytes = _cost_good(spec)
+    return 1e3 * flops, 1e3 * nbytes
+
+
+def _cost_inverse(spec):
+    # the monotonicity bug class: a divided-instead-of-multiplied term
+    wrong = float(2 ** 40) / max(spec.m, 1)
+    return wrong, wrong
+
+
+ROUTES = {
+    "matmul": {
+        "good": Route(name="good", domain="matmul", priority=0,
+                      guard=_ok, cost=_cost_good,
+                      describe="fixture: sane route"),
+        "dead_route": Route(name="dead_route", domain="matmul", priority=1,
+                            guard=_never, cost=_cost_good,
+                            describe="fixture: guard rejects everything"),
+        "overpriced": Route(name="overpriced", domain="matmul", priority=2,
+                            guard=_ok, cost=_cost_overpriced,
+                            describe="fixture: cost can never win"),
+        "inverse": Route(name="inverse", domain="matmul", priority=3,
+                         guard=_ok, cost=_cost_inverse,
+                         describe="fixture: cost falls as M grows"),
+    },
+}
+
+SPECS = {
+    "matmul": [
+        OpSpec(domain="matmul", m=8, k=256, n=256, itemsize=4,
+               pallas=True),
+        OpSpec(domain="matmul", m=64, k=512, n=512, itemsize=4,
+               pallas=True),
+    ],
+}

@@ -1,0 +1,31 @@
+"""Known-bad fixture for the materialization pass: a "pairwise scores"
+computation that builds the full [M, K, N] outer-product tensor before
+reducing — exactly the intermediate a fused kernel exists to avoid.
+The declared limit is the output size, so the trace must flag the
+``materialized`` code.
+"""
+from repro.analysis.materialize import MaterializationCheck
+
+_M = _K = _N = 32
+
+
+def _build():
+    import jax.numpy as jnp
+
+    a = jnp.ones((_M, _K), jnp.float32)
+    b = jnp.ones((_K, _N), jnp.float32)
+
+    def fn(x, y):
+        # materializes [M, K, N] = 32768 elems before the reduction
+        return (x[:, :, None] * y[None, :, :]).sum(axis=1)
+
+    return fn, (a, b), _M * _N
+
+
+MATERIALIZATION_CHECKS = [
+    MaterializationCheck(
+        name="bad-materialize-outer-product",
+        describe=f"[{_M},{_K}]x[{_K},{_N}] matmul via explicit "
+                 f"[{_M},{_K},{_N}] outer product",
+        build=_build),
+]

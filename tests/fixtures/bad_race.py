@@ -1,0 +1,32 @@
+"""Known-bad fixture for the races pass: a K-revisited output whose
+grid declares the revisit dim ``parallel`` (grid-order race under a
+real scheduler) and whose accumulator init/final-store are not
+``pl.when``-guarded. Expected codes: ``race`` and
+``unguarded-accumulation``.
+
+The accumulation itself *is* declared (``acc_dims=(1,)``) and the index
+maps are in-bounds, so the vmem and bounds passes stay quiet — the only
+defects are the race-discipline ones.
+"""
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET
+
+racy = KernelContract(
+    name="bad_race_parallel_k", route="fixture", domain="matmul",
+    grid=(4, 4),
+    # dim 1 is the K loop the output is revisited over — it must be
+    # "arbitrary", but this kernel declared it "parallel"
+    dimension_semantics=("parallel", "parallel"),
+    inputs=(
+        BlockDecl("x", (8, 128), lambda i, kk: (i, kk), (32, 512), 4),
+        BlockDecl("w", (128, 128), lambda i, kk: (kk, 0), (512, 128), 4),
+    ),
+    outputs=(BlockDecl("out", (8, 128), lambda i, kk: (i, 0),
+                       (32, 128), 4),),
+    scratch=(ScratchDecl("acc", (8, 128), 4),),
+    acc_dims=(1,),
+    guarded_init=False, guarded_store=False,    # missing pl.when guards
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=True)
+
+CONTRACTS = [racy]

@@ -1,0 +1,41 @@
+"""Known-bad fixture for the vmem pass: budget drift in both directions.
+
+``overflow`` is a contract whose guard (``admitted=True``) waves through
+blocks whose residency is ~4x KERNEL_VMEM_BUDGET — the
+admits-what-doesn't-fit direction. ``headroom`` is rejected for VMEM
+reasons even though its residency is tiny — the dead-headroom
+(rejects-what-fits) direction. Expected codes: ``vmem-overflow`` and
+``dead-headroom``.
+"""
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET
+
+# 2048 x 2048 f32 blocks: 16 MiB each, wildly over the 8 MiB budget
+_BIG = 2048
+
+overflow = KernelContract(
+    name="bad_vmem_overflow", route="fixture", domain="matmul",
+    grid=(2, 2),
+    dimension_semantics=("parallel", "parallel"),
+    inputs=(
+        BlockDecl("x", (_BIG, _BIG), lambda i, j: (i, 0),
+                  (2 * _BIG, 2 * _BIG), 4),
+        BlockDecl("w", (_BIG, _BIG), lambda i, j: (0, j),
+                  (2 * _BIG, 2 * _BIG), 4),
+    ),
+    outputs=(BlockDecl("out", (_BIG, _BIG), lambda i, j: (i, j),
+                       (2 * _BIG, 2 * _BIG), 4),),
+    scratch=(ScratchDecl("acc", (_BIG, _BIG), 4),),
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=True)                      # guard bug: this does not fit
+
+headroom = KernelContract(
+    name="bad_vmem_dead_headroom", route="fixture", domain="matmul",
+    grid=(2,),
+    dimension_semantics=("parallel",),
+    inputs=(BlockDecl("x", (8, 128), lambda i: (i, 0), (16, 128), 4),),
+    outputs=(BlockDecl("out", (8, 128), lambda i: (i, 0), (16, 128), 4),),
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=False, vmem_reject=True)   # guard bug: this fits easily
+
+CONTRACTS = [overflow, headroom]

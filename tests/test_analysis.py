@@ -1,0 +1,166 @@
+"""Static kernel-contract verifier (repro.analysis) — DESIGN.md §13.
+
+Three layers of coverage:
+
+  * unit tests of the pass primitives (revisit detection, the jaxpr
+    walker, the hermetic route selector);
+  * the repo's own contracts/registry/source tree must be clean — the
+    same verdict CI's lint job enforces;
+  * each known-bad fixture under tests/fixtures/ must make its pass
+    fail with the expected violation code (and leave every other pass
+    quiet), including end-to-end through the CLI with a JSON report.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import bounds, dispatch_check, layering, races, vmem
+from repro.analysis.contracts import (BlockDecl, KernelContract,
+                                      all_contracts)
+from repro.analysis.materialize import (assert_no_intermediate_larger_than,
+                                        max_intermediate_elems, repo_checks,
+                                        run_checks)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "fixtures")
+SRC_ROOT = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def _codes(violations):
+    return {v.code for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# pass primitives
+# ---------------------------------------------------------------------------
+
+class TestPrimitives:
+    def test_ignored_dims_finds_revisit(self):
+        blk = BlockDecl("out", (8, 128), lambda i, kk: (i, 0), (32, 128), 4)
+        assert races.ignored_dims(blk, (4, 4)) == {1}
+
+    def test_ignored_dims_none_when_all_used(self):
+        blk = BlockDecl("out", (8, 128), lambda i, kk: (i, kk), (32, 512), 4)
+        assert races.ignored_dims(blk, (4, 4)) == set()
+
+    def test_walker_sees_through_jit(self):
+        import jax
+        import jax.numpy as jnp
+        big = jax.jit(lambda x: (x[:, None, :] * x[None, :, :]).sum(0))
+        x = jnp.ones((16, 16), jnp.float32)
+        assert max_intermediate_elems(big, x) >= 16 * 16 * 16
+
+    def test_assert_helper_raises_and_returns_peak(self):
+        import jax.numpy as jnp
+        x = jnp.ones((8, 8), jnp.float32)
+        peak = assert_no_intermediate_larger_than(
+            lambda x: x + 1.0, x, max_elems=1000)
+        assert 0 < peak < 1000
+        with pytest.raises(AssertionError, match="materialized"):
+            assert_no_intermediate_larger_than(
+                lambda x: x + 1.0, x, max_elems=8)
+
+    def test_hermetic_selector_matches_dispatch(self):
+        """The dispatch pass replays select()'s auto path; both must name
+        the same winner on real registry + real specs."""
+        from repro.kernels import dispatch
+        for domain, specs in dispatch_check.default_specs().items():
+            table = dispatch.routes_for(domain)
+            for spec in specs[:8]:
+                want, _ = dispatch.select(spec)
+                assert dispatch_check._auto_select(table, spec) == want
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean (CI's lint verdict, in-process)
+# ---------------------------------------------------------------------------
+
+class TestRepoClean:
+    @pytest.fixture(scope="class")
+    def contracts(self):
+        return all_contracts()
+
+    def test_contract_passes_clean(self, contracts):
+        assert len(contracts) >= 15
+        for check in (vmem.check_contracts, races.check_contracts,
+                      bounds.check_contracts):
+            n, violations = check(contracts)
+            assert n == len(contracts)
+            assert not violations, "\n".join(
+                f"[{v.code}] {v.subject}: {v.message}" for v in violations)
+
+    def test_headroom_constants_clean(self):
+        n, violations = vmem.check_headroom_constants(SRC_ROOT)
+        assert n > 0
+        assert not violations, "\n".join(v.subject for v in violations)
+
+    def test_layering_clean(self):
+        n, violations = layering.check(SRC_ROOT)
+        assert n > 0
+        assert not violations, "\n".join(v.subject for v in violations)
+
+    def test_dispatch_registry_clean(self):
+        from repro.kernels import dispatch
+        routes = {d: dispatch.routes_for(d) for d in dispatch.DOMAINS}
+        n, violations = dispatch_check.check_registry(
+            routes, dispatch_check.default_specs())
+        assert n > 0
+        assert not violations, "\n".join(
+            f"[{v.code}] {v.subject}: {v.message}" for v in violations)
+
+    def test_materialization_claims_hold(self):
+        n, violations = run_checks(repo_checks())
+        assert n == 3
+        assert not violations, "\n".join(
+            f"[{v.code}] {v.subject}: {v.message}" for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# known-bad fixtures: each pass catches its bug class
+# ---------------------------------------------------------------------------
+
+_FIXTURE_EXPECT = [
+    ("bad_vmem.py", "vmem", {"vmem-overflow", "dead-headroom"}),
+    ("bad_race.py", "races", {"race", "unguarded-accumulation"}),
+    ("bad_bounds.py", "bounds", {"oob", "overlapping-write"}),
+    ("bad_materialize.py", "materialize", {"materialized"}),
+    ("bad_dispatch.py", "dispatch",
+     {"unreachable", "shadowed", "non-monotone-cost"}),
+]
+
+
+class TestKnownBadFixtures:
+    @pytest.mark.parametrize("fname,pass_name,expect",
+                             _FIXTURE_EXPECT,
+                             ids=[f[0] for f in _FIXTURE_EXPECT])
+    def test_fixture_fails_its_pass(self, fname, pass_name, expect):
+        from repro.analysis import lint
+        report = lint.run(contracts_module=os.path.join(FIXTURES, fname))
+        assert not report["ok"]
+        target = report["passes"][pass_name]
+        got = {v["code"] for v in target["violations"]}
+        assert expect <= got, f"{pass_name} reported {got}, want {expect}"
+        # the defect is isolated: every other pass is quiet or skipped
+        for name, p in report["passes"].items():
+            if name != pass_name:
+                assert not p["violations"], (name, p["violations"])
+
+    def test_cli_nonzero_exit_and_json(self, tmp_path):
+        """End-to-end: the CLI exits 1 on a known-bad fixture and names
+        the violation in the JSON artifact."""
+        out = tmp_path / "report.json"
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis.lint", "--quiet",
+             "--contracts", os.path.join(FIXTURES, "bad_bounds.py"),
+             "--json", str(out)],
+            env=env, capture_output=True, text=True, timeout=300)
+        assert proc.returncode == 1, proc.stderr
+        report = json.loads(out.read_text())
+        codes = {v["code"] for p in report["passes"].values()
+                 for v in p["violations"]}
+        assert {"oob", "overlapping-write"} <= codes

@@ -205,51 +205,27 @@ class TestModelDispatch:
 # structural: the score tensor never materializes
 # ---------------------------------------------------------------------------
 
-def _iter_avals(jaxpr):
-    """All intermediate output avals of a jaxpr, recursing into sub-jaxprs
-    (pallas kernel bodies, scan/cond/jit bodies)."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def subs(val):
-        if isinstance(val, (Jaxpr, ClosedJaxpr)):
-            yield val if isinstance(val, Jaxpr) else val.jaxpr
-        elif isinstance(val, (tuple, list)):
-            for v in val:
-                yield from subs(v)
-        elif isinstance(val, dict):
-            for v in val.values():
-                yield from subs(v)
-
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for val in eqn.params.values():
-            for sub in subs(val):
-                yield from _iter_avals(sub)
-
-
 class TestNoScoreTensor:
     B, T, HQ, HKV, D = 2, 256, 4, 2, 32
 
-    def _trace(self, cfg):
+    def _peak(self, cfg):
+        from repro.analysis.materialize import max_intermediate_elems
         q = jnp.zeros((self.B, self.T, self.HQ, self.D))
         k = jnp.zeros((self.B, self.T, self.HKV, self.D))
         v = jnp.zeros((self.B, self.T, self.HKV, self.D))
         pos = jnp.arange(self.T)[None, :]
-        jaxpr = jax.make_jaxpr(
-            lambda *a: attn_mod._attention_core(*a, cfg))(q, k, v, pos)
-        return [a for a in _iter_avals(jaxpr.jaxpr) if hasattr(a, "shape")]
+        return max_intermediate_elems(
+            lambda *a: attn_mod._attention_core(*a, cfg), q, k, v, pos)
 
     def test_flash_never_materializes_scores(self, small_lm):
-        """Trace-time assertion: no intermediate in the flash route is as
-        large as the [B, Hq, T, T] score tensor; the naive oracle (control)
-        materializes exactly that."""
+        """Trace-time assertion via the shared repro.analysis walker: no
+        intermediate in the flash route is as large as the [B, Hq, T, T]
+        score tensor; the naive oracle (control) materializes exactly
+        that."""
         cfg, _ = small_lm
         score_elems = self.B * self.HQ * self.T * self.T
-        flash_max = max(int(np.prod(a.shape)) for a in
-                        self._trace(cfg.replace(attn_impl="flash")))
-        naive_max = max(int(np.prod(a.shape)) for a in
-                        self._trace(cfg.replace(attn_impl="naive")))
+        flash_max = self._peak(cfg.replace(attn_impl="flash"))
+        naive_max = self._peak(cfg.replace(attn_impl="naive"))
         assert flash_max < score_elems, (
             f"flash route materialized a {flash_max}-element tensor "
             f"(score tensor would be {score_elems})")

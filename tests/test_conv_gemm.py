@@ -222,3 +222,29 @@ class TestCnnRouting:
         y_proj = cnn_apply(proj, cfg, x)
         np.testing.assert_allclose(np.asarray(y_dbb), np.asarray(y_proj),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestNoIm2colTensor:
+    B, H, W, C, KH, KW, N = 4, 16, 16, 16, 3, 3, 32
+
+    def test_implicit_gemm_never_materializes_patches(self):
+        """Trace-time assertion via the shared repro.analysis walker: the
+        implicit-GEMM conv route never holds the [M, K] = [B·Ho·Wo,
+        Kh·Kw·C] im2col patch matrix; the explicit im2col reference
+        (control) materializes exactly that."""
+        from repro.analysis.materialize import (
+            assert_no_intermediate_larger_than, max_intermediate_elems)
+        from repro.kernels import dispatch
+
+        x = jnp.zeros((self.B, self.H, self.W, self.C), jnp.float32)
+        w = jnp.zeros((self.KH * self.KW * self.C, self.N), jnp.float32)
+        patch_elems = (self.B * self.H * self.W
+                       * self.KH * self.KW * self.C)   # SAME, stride 1
+
+        assert_no_intermediate_larger_than(
+            lambda x, w: dispatch.conv(x, w, kh=self.KH, kw=self.KW,
+                                       stride=1, route="conv_sta"),
+            x, w, max_elems=patch_elems, what="implicit-GEMM conv")
+        naive = max_intermediate_elems(
+            lambda x: im2col(x, self.KH, self.KW, 1, "SAME"), x)
+        assert naive >= patch_elems     # control: explicit im2col does

@@ -242,9 +242,14 @@ class TestPackedStreamingDecode:
 
     def test_no_dense_materialization(self, packed_lm):
         """Tracing the streaming decode step must never expand a packed
-        layer weight to dense (every dense expand goes through
-        decompress_xla, which counts trace-time calls)."""
+        layer weight to dense — checked two ways: every dense expand goes
+        through decompress_xla (which counts trace-time calls), and the
+        shared repro.analysis jaxpr walker proves no traced intermediate
+        has the dense [K, N] shape of any packed weight (the XLA
+        decompress route, the control, traces exactly those)."""
+        from repro.analysis.materialize import trace_avals
         from repro.core import dbb_linear
+        from repro.core.dbb import DbbWeight
         from repro.models import registry
         from repro.serve.engine import make_decode_step
 
@@ -259,6 +264,30 @@ class TestPackedStreamingDecode:
 
         assert calls(cfg.replace(gemm_impl="pallas")) == 0
         assert calls(cfg.replace(gemm_impl="xla")) > 0   # control
+
+        # dense shapes bigger than one [LANE, LANE] streaming tile — a
+        # single tile is the kernel's legitimate VMEM unit and is
+        # indistinguishable by shape from a dense expand of a tile-sized
+        # layer
+        from repro.core.sta import LANE
+        dense_shapes = {
+            (leaf.k_dim, leaf.n_dim)
+            for leaf in jax.tree_util.tree_leaves(
+                packed, is_leaf=lambda x: isinstance(x, DbbWeight))
+            if isinstance(leaf, DbbWeight)
+            and leaf.k_dim * leaf.n_dim > LANE * LANE}
+
+        def traced_dense(route_cfg):
+            cache = registry.init_cache(route_cfg, 1, 8)
+            avals = trace_avals(make_decode_step(route_cfg), packed,
+                                cache, tok)
+            return dense_shapes & {tuple(a.shape) for a in avals}
+
+        hit = traced_dense(cfg.replace(gemm_impl="pallas"))
+        assert not hit, (
+            f"pallas decode step traced dense weight-shaped "
+            f"intermediates: {sorted(hit)}")
+        assert traced_dense(cfg.replace(gemm_impl="xla"))   # control
 
     def test_prefill_parity(self, packed_lm):
         """The streaming fast path covers prefill too (same layer blocks):

@@ -1,7 +1,6 @@
 """Unified kernel dispatch (DESIGN.md §11): golden route table, forced-route
 parity, override precedence, and the grep-clean model-layer contract."""
 import os
-import re
 
 import jax
 import jax.numpy as jnp
@@ -390,20 +389,13 @@ class TestModelLayerIntegration:
                                    rtol=2e-3, atol=2e-3)
 
     def test_grep_clean_model_layer(self):
-        """Acceptance contract: no direct kernel-subsystem imports under
-        models/ or core/dbb_linear.py — all kernel selection flows through
-        dispatch (DESIGN.md §11)."""
-        banned = re.compile(
-            r"from repro\.kernels\.(sta_gemm|dbb_gemm|skinny)|"
-            r"import repro\.kernels\.(sta_gemm|dbb_gemm|skinny)")
-        targets = [os.path.join(SRC, "core", "dbb_linear.py")]
-        mdir = os.path.join(SRC, "models")
-        targets += [os.path.join(mdir, f) for f in os.listdir(mdir)
-                    if f.endswith(".py")]
-        hits = []
-        for path in targets:
-            with open(path) as f:
-                for lineno, line in enumerate(f, 1):
-                    if banned.search(line):
-                        hits.append(f"{path}:{lineno}: {line.strip()}")
-        assert not hits, "\n".join(hits)
+        """Acceptance contract: no direct kernel-subsystem imports outside
+        the kernel package — all kernel selection flows through dispatch
+        (DESIGN.md §11). Delegates to the repo-wide import-layering pass
+        of the static verifier, which covers every repro/ module (the old
+        grep here only saw models/ + core/dbb_linear.py)."""
+        from repro.analysis import layering
+        checked, violations = layering.check(os.path.dirname(SRC))
+        assert checked > 0
+        assert not violations, "\n".join(
+            f"[{v.code}] {v.subject}: {v.message}" for v in violations)

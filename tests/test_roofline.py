@@ -129,3 +129,79 @@ ENTRY %main (p0: f32[128,64]) -> f32[128,64] {
     st = analyze_hlo_text(text)
     assert st.collective_bytes.get("all-reduce") == 128 * 64 * 4
     assert st.collective_counts.get("all-reduce") == 1
+
+
+# ---------------------------------------------------------------------------
+# dispatch cost model ↔ roofline terms: golden pins (DESIGN.md §13 pass 5)
+# ---------------------------------------------------------------------------
+
+class TestDispatchCostGolden:
+    """Pin the dispatch registry's analytic (flops, bytes) terms to
+    hand-computed golden values, and the route timing law to the same
+    Hardware constants roofline/analysis.py publishes. The static
+    verifier's monotonicity pass catches sign/shape bugs; these pins
+    catch silent coefficient edits."""
+
+    def _cost(self, domain, name, spec):
+        from repro.kernels import dispatch
+        return dispatch.routes_for(domain)[name].cost(spec)
+
+    def test_xla_matmul_dense_golden(self):
+        from repro.kernels.dispatch import OpSpec
+        spec = OpSpec(domain="matmul", m=256, k=512, n=1024, itemsize=4)
+        flops, nbytes = self._cost("matmul", "xla", spec)
+        assert flops == 2 * 256 * 512 * 1024            # 268_435_456
+        # A[M,K] + B[K,N] + C[M,N], f32, no epilogue round-trips
+        assert nbytes == 4 * (256 * 512 + 512 * 1024 + 256 * 1024)
+
+    def test_xla_matmul_epilogue_roundtrips(self):
+        from repro.kernels.dispatch import OpSpec
+        base = OpSpec(domain="matmul", m=64, k=128, n=128, itemsize=4)
+        fused = OpSpec(domain="matmul", m=64, k=128, n=128, itemsize=4,
+                       epilogue_ops=2)
+        _, b0 = self._cost("matmul", "xla", base)
+        _, b2 = self._cost("matmul", "xla", fused)
+        # each unfused epilogue op re-reads + re-writes the f32 [M, N]
+        assert b2 - b0 == 2 * 2 * 64 * 128 * 4
+
+    def test_xla_matmul_packed_decompress_golden(self):
+        from repro.kernels.dispatch import OpSpec
+        spec = OpSpec(domain="matmul", m=8, k=512, n=512, itemsize=4,
+                      packed=True, vals_itemsize=4)
+        flops, nbytes = self._cost("matmul", "xla", spec)
+        assert flops == 2 * 8 * 512 * 512
+        nb = 512 // 8                                    # DBB 8-blocks
+        packed_w = nb * 4 * 512 * 4 + nb * 512           # values + bitmask
+        assert packed_w == 557056
+        # x + out + compressed read + dense write + dense re-read
+        assert nbytes == (8 * 512 * 4 + 8 * 512 * 4
+                          + packed_w + 2 * 512 * 512 * 4)
+
+    def test_attn_flash_vs_chunked_score_traffic(self):
+        from repro.kernels.dispatch import OpSpec
+        spec = OpSpec(domain="attention", m=256, k=64, n=256, itemsize=4,
+                      batch=2, chunk=64, flash_active=True, float_ok=True)
+        f_fl, b_fl = self._cost("attention", "attn_flash", spec)
+        f_ch, b_ch = self._cost("attention", "attn_chunked", spec)
+        assert f_fl == f_ch == 4 * 2 * 256 * 256 * 64   # 33_554_432
+        assert b_fl == 2 * (2 * 256 * 64 + 2 * 256 * 64) * 4
+        # chunked recomputes exactly one f32 score-tile pass
+        assert b_ch - b_fl == 2 * 256 * 256 * 4
+
+    def test_route_timing_is_roofline_law(self):
+        """RouteDecision timing must be the roofline law under the same
+        HW_V5E constants roofline/analysis.py exports — for every route
+        decision over the verifier's default spec sweep."""
+        from repro.analysis.dispatch_check import default_specs
+        from repro.kernels import dispatch
+        from repro.roofline.analysis import HW_V5E
+        assert HW_V5E.peak_flops == 197e12 and HW_V5E.hbm_bw == 819e9
+        seen = 0
+        for domain, specs in default_specs().items():
+            for spec in specs[::4]:
+                for dec in dispatch.select(spec)[1]:
+                    assert dec.compute_s == dec.flops / HW_V5E.peak_flops
+                    assert dec.memory_s == dec.bytes / HW_V5E.hbm_bw
+                    assert dec.cost_s == max(dec.compute_s, dec.memory_s)
+                    seen += 1
+        assert seen > 50
