@@ -24,7 +24,8 @@ import os
 import sys
 from typing import Any, Dict, List, Optional
 
-from repro.analysis import bounds, dispatch_check, layering, races, vmem
+from repro.analysis import (bounds, dispatch_check, layering, races,
+                            tp_vmem, vmem)
 from repro.analysis import materialize
 from repro.analysis.contracts import Violation, all_contracts
 
@@ -91,8 +92,10 @@ def run(contracts_module: Optional[str] = None) -> Dict[str, Any]:
 
     if routes and specs:
         record("dispatch", *dispatch_check.check_registry(routes, specs))
+        record("tp-vmem", *tp_vmem.check_registry(routes, specs))
     else:
         record("dispatch", 0, [], skipped=True)
+        record("tp-vmem", 0, [], skipped=True)
 
     if repo_mode:
         record("layering", *layering.check(_src_root()))

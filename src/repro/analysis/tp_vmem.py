@@ -1,0 +1,98 @@
+"""Pass 6 — per-shard VMEM / route survival under tensor parallelism
+(DESIGN.md §14).
+
+The TP serving wrap runs every Pallas kernel on *local* shapes: column
+splits hand the kernel N/tp, row splits K/tp. The dispatch guards are the
+only thing standing between the wrap and a per-shard VMEM overflow, so
+their sharded-spec answers must be consistent with what the kernel will
+actually be invoked on. Two obligations, swept over the matmul sweep ×
+tp ∈ {2, 4, 8} × both shard layouts:
+
+  * ``tp-vmem-overflow`` — a guard admits a TP-sharded spec but rejects
+    the equivalent *local* spec (same dims `_shard_dims` reports, tp=1).
+    The shard body will invoke the kernel on exactly those local dims, so
+    the admission is a per-shard budget violation waiting to lower.
+  * ``tp-route-loss`` — a guard rejects a TP-sharded spec whose local
+    shape it admits, for a reason that is not a divisibility split.
+    Shrinking an axis by tp never grows residency, so a non-split
+    rejection means the guard consulted global dims somewhere — dead
+    per-shard headroom (the bug class satellites 1's misleading guard
+    strings used to hide).
+
+Only the matmul domain is swept: attention shards KV *heads*, which the
+(t, s, d)-shaped attention specs don't carry, and conv never rides the
+TP wrap (cnn family is excluded from it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.contracts import Violation
+
+__all__ = ["check_registry", "TP_SWEEP"]
+
+TP_SWEEP = (2, 4, 8)
+
+# rejection reasons that legitimately differ between sharded and local
+# specs: the declared axis simply doesn't divide tp (no local instance
+# exists at all, so there is nothing to lose)
+_SPLIT_MARKERS = ("unsupported axis split", "splits inside a block")
+
+
+def check_registry(routes_by_domain: Dict[str, Dict],
+                   specs_by_domain: Dict[str, Sequence],
+                   tps: Sequence[int] = TP_SWEEP,
+                   ) -> Tuple[int, List[Violation]]:
+    out: List[Violation] = []
+    flagged = set()
+    checked = 0
+    table = routes_by_domain.get("matmul", {})
+    specs = [s for s in specs_by_domain.get("matmul", ())
+             if getattr(s, "pallas", False)]
+    if not table or not specs:
+        return 0, out
+    from repro.kernels.dispatch import _shard_dims
+
+    for spec in specs:
+        for tp in tps:
+            # column-parallel (N split, no boundary collective declared)
+            # and row-parallel (K split behind an all-reduce) layouts
+            for coll in ("", "all-reduce"):
+                sharded = dataclasses.replace(spec, tp=tp, collective=coll)
+                m, k, n = _shard_dims(sharded)
+                local = dataclasses.replace(spec, m=m, k=k, n=n)
+                checked += 1
+                for name, route in table.items():
+                    g_sh = route.guard(sharded)
+                    g_loc = route.guard(local)
+                    layout = "row" if coll else "column"
+                    if g_sh == "" and g_loc != "":
+                        key = (name, "tp-vmem-overflow")
+                        if key in flagged:
+                            continue
+                        flagged.add(key)
+                        out.append(Violation(
+                            pass_name="tp-vmem", code="tp-vmem-overflow",
+                            subject=f"matmul:{name}",
+                            message=f"guard admits the tp={tp} "
+                                    f"{layout}-sharded instance of m="
+                                    f"{spec.m} k={spec.k} n={spec.n} but "
+                                    f"rejects its local shape m={m} k={k} "
+                                    f"n={n}: {g_loc}"))
+                    elif (g_sh != "" and g_loc == ""
+                          and not any(t in g_sh for t in _SPLIT_MARKERS)):
+                        key = (name, "tp-route-loss")
+                        if key in flagged:
+                            continue
+                        flagged.add(key)
+                        out.append(Violation(
+                            pass_name="tp-vmem", code="tp-route-loss",
+                            subject=f"matmul:{name}",
+                            message=f"guard rejects the tp={tp} "
+                                    f"{layout}-sharded instance of m="
+                                    f"{spec.m} k={spec.k} n={spec.n} "
+                                    f"(\"{g_sh}\") although its local "
+                                    f"shape m={m} k={k} n={n} is admitted "
+                                    f"— guard consults global dims"))
+    return checked, out

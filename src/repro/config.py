@@ -142,10 +142,12 @@ class ModelConfig:
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
     # GEMM routing: "xla" = plain matmuls (GSPMD-shardable, default);
-    # "pallas" = single-device hot GEMMs go through the STA/DBB Pallas
-    # kernels with the fused bias/activation/requant epilogue (DESIGN.md §7).
-    # Distributed meshes always fall back to "xla" — the kernels are not
-    # shard_map-aware.
+    # "pallas" = hot GEMMs go through the STA/DBB Pallas kernels with the
+    # fused bias/activation/requant epilogue (DESIGN.md §7) — on a single
+    # device, or per-shard inside the TP serving wrap's shard_map bodies
+    # (DESIGN.md §14), where every operand is shard-local and the kernels
+    # apply unchanged. Only *global* GSPMD graphs under a live mesh still
+    # fall back to "xla" (the kernels are not GSPMD-partitionable).
     gemm_impl: str = "xla"
     # kernel route overrides (DESIGN.md §11): (domain, route) pairs pinning
     # a `kernels.dispatch` registry route per domain, e.g.
@@ -164,11 +166,13 @@ class ModelConfig:
     parallel: str = "tp"
     # attention backend (DESIGN.md §10):
     # "flash"   = fused Pallas flash kernel (online softmax, no [B,H,T,T]
-    #             score tensor); single device only, floats only.
+    #             score tensor); floats only. Single device or per-shard
+    #             under the TP serving wrap (DESIGN.md §14).
     # "chunked" = blocked XLA path with running-softmax combine.
     # "naive"   = quadratic oracle (full score bias materialized).
-    # "auto"    = flash when the Pallas route is active (gemm_impl="pallas",
-    #             no mesh), else chunked/naive by sequence length.
+    # "auto"    = flash when the Pallas route is active (gemm_impl="pallas"
+    #             on one device or inside a TP shard body), else
+    #             chunked/naive by sequence length.
     attn_impl: str = "auto"         # auto | naive | chunked | flash
     attn_chunk: int = 1024
     sliding_window: int = 0         # 0 = full causal

@@ -18,7 +18,44 @@ from repro.dist.compat import shard_map
 from repro.dist.mesh_ctx import current_mesh
 
 __all__ = ["dense_ce", "dense_ce_chunked", "vocab_parallel_ce",
-           "vocab_parallel_embed", "cross_entropy"]
+           "vocab_parallel_embed", "cross_entropy", "axis_size",
+           "overlapped_psum", "shard_embed_lookup", "shard_greedy",
+           "greedy_vocab_parallel", "greedy_scatter"]
+
+
+def axis_size(name: str = "model") -> int:
+    """Size of a named collective axis, from inside a shard_map/pmap body.
+
+    ``jax.lax.psum(1, name)`` is the canonical trick — jax folds a psum of
+    the unit constant to the axis size at trace time. Outside any axis
+    binding jax raises a bare ``NameError``/``KeyError`` naming the axis;
+    wrap it in an actionable error instead. (For the *mesh* axis size
+    outside a shard body, use `repro.dist.mesh_ctx.axis_size`, which
+    returns 1 when no mesh is live.)"""
+    try:
+        return int(jax.lax.psum(1, name))
+    except (NameError, KeyError, ValueError) as e:
+        raise RuntimeError(
+            f"collectives.axis_size({name!r}) called outside a mesh/"
+            f"shard_map context: no collective axis named {name!r} is "
+            "bound. Call it from inside a shard_map body (e.g. under "
+            "serve's shard_tp_ctx), or use repro.dist.mesh_ctx.axis_size "
+            "for the context-mesh axis size.") from e
+
+
+def overlapped_psum(y: jax.Array, axis: str = "model",
+                    chunks: int = 2) -> jax.Array:
+    """Boundary all-reduce split along the last dim into ``chunks``
+    independent psums. Each element is still summed exactly once, so the
+    result is bit-identical to one psum — but the chunks are independent
+    collective ops, which lets XLA's async collective scheduler start the
+    first chunk's wire transfer while the producing GEMM's epilogue is
+    still storing the later chunks (the overlap timeline in DESIGN.md
+    §14). Falls back to a single psum when the dim doesn't split."""
+    if chunks <= 1 or y.shape[-1] % chunks != 0:
+        return jax.lax.psum(y, axis)
+    parts = jnp.split(y, chunks, axis=-1)
+    return jnp.concatenate([jax.lax.psum(p, axis) for p in parts], axis=-1)
 
 
 def _masked_mean(nll: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
@@ -113,30 +150,115 @@ def vocab_parallel_ce(h: jax.Array, w: jax.Array, labels: jax.Array,
         check_vma=False)(h, w, labels, mask)
 
 
+def shard_embed_lookup(table_local: jax.Array, tokens: jax.Array, dtype,
+                       axis: str = "model") -> jax.Array:
+    """Per-shard body of the row-sharded embedding gather: the local table
+    holds one contiguous vocab slice; serve the in-slice tokens and psum
+    the rest to zero-contributions. Callable from any shard_map body over
+    ``axis`` (the TP serving wrapper enters here via `embed_apply` when
+    `shard_tp()` is live)."""
+    idx = jax.lax.axis_index(axis)
+    v_loc = table_local.shape[0]
+    loc = tokens - idx * v_loc
+    in_range = (loc >= 0) & (loc < v_loc)
+    safe = jnp.clip(loc, 0, v_loc - 1)
+    emb = table_local[safe].astype(jnp.float32)
+    emb = jnp.where(in_range[..., None], emb, 0.0)
+    return jax.lax.psum(emb, axis).astype(dtype)
+
+
 def vocab_parallel_embed(table: jax.Array, tokens: jax.Array, dtype,
                          mesh) -> jax.Array:
     """Row-sharded embedding gather: each shard serves the tokens that fall
     in its vocab slice, one psum assembles the [B, S, d] output — the
     [V, d] table is never all-gathered."""
-    tp = mesh.shape["model"]
-    v = table.shape[0]
-    v_loc = v // tp
-
-    def shard_fn(tl, toks):
-        idx = jax.lax.axis_index("model")
-        loc = toks - idx * v_loc
-        in_range = (loc >= 0) & (loc < v_loc)
-        safe = jnp.clip(loc, 0, v_loc - 1)
-        emb = tl[safe].astype(jnp.float32)
-        emb = jnp.where(in_range[..., None], emb, 0.0)
-        return jax.lax.psum(emb, "model")
-
     out = shard_map(
-        shard_fn, mesh=mesh,
+        lambda tl, toks: shard_embed_lookup(tl, toks, jnp.float32),
+        mesh=mesh,
         in_specs=(P("model", None), P()),
         out_specs=P(),
         check_vma=False)(table, tokens)
     return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel greedy head (serving): the decode-step argmax without an
+# unsharded [B, vocab] logits tensor ever existing (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _greedy_combine(logits_loc: jax.Array, axis: str = "model") -> jax.Array:
+    """Global greedy argmax from per-shard [B, v/tp] logit slices. Each
+    shard reduces its slice to one (max, argmax) pair per row; the only
+    cross-shard traffic is the [tp, B] all_gather of those scalars.
+    Tie-breaking matches `jnp.argmax` on the full vector: shards are
+    ordered by vocab offset and `argmax` picks the first maximum both
+    within a slice and across the gathered axis."""
+    v_loc = logits_loc.shape[-1]
+    idx = jax.lax.axis_index(axis)
+    loc_max = logits_loc.max(axis=-1)                       # [B]
+    loc_arg = logits_loc.argmax(axis=-1) + idx * v_loc      # global ids
+    all_max = jax.lax.all_gather(loc_max, axis)             # [tp, B]
+    all_arg = jax.lax.all_gather(loc_arg, axis)             # [tp, B]
+    winner = jnp.argmax(all_max, axis=0)                    # [B]
+    return jnp.take_along_axis(
+        all_arg, winner[None], axis=0)[0].astype(jnp.int32)
+
+
+def shard_greedy(h: jax.Array, w_head_local: jax.Array, *,
+                 impl: str = "xla", cfg=None,
+                 axis: str = "model") -> jax.Array:
+    """Greedy head GEMV from inside a shard_map body: ``w_head_local``
+    is the column slice [d, v/tp], so the GEMV itself is local (the
+    skinny Pallas route applies at the local width) and only the scalar
+    (max, argmax) combine crosses shards."""
+    from repro.kernels import dispatch
+    logits = dispatch.matmul(h, w_head_local.astype(jnp.float32), cfg=cfg,
+                             pallas=(impl == "pallas"), gemv=True)
+    return _greedy_combine(logits, axis)
+
+
+def greedy_vocab_parallel(hidden: jax.Array, w_head: jax.Array, mesh,
+                          *, impl: str = "xla", cfg=None) -> jax.Array:
+    """Vocab-parallel greedy head for a *global* graph under a mesh:
+    column-shards the head weight over "model", computes each [B, v/tp]
+    logit slice per shard and combines (max, argmax) scalars. The GSPMD
+    alternative (sharded matmul + global argmax) all-gathers the full
+    [B, vocab] logits every step; here the wire carries [tp, B] scalars.
+    ``hidden`` is the last-position activations [B, d] (f32)."""
+    def shard_fn(hl, wl):
+        return shard_greedy(hl, wl, impl=impl, cfg=cfg)
+
+    return shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(None, "model")),
+        out_specs=P(),
+        check_vma=False)(hidden, w_head)
+
+
+def greedy_scatter(hidden: jax.Array, w_head: jax.Array, mesh,
+                   ) -> jax.Array:
+    """`psum_scatter`-based vocab-parallel greedy head for a K(d)-sharded
+    head weight (ZeRO'd lm_head / row-sharded tied table): each shard
+    holds partial [B, vocab] logits from its d-slice; `psum_scatter`
+    reduces them straight into per-shard [B, vocab/tp] slices — each hop
+    moves [B, vocab/tp], never all-gathering the full [B, vocab] — and
+    the same scalar (max, argmax) combine finishes the argmax."""
+    tp = mesh.shape["model"]
+    v = w_head.shape[-1]
+    assert v % tp == 0, (v, tp)
+
+    def shard_fn(hl, wl):
+        partial = hl.astype(jnp.float32) @ wl.astype(jnp.float32)
+        mine = jax.lax.psum_scatter(partial, "model",
+                                    scatter_dimension=partial.ndim - 1,
+                                    tiled=True)           # [B, v/tp]
+        return _greedy_combine(mine, "model")
+
+    return shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(None, "model"), P("model", None)),
+        out_specs=P(),
+        check_vma=False)(hidden, w_head)
 
 
 def cross_entropy(hidden: jax.Array, w_head: jax.Array, labels: jax.Array,

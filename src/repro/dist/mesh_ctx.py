@@ -15,10 +15,36 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["use_mesh", "current_mesh", "data_axes_of", "axis_size",
-           "shard_hint"]
+           "shard_hint", "shard_tp_ctx", "shard_tp"]
 
 _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
     "repro_mesh", default=None)
+
+# Set (> 0) while tracing the body of a TP shard_map: model code and the
+# kernel dispatcher see per-shard local shapes there, so the Pallas routes
+# re-engage even though `current_mesh()` is still live (DESIGN.md §14).
+_SHARD_TP: contextvars.ContextVar[int] = contextvars.ContextVar(
+    "repro_shard_tp", default=0)
+
+
+@contextlib.contextmanager
+def shard_tp_ctx(tp: int):
+    """Mark the dynamic extent as the inside of a shard_map body whose
+    model-axis size is ``tp``. Entered at trace time by the TP serving
+    wrapper (serve/engine.py) and the TP parity tests; everything that
+    keys kernel selection off the mesh (`dispatch.pallas_route_active`,
+    the models' TP branches) consults `shard_tp()` to distinguish
+    "global GSPMD graph under a mesh" from "per-shard body"."""
+    token = _SHARD_TP.set(int(tp))
+    try:
+        yield int(tp)
+    finally:
+        _SHARD_TP.reset(token)
+
+
+def shard_tp() -> int:
+    """Model-axis size of the enclosing shard_map body (0 outside one)."""
+    return _SHARD_TP.get()
 
 
 @contextlib.contextmanager

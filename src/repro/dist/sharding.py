@@ -36,7 +36,8 @@ from repro.dist.mesh_ctx import data_axes_of
 
 __all__ = [
     "FSDP_MIN_SHARD_ELEMS", "param_specs", "opt_state_specs_like",
-    "cache_specs", "batch_specs", "zero_spec", "named_sharding_tree",
+    "cache_specs", "serve_cache_specs", "batch_specs", "zero_spec",
+    "named_sharding_tree", "tp_spec_violations",
 ]
 
 # leaves below this size stay replicated under ZeRO/FSDP (norm scales,
@@ -150,13 +151,68 @@ def param_specs(params: Any, mesh, cfg: ModelConfig,
                         leaf.shape[-1] % tp == 0:
                     spec[-1] = "model"
             elif nameset & _ROW:
-                if (field in ("w", "values", "indices", "bitmask")
-                        and nd >= 2 and leaf.shape[-2] % tp == 0):
+                if field == "w" and nd >= 2 and leaf.shape[-2] % tp == 0:
                     spec[-2] = "model"
+                elif field in ("values", "indices", "bitmask") and nd >= 2:
+                    # packed planes shard K in whole DBB blocks: bitmask
+                    # rows are blocks, values/indices rows are block-major
+                    # slots (nnz per block) — a clean split needs the
+                    # shard boundary to land between blocks, never inside
+                    # one (the kernels index block-locally per shard)
+                    unit = tp if field == "bitmask" else cfg.dbb.nnz * tp
+                    if leaf.shape[-2] % unit == 0:
+                        spec[-2] = "model"
         return zero_spec(P(*spec), leaf.shape, mesh,
                          min_elems=fsdp_min_shard_elems, axes=zero_axes)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def tp_spec_violations(params: Any, pspecs: Any) -> list:
+    """TP-eligible weight leaves whose inferred spec did NOT take the model
+    axis (the divisibility fallback replicated them), as path strings.
+
+    The serving shard_map wrap (DESIGN.md §14) requires every
+    column/row/vocab-parallel weight to *actually* shard: its boundary
+    collectives assume the per-shard GEMM outputs are partial sums, so a
+    silently-replicated row weight would be summed tp× — the wrap must
+    stay off instead. A row-parallel bias is reported too (it would be
+    applied per shard and multiplied by the reduce); no assigned arch
+    carries one, this guards refactors."""
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    specs_by_path = {_names(path): s for path, s in flat_s}
+
+    def has_model(spec: P) -> bool:
+        for e in tuple(spec):
+            axes = (e,) if isinstance(e, str) else tuple(e or ())
+            if "model" in axes:
+                return True
+        return False
+
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if not hasattr(leaf, "shape") or getattr(leaf, "ndim", 0) == 0:
+            continue
+        names = _names(path)
+        nameset = set(names)
+        field = names[-1] if names else ""
+        if nameset & _ROW:
+            if field == "b":
+                out.append("/".join(names) + " (row-parallel bias)")
+                continue
+            eligible = field in ("w", "values", "indices", "bitmask")
+        elif nameset & _COLUMN:
+            eligible = field in {"w", "b"} | _PACKED_FIELDS
+        elif "embed" in nameset:
+            eligible = field == "table"
+        elif "lm_head" in nameset:
+            eligible = field in {"w"} | _PACKED_FIELDS
+        else:
+            eligible = False
+        if eligible and not has_model(specs_by_path.get(names, P())):
+            out.append("/".join(names))
+    return out
 
 
 def _pad_spec(spec: P, nd: int) -> Tuple:
@@ -229,6 +285,29 @@ def cache_specs(cfg: ModelConfig, mesh, batch: int, seq: int) -> Dict:
         return P(None, ba, *([None] * (leaf.ndim - 2)))
 
     return jax.tree_util.tree_map_with_path(visit, sds)
+
+
+def serve_cache_specs(cache: Any, mesh) -> Any:
+    """Specs for a serving KV-cache tree under the TP shard_map wrapper
+    (DESIGN.md §14): KV heads shard over "model" — dim 3 of both the
+    contiguous ``k/v [L, B, S, Hkv, D]`` and the paged ``k_pages/v_pages
+    [L, P, page, Hkv, D]`` layouts — so each shard holds only its own
+    heads' cache and the paged block tables stay per-shard-valid
+    (replicated tables index shard-local pools of local heads).
+    Bookkeeping (length/start/block_table/write cursors) replicates.
+    Accepts arrays or ShapeDtypeStructs; pure data like `cache_specs`."""
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def visit(path, leaf):
+        names = _names(path)
+        field = names[-1] if names else ""
+        if (field in ("k", "v", "k_pages", "v_pages") and tp > 1
+                and getattr(leaf, "ndim", 0) >= 4
+                and leaf.shape[3] % tp == 0):
+            return P(None, None, None, "model", *([None] * (leaf.ndim - 4)))
+        return P(*([None] * getattr(leaf, "ndim", 0)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
 
 
 def batch_specs(cfg: ModelConfig, mesh, global_batch: int, seq: int) -> Dict:

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
 from repro.kernels.common import SKINNY_M_MAX, round_up, skinny_ok
-from repro.roofline.analysis import HW_V5E, Hardware
+from repro.roofline.analysis import HW_V5E, Hardware, collective_bw
 
 __all__ = [
     "Route", "RouteDecision", "OpSpec", "register_route", "routes_for",
@@ -92,7 +92,7 @@ class OpSpec:
     nnz: int = 4
     vals_itemsize: int = 1       # packed value bytes (int8 deployment)
     epilogue_ops: int = 0        # unfused bias/act/scale passes on XLA
-    pallas: bool = False         # single-device Pallas route is active
+    pallas: bool = False         # fused Pallas route family is active
     dense_fused: bool = True     # call site opted dense weights into kernels
     pinned: bool = False         # caller-pinned block shapes (no skinny)
     gemv: bool = False           # decode head GEMV: stream or stay on XLA
@@ -114,6 +114,14 @@ class OpSpec:
     # decode extras
     page: int = 0
     ring: bool = False
+    # TP sharding (DESIGN.md §14): tp > 1 costs the op as the per-shard
+    # instance a TP shard_map body would run — row-parallel ops (those
+    # paying a boundary collective) split K, everything else splits N.
+    # ``collective`` names the boundary collective this op's block pays
+    # ("all-reduce" / "reduce-scatter" / "all-gather"; "" = none, the
+    # column-parallel mid-block default).
+    tp: int = 1
+    collective: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +151,11 @@ class RouteDecision:
     deferred: bool = False
     chosen: bool = False
     forced: bool = False
+    # TP terms (0 / tp=1 outside a sharded costing, DESIGN.md §14)
+    collective_bytes: float = 0.0
+    collective_s: float = 0.0
+    tp: int = 1
+    mesh: str = ""               # mesh shape the table was costed for
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -165,21 +178,26 @@ def routes_for(domain: str) -> Dict[str, Route]:
 # ---------------------------------------------------------------------------
 
 def pallas_route_active(cfg) -> bool:
-    """The single-device fused Pallas route: ``gemm_impl == "pallas"`` and
-    no live device mesh (the kernels are not shard_map-aware)."""
+    """The fused Pallas route family: ``gemm_impl == "pallas"`` and either
+    no live device mesh, or tracing inside a TP shard_map body (where
+    every operand is the per-shard local array, so the kernels apply
+    unchanged — DESIGN.md §14). A *global* GSPMD graph under a live mesh
+    still keeps XLA: the kernels themselves are not GSPMD-partitionable;
+    the serve engine re-enters them per-shard via `shard_tp_ctx`."""
     if cfg is None or cfg.gemm_impl != "pallas":
         return False
-    from repro.dist.mesh_ctx import current_mesh
-    return current_mesh() is None
+    from repro.dist.mesh_ctx import current_mesh, shard_tp
+    return current_mesh() is None or shard_tp() > 0
 
 
 def flash_backend_active(cfg) -> bool:
     """Whether the fused flash-attention kernel is the selected backend:
-    explicit ``attn_impl="flash"`` (single device only), or "auto" with
-    the Pallas route active — the same predicate the GEMM kernels use."""
+    explicit ``attn_impl="flash"``, or "auto" with the Pallas route
+    active — the same single-device-or-per-shard predicate the GEMM
+    kernels use (`pallas_route_active`)."""
     if cfg.attn_impl == "flash":
-        from repro.dist.mesh_ctx import current_mesh
-        return current_mesh() is None
+        from repro.dist.mesh_ctx import current_mesh, shard_tp
+        return current_mesh() is None or shard_tp() > 0
     return cfg.attn_impl == "auto" and pallas_route_active(cfg)
 
 
@@ -230,16 +248,34 @@ def forced_route(domain: str, cfg_routes: Optional[Dict[str, str]] = None
 # selection core
 # ---------------------------------------------------------------------------
 
+def _collective_term(spec: OpSpec, hw: Hardware) -> Tuple[float, float]:
+    """Boundary-collective cost of a TP-sharded op instance (0 for tp=1 /
+    no declared collective). Counted bytes are the op's [M, N] output
+    payload against the ICI collective bandwidth model in
+    `roofline.analysis` — the same accounting `roofline_terms` applies to
+    HLO collective ops, so explain tables and dry-run rooflines agree."""
+    if spec.tp <= 1 or not spec.collective:
+        return 0.0, 0.0
+    payload = float(spec.m) * spec.n * spec.out_itemsize
+    return payload, payload / collective_bw(spec.collective, hw)
+
+
 def _decide(route: Route, spec: OpSpec, hw: Hardware) -> RouteDecision:
     reason = route.guard(spec)
     flops, nbytes = route.cost(spec)
     compute_s = flops / hw.peak_flops
     memory_s = nbytes / hw.hbm_bw
+    # the collective term is route-independent (inside a shard every route
+    # pays the same boundary psum); it is charged as a third pipe under
+    # max() because the serve path issues it while the epilogue stores
+    # (overlapped collectives, DESIGN.md §14) — the slowest pipe bounds.
+    coll_b, coll_s = _collective_term(spec, hw)
     return RouteDecision(
         name=route.name, applicable=(reason == ""), reason=reason,
         flops=flops, bytes=nbytes, compute_s=compute_s, memory_s=memory_s,
-        cost_s=max(compute_s, memory_s), priority=route.priority,
-        deferred=bool(route.defer and route.defer(spec)))
+        cost_s=max(compute_s, memory_s, coll_s), priority=route.priority,
+        deferred=bool(route.defer and route.defer(spec)),
+        collective_bytes=coll_b, collective_s=coll_s, tp=spec.tp)
 
 
 _warned_forced: set = set()
@@ -294,18 +330,46 @@ def select(spec: OpSpec, cfg_routes: Optional[Dict[str, str]] = None,
 def explain(domain: str = "matmul", *, m: int, k: int, n: int,
             dtype=jnp.float32, packed: bool = False, cfg=None,
             pallas: Optional[bool] = None, hw: Hardware = HW_V5E,
+            tp: Optional[int] = None, collective: str = "",
             **spec_kw) -> List[RouteDecision]:
     """Ranked route table for a hypothetical op — the introspection hook
     for tests, benchmarks and serve logs. ``pallas=None`` derives the
     route-family flag from ``cfg`` (False without one).
+
+    ``tp=None`` derives the model-axis size from the live mesh (1 without
+    one, and 1 inside a shard_map body — there the dims you pass are
+    already per-shard local). With ``tp > 1`` the given dims are GLOBAL
+    and the table costs the per-shard instance the TP serving path would
+    run (row-parallel split of K when ``collective`` names a boundary
+    collective, column split of N otherwise), with the collective-bytes
+    term shown per route; the table header names the mesh it costed for.
 
     Pass ``epilogue_ops`` (count of bias/scale/act the real call fuses)
     when describing an actual dispatch — near the 10% tie window the
     unfused-epilogue HBM round-trips charged to the xla route can decide
     the winner, and a table built with a different epilogue than the call
     it describes can name a route the run never takes."""
+    from repro.dist.mesh_ctx import current_mesh, shard_tp
+    mesh = current_mesh()
+    mesh_desc = ""
+    if tp is None:
+        tp = 1
+        if shard_tp() > 0:
+            mesh_desc = f"shard_map body (tp={shard_tp()}, local dims)"
+        elif (mesh is not None and "model" in mesh.axis_names
+                and (cfg is None or cfg.parallel != "dp")):
+            tp = int(mesh.shape["model"])
+    if tp > 1 and not mesh_desc:
+        mesh_desc = (str(dict(mesh.shape)) if mesh is not None
+                     else f"(model={tp})")
     if pallas is None:
         pallas = pallas_route_active(cfg)
+        if not pallas and tp > 1 and cfg is not None \
+                and cfg.gemm_impl == "pallas":
+            # costing the per-shard instance: inside the shard_map body
+            # the route family re-activates even though it is off in the
+            # enclosing global graph
+            pallas = True
     itemsize = jnp.dtype(dtype).itemsize
     spec_kw.setdefault("out_itemsize", itemsize)
     if domain in ("attention", "attn_decode"):
@@ -318,30 +382,41 @@ def explain(domain: str = "matmul", *, m: int, k: int, n: int,
         spec_kw.setdefault("float_ok",
                            jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
                            or jnp.dtype(dtype) == jnp.int8)
+    if domain in ("attention", "attn_decode"):
+        fa = flash_backend_active(cfg) if cfg is not None else bool(pallas)
+        if not fa and tp > 1 and cfg is not None and (
+                cfg.attn_impl == "flash"
+                or (cfg.attn_impl == "auto" and cfg.gemm_impl == "pallas")):
+            fa = True           # per-shard instance re-activates flash too
+        spec_kw.setdefault("flash_active", fa)
     if domain == "attention":
-        spec_kw.setdefault("flash_active",
-                           flash_backend_active(cfg) if cfg is not None
-                           else bool(pallas))
         spec_kw.setdefault("chunk", cfg.attn_chunk if cfg is not None
                            else 1024)
     spec = OpSpec(domain=domain, m=m, k=k, n=n, itemsize=itemsize,
-                  packed=packed, pallas=bool(pallas), **spec_kw)
+                  packed=packed, pallas=bool(pallas), tp=int(tp),
+                  collective=collective, **spec_kw)
     _, decisions = select(spec, routes_from_cfg(cfg), hw=hw)
+    for d in decisions:
+        d.mesh = mesh_desc
     return decisions
 
 
 def format_table(decisions: List[RouteDecision]) -> str:
     """Compact fixed-width rendering of an explain() table for logs."""
-    lines = [f"{'route':<18} {'ok':<3} {'cost':>10} {'flops':>10} "
-             f"{'bytes':>10}  note"]
+    lines = []
+    if decisions and (decisions[0].mesh or decisions[0].tp > 1):
+        lines.append(f"costed for mesh {decisions[0].mesh or '?'} "
+                     f"(model-axis tp={decisions[0].tp})")
+    lines.append(f"{'route':<18} {'ok':<3} {'cost':>10} {'flops':>10} "
+                 f"{'bytes':>10} {'coll':>9}  note")
     for d in decisions:
         mark = "*" if d.chosen else ("f" if d.forced else "")
         note = d.reason if not d.applicable else (
             "deferred" if d.deferred and not d.chosen else "")
         lines.append(
             f"{d.name:<18} {('y' + mark) if d.applicable else 'n':<3} "
-            f"{d.cost_s * 1e6:>9.2f}u {d.flops:>10.3g} {d.bytes:>10.3g}  "
-            f"{note}")
+            f"{d.cost_s * 1e6:>9.2f}u {d.flops:>10.3g} {d.bytes:>10.3g} "
+            f"{d.collective_bytes:>9.3g}  {note}")
     return "\n".join(lines)
 
 
@@ -349,16 +424,30 @@ def format_table(decisions: List[RouteDecision]) -> str:
 # matmul domain
 # ---------------------------------------------------------------------------
 
+def _shard_dims(spec: OpSpec) -> Tuple[int, int, int]:
+    """Per-shard local (m, k, n) of a TP-sharded GEMM (DESIGN.md §14):
+    row-parallel ops (those declaring a reduction-boundary collective)
+    split the contraction K across shards; everything else takes the
+    column-parallel default and splits N. tp=1 passes dims through."""
+    if spec.tp <= 1:
+        return spec.m, spec.k, spec.n
+    if spec.collective in ("all-reduce", "reduce-scatter"):
+        return spec.m, max(spec.k // spec.tp, 1), spec.n
+    return spec.m, spec.k, max(spec.n // spec.tp, 1)
+
+
 def _mm_dims(spec: OpSpec, skinny: bool) -> Tuple[int, int, int]:
-    """Padded (mp, kp, np) mirroring the ops wrappers' block policy: the
-    M-tiled kernels clamp bm to round_up(m, 8) below 128 (so small-M pads
-    only to the sublane quantum), skinny pads M straight to the sublane."""
+    """Padded (mp, kp, np) of the per-shard instance, mirroring the ops
+    wrappers' block policy: the M-tiled kernels clamp bm to round_up(m, 8)
+    below 128 (so small-M pads only to the sublane quantum), skinny pads
+    M straight to the sublane."""
+    m, k, n = _shard_dims(spec)
     if skinny:
-        mp = round_up(max(spec.m, 1), 8)
+        mp = round_up(max(m, 1), 8)
     else:
-        bm = min(128, round_up(max(spec.m, 1), 8))
-        mp = round_up(max(spec.m, 1), bm)
-    return mp, round_up(max(spec.k, 1), 128), round_up(max(spec.n, 1), 128)
+        bm = min(128, round_up(max(m, 1), 8))
+        mp = round_up(max(m, 1), bm)
+    return mp, round_up(max(k, 1), 128), round_up(max(n, 1), 128)
 
 
 def _dense_w_bytes(spec: OpSpec, kp: int, np_: int) -> float:
@@ -366,24 +455,28 @@ def _dense_w_bytes(spec: OpSpec, kp: int, np_: int) -> float:
 
 
 def _packed_w_bytes(spec: OpSpec) -> float:
-    """Compressed weight stream: values + bitmask, the paper's 62.5%."""
-    nb = max(spec.k // max(spec.block, 1), 1)
-    return (nb * spec.nnz * spec.n * spec.vals_itemsize
-            + nb * spec.n * _MASK_BYTES)
+    """Compressed weight stream: values + bitmask, the paper's 62.5%
+    (the per-shard plane slice when the spec is TP-sharded)."""
+    _, k, n = _shard_dims(spec)
+    nb = max(k // max(spec.block, 1), 1)
+    return (nb * spec.nnz * n * spec.vals_itemsize
+            + nb * n * _MASK_BYTES)
 
 
 def _mm_xla_cost(spec: OpSpec) -> Tuple[float, float]:
-    flops = 2.0 * spec.m * spec.k * spec.n
-    nbytes = (spec.m * spec.k * spec.itemsize
-              + spec.m * spec.n * spec.out_itemsize)
+    # per-shard dims for tp > 1: GSPMD shards the XLA matmul the same way
+    # the shard_map body shards the kernels, so both route families are
+    # costed at local shapes and the comparison stays honest on meshes
+    m, k, n = _shard_dims(spec)
+    flops = 2.0 * m * k * n
+    nbytes = (m * k * spec.itemsize + m * n * spec.out_itemsize)
     if spec.packed:
         # decompress_xla: read compressed, write dense, matmul reads dense
-        nbytes += (_packed_w_bytes(spec)
-                   + 2 * spec.k * spec.n * spec.itemsize)
+        nbytes += _packed_w_bytes(spec) + 2 * k * n * spec.itemsize
     else:
-        nbytes += spec.k * spec.n * spec.itemsize
+        nbytes += k * n * spec.itemsize
     # every unfused epilogue op re-reads + re-writes the [M, N] output
-    nbytes += 2.0 * spec.m * spec.n * spec.out_itemsize * spec.epilogue_ops
+    nbytes += 2.0 * m * n * spec.out_itemsize * spec.epilogue_ops
     return flops, nbytes
 
 
@@ -396,16 +489,33 @@ def _mm_kernel_cost(spec: OpSpec, *, skinny: bool, dbb: bool
     return flops, nbytes
 
 
+def _tp_split_reason(spec: OpSpec) -> str:
+    """Divisibility of the declared TP split (empty = clean). Row-parallel
+    ops split K, column-parallel split N; a dim that doesn't divide tp
+    has no per-shard kernel instance."""
+    if spec.tp <= 1:
+        return ""
+    if spec.collective in ("all-reduce", "reduce-scatter"):
+        if spec.k % spec.tp:
+            return (f"unsupported axis split: K={spec.k} % tp={spec.tp} "
+                    "!= 0 (row-parallel shard)")
+    elif spec.n % spec.tp:
+        return f"unsupported axis split: N={spec.n} % tp={spec.tp} != 0"
+    return ""
+
+
 def _guard_pallas_dense(spec: OpSpec) -> str:
     if spec.packed:
         return "weight is DBB-packed (dense STA kernel takes dense [K,N])"
     if not spec.pallas:
-        return "Pallas route inactive (gemm_impl != 'pallas' or live mesh)"
+        return ("Pallas route not selected (gemm_impl != 'pallas', or a "
+                "global GSPMD graph — per-shard shard_map bodies "
+                "re-enable it)")
     if not spec.dense_fused:
         return "call site keeps dense weights on XLA (shardable/diff path)"
     if not spec.float_ok:
         return "operand dtype outside the kernel contract (f32/bf16/int8)"
-    return ""
+    return _tp_split_reason(spec)
 
 
 def _guard_sta(spec: OpSpec) -> str:
@@ -423,9 +533,11 @@ def _guard_skinny_sta(spec: OpSpec) -> str:
         return r
     if spec.pinned:
         return "caller-pinned block shapes opt out of skinny dispatch"
-    if not skinny_ok(spec.m, spec.k, spec.itemsize):
+    _, k_loc, _ = _shard_dims(spec)
+    if not skinny_ok(spec.m, k_loc, spec.itemsize):
+        shard = "per-shard " if spec.tp > 1 else ""
         return (f"outside the skinny regime (M ≤ {SKINNY_M_MAX} and "
-                "resident [M,K] ≤ VMEM/4)")
+                f"{shard}resident [M,K] ≤ VMEM/4)")
     return ""
 
 
@@ -433,9 +545,18 @@ def _guard_pallas_packed(spec: OpSpec) -> str:
     if not spec.packed:
         return "weight is dense (DBB kernels take values+bitmask)"
     if not spec.pallas:
-        return "Pallas route inactive (gemm_impl != 'pallas' or live mesh)"
+        return ("Pallas route not selected (gemm_impl != 'pallas', or a "
+                "global GSPMD graph — per-shard shard_map bodies "
+                "re-enable it)")
     if spec.k % max(spec.block, 1) != 0:
         return f"K={spec.k} not divisible by the DBB block {spec.block}"
+    r = _tp_split_reason(spec)
+    if r:
+        return r
+    _, k_loc, _ = _shard_dims(spec)
+    if k_loc % max(spec.block, 1) != 0:
+        return (f"per-shard K={k_loc} not divisible by the DBB block "
+                f"{spec.block} (tp={spec.tp} splits inside a block)")
     return ""
 
 
@@ -445,9 +566,11 @@ def _guard_skinny_dbb(spec: OpSpec) -> str:
         return r
     if spec.pinned:
         return "caller-pinned block shapes opt out of skinny dispatch"
-    if not skinny_ok(spec.m, spec.k, spec.itemsize):
+    _, k_loc, _ = _shard_dims(spec)
+    if not skinny_ok(spec.m, k_loc, spec.itemsize):
+        shard = "per-shard " if spec.tp > 1 else ""
         return (f"outside the skinny regime (M ≤ {SKINNY_M_MAX} and "
-                "resident [M,K] ≤ VMEM/4)")
+                f"{shard}resident [M,K] ≤ VMEM/4)")
     return ""
 
 
@@ -519,6 +642,16 @@ def matmul(x: jax.Array, w, bias=None, scale=None, *, act: str = "none",
     m = math.prod(batch) if batch else 1
     if packed:
         k_w, n = w.k_dim, w.values.shape[-1]
+        if k_w != k_dim:
+            # Inside a TP shard_map body the packed planes arrive as
+            # per-shard local slices but the static aux ``k_dim`` still
+            # holds the global contraction (shard_map shards arrays, not
+            # static fields). The row-parallel layout splits whole
+            # K-blocks across shards, so the local bitmask rebuilds it.
+            k_local = w.bitmask.shape[-2] * w.block
+            if k_local == k_dim:
+                w = dataclasses.replace(w, k_dim=k_local)
+                k_w = k_local
         vals_itemsize = jnp.dtype(w.values.dtype).itemsize
         block, nnz = w.block, w.nnz
     else:
@@ -766,8 +899,9 @@ def _guard_attn_flash(spec: OpSpec) -> str:
     if spec.packed_seq:
         return "packed cu_seqlens batch (block-diagonal masking required)"
     if not spec.flash_active:
-        return ("flash backend inactive (attn_impl and gemm_impl pin the "
-                "XLA paths, or a mesh is live)")
+        return ("flash backend not selected (attn_impl/gemm_impl pin the "
+                "XLA paths, or a global GSPMD graph — per-shard shard_map "
+                "bodies re-enable it)")
     if not spec.float_ok:
         return "non-float operands"
     from repro.kernels.attn.ops import flash_ok
@@ -827,8 +961,9 @@ def _guard_attn_packed_flash(spec: OpSpec) -> str:
     if not spec.packed_seq:
         return "not a packed cu_seqlens batch"
     if not spec.flash_active:
-        return ("flash backend inactive (attn_impl and gemm_impl pin the "
-                "XLA paths, or a mesh is live)")
+        return ("flash backend not selected (attn_impl/gemm_impl pin the "
+                "XLA paths, or a global GSPMD graph — per-shard shard_map "
+                "bodies re-enable it)")
     if not spec.float_ok:
         return "non-float operands"
     from repro.kernels.attn.ops import flash_ok
@@ -961,7 +1096,9 @@ def _guard_decode_flash(spec: OpSpec) -> str:
     if spec.ring:
         return "ring-buffer (sliding-window) cache layout"
     if not spec.flash_active:
-        return "flash backend inactive"
+        return ("flash backend not selected (attn_impl/gemm_impl pin the "
+                "XLA paths, or a global GSPMD graph — per-shard shard_map "
+                "bodies re-enable it)")
     if not spec.float_ok:
         return "non-float operands"
     if not skinny_ok(spec.m, spec.k, spec.itemsize):

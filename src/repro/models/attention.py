@@ -26,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
-from repro.dist.mesh_ctx import current_mesh
+from repro.dist.mesh_ctx import current_mesh, shard_tp
 from repro.kernels.attn import (DEFAULT_PAGE, identity_block_table,
                                 paged_decode_attention)
 from repro.models.common import apply_rope, linear_init
@@ -54,6 +54,22 @@ def _lin(pp: Dict, x: jax.Array, cfg: Optional[ModelConfig] = None
                            else None,
                            cfg=cfg, pallas=isinstance(w, DbbWeight),
                            dense_fused=False)
+
+
+def _o_proj(pp: Dict, o2d: jax.Array, cfg: Optional[ModelConfig] = None
+            ) -> jax.Array:
+    """Row-parallel output projection epilogue. Inside a TP shard_map body
+    (serving wrapper, DESIGN.md §14) the o_proj weight arrives row-sharded
+    over the local heads' K slice, so the GEMM output is a partial sum —
+    one chunked boundary all-reduce completes the attention block (chunked
+    so XLA's async collective scheduler overlaps the first chunk's wire
+    time with the later chunks' epilogue stores). Outside a shard body
+    this is exactly `_lin`."""
+    y = _lin(pp, o2d, cfg)
+    if shard_tp() > 1:
+        from repro.dist.collectives import overlapped_psum
+        y = overlapped_psum(y, "model")
+    return y
 
 
 def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
@@ -229,15 +245,19 @@ def attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     if window_override is not None:
         cfg = cfg.replace(sliding_window=window_override)
     mesh = current_mesh()
+    # inside a TP shard_map body (serving wrapper, DESIGN.md §14) the cfg
+    # is already localized and collectives ride on the enclosing mesh —
+    # never nest the GSPMD-era _attention_tp shard_map
     tp = mesh.shape["model"] if (mesh is not None
                                  and "model" in mesh.axis_names
-                                 and cfg.parallel != "dp") else 1
+                                 and cfg.parallel != "dp"
+                                 and shard_tp() == 0) else 1
     if tp > 1 and cfg.num_heads % tp == 0 and s > 1 and not ragged:
         return _attention_tp(p, cfg, x, positions, mesh, tp)
     q, k, v = qkv if qkv is not None else _project_qkv(p, cfg, x, positions)
     o = _attention_core(q, k, v, positions, cfg, ragged=ragged)
     b_, s_, hq, hd = o.shape
-    return _lin(p["o_proj"], o.reshape(b_, s_, hq * hd), cfg)
+    return _o_proj(p["o_proj"], o.reshape(b_, s_, hq * hd), cfg)
 
 
 def _attention_tp(p: Dict, cfg: ModelConfig, x: jax.Array,
@@ -339,7 +359,7 @@ def packed_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     from repro.kernels import dispatch
     o = dispatch.packed_attention(q, k, v, seg_ids, cfg)
     b, t, hq, hd = o.shape
-    return _lin(p["o_proj"], o.reshape(b, t, hq * hd), cfg)
+    return _o_proj(p["o_proj"], o.reshape(b, t, hq * hd), cfg)
 
 
 def chunk_attention_apply(p: Dict, cfg: ModelConfig, q: jax.Array,
@@ -368,7 +388,7 @@ def chunk_attention_apply(p: Dict, cfg: ModelConfig, q: jax.Array,
         qpos = offset + jnp.arange(c)
         kpos = jnp.arange(s)
         o = _naive_attention(q, cache_k, cache_v, qpos, kpos, cfg)
-    return _lin(p["o_proj"], o.reshape(1, c, hq * hd), cfg)
+    return _o_proj(p["o_proj"], o.reshape(1, c, hq * hd), cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +464,7 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
             q.reshape(b, hkv, g, hd), kp, vp, identity_block_table(b, n_log),
             lengths, start, window=window, softcap=cfg.attn_logit_softcap)
         o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-        return _lin(p["o_proj"], o, cfg), new_k, new_v
+        return _o_proj(p["o_proj"], o, cfg), new_k, new_v
 
     qg = q.reshape(b, 1, hkv, g, hd)
     sc = _scores(qg, new_k, cfg)                     # [B,H,G,1,Smax]
@@ -464,7 +484,7 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     o = jnp.einsum("bhgts,bshd->bthgd", pr.astype(new_v.dtype), new_v,
                    preferred_element_type=jnp.float32)
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    y = _lin(p["o_proj"], o, cfg)
+    y = _o_proj(p["o_proj"], o, cfg)
     return y, new_k, new_v
 
 
@@ -507,4 +527,4 @@ def paged_decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
         q.reshape(b, hkv, g, hd), new_kp, new_vp, block_table, lengths,
         start, window=window, softcap=cfg.attn_logit_softcap)
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    return _lin(p["o_proj"], o, cfg), new_kp, new_vp
+    return _o_proj(p["o_proj"], o, cfg), new_kp, new_vp

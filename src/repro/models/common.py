@@ -48,9 +48,11 @@ def linear_init(key, d_in: int, d_out: int, dtype,
 
 
 def use_fused_gemm(cfg: ModelConfig) -> bool:
-    """Whether the single-device fused Pallas GEMM path is active: requires
-    ``cfg.gemm_impl == "pallas"`` AND no live device mesh — the kernels are
-    not shard_map-aware, so any distributed layout stays on XLA matmuls.
+    """Whether the fused Pallas GEMM path is active: requires
+    ``cfg.gemm_impl == "pallas"``, and either no live device mesh or a
+    per-shard shard_map body (the TP serving wrapper, DESIGN.md §14, runs
+    the kernels on local shards). A *global* GSPMD graph under a live mesh
+    still stays on XLA matmuls — the kernels are not partitioner-aware.
     (Delegates to the dispatch layer's route-family predicate.)"""
     from repro.kernels.dispatch import pallas_route_active
     return pallas_route_active(cfg)
@@ -135,12 +137,19 @@ def embed_apply(p: Dict, tokens: jax.Array, dtype,
     """Vocab-parallel gather when a model axis is active (the table is the
     single largest weight in half the assigned archs — never all-gather it);
     plain gather otherwise (single device / "dp" layouts)."""
-    from repro.dist.collectives import vocab_parallel_embed
-    from repro.dist.mesh_ctx import current_mesh
+    from repro.dist.collectives import (shard_embed_lookup,
+                                        vocab_parallel_embed)
+    from repro.dist.mesh_ctx import current_mesh, shard_tp
 
-    mesh = current_mesh()
     table = p["table"]
-    if (vocab_parallel and mesh is not None and "model" in mesh.axis_names
+    if shard_tp() > 1 and vocab_parallel:
+        # inside a TP shard_map body (serving wrapper, DESIGN.md §14): the
+        # table arrives row-sharded — shard-local masked gather + psum,
+        # no nested shard_map
+        return shard_embed_lookup(table, tokens, dtype)
+    mesh = current_mesh()
+    if (vocab_parallel and shard_tp() == 0
+            and mesh is not None and "model" in mesh.axis_names
             and mesh.shape["model"] > 1 and tokens.ndim == 2
             and table.shape[0] % mesh.shape["model"] == 0):
         return vocab_parallel_embed(table, tokens, dtype, mesh)

@@ -20,7 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.config import ModelConfig
 from repro.core.dbb import DbbWeight
 from repro.dist.compat import shard_map
-from repro.dist.mesh_ctx import current_mesh, data_axes_of
+from repro.dist.mesh_ctx import current_mesh, data_axes_of, shard_tp
 from repro.models.common import linear_init, use_fused_gemm
 
 __all__ = ["mlp_init", "mlp_apply"]
@@ -120,6 +120,17 @@ def seq_parallel_ok(cfg: ModelConfig, seq: int, tp: int) -> bool:
 
 
 def mlp_apply(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    stp = shard_tp()
+    if stp > 1:
+        # Already inside a TP shard_map body (the serving wrapper,
+        # DESIGN.md §14): wi/wg arrive column-sharded, wo row-sharded per
+        # the param specs, so `_mlp_dense` runs the per-shard Pallas
+        # kernels on local slices and one chunked boundary all-reduce
+        # completes the block (issued per chunk so XLA's async scheduler
+        # overlaps wire time with the epilogue stores). No nested
+        # shard_map — collectives bind to the enclosing mesh axes.
+        from repro.dist.collectives import overlapped_psum
+        return overlapped_psum(_mlp_dense(p, cfg, x), "model")
     mesh = current_mesh()
     tp = _tp_size(mesh) if cfg.parallel != "dp" else 1
     wi = p["wi"]["w"]

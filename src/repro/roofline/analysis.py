@@ -27,7 +27,7 @@ from typing import Dict, Optional
 from repro.roofline.hlo import HloStats
 
 __all__ = ["Hardware", "HW_V5E", "RooflineTerms", "roofline_terms",
-           "model_flops_per_step"]
+           "model_flops_per_step", "collective_bw"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +51,12 @@ def _collective_bw(kind: str, hw: Hardware) -> float:
     if kind in ("all-to-all", "ragged-all-to-all"):
         return hw.ici_link_bw * hw.ici_links / 2
     return hw.ici_link_bw          # collective-permute & friends
+
+
+# public alias: the kernel dispatcher's TP collective-bytes term
+# (kernels/dispatch) charges boundary collectives against the same ICI
+# model that roofline_terms applies to HLO collective ops
+collective_bw = _collective_bw
 
 
 @dataclasses.dataclass

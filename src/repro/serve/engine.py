@@ -43,15 +43,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.config import ModelConfig
 from repro.core.dbb_linear import maybe_decompress_tree
 from repro.dist.collectives import cross_entropy  # noqa: F401 (API surface)
+from repro.dist.compat import shard_map
+from repro.dist.mesh_ctx import current_mesh, shard_tp, shard_tp_ctx
 from repro.kernels import dispatch
 from repro.models import registry
 
 __all__ = ["make_decode_step", "make_prefill_step",
            "make_packed_prefill_step", "make_chunk_prefill_step",
-           "ServeEngine", "greedy_from_hidden"]
+           "ServeEngine", "greedy_from_hidden", "tp_serve_reason"]
 
 # Families whose decode cache is the attention [L, B, S, H, D] K/V layout
 # with per-row lengths — the continuous-batching scheduler scatters per-slot
@@ -68,8 +72,16 @@ def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array,
     (DESIGN.md §11): the skinny weight-streaming STA kernel when the batch
     fits the decode regime (B ≤ 32, §9), the XLA matmul otherwise — a
     [B, d]·[d, V] GEMV gains nothing from the M-tiled kernel's padding,
-    which is exactly what the hint tells the `sta` route guard."""
+    which is exactly what the hint tells the `sta` route guard.
+
+    Inside a TP shard_map body (the serving wrapper, DESIGN.md §14) the
+    head arrives vocab-column-sharded [d, V/tp]: the local GEMV runs on
+    the shard's vocab slice and a max/argmax all-gather of [B]-sized
+    scalars — not [B, V] logits — picks the global winner."""
     h = hidden[:, -1].astype(jnp.float32)
+    if shard_tp() > 1:
+        from repro.dist.collectives import shard_greedy
+        return shard_greedy(h, w_head, impl=impl, cfg=cfg)
     logits = dispatch.matmul(h, w_head.astype(jnp.float32), cfg=cfg,
                              pallas=(impl == "pallas"), gemv=True)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -77,8 +89,56 @@ def greedy_from_hidden(hidden: jax.Array, w_head: jax.Array,
 
 def _gemm_impl(cfg: ModelConfig) -> str:
     """Resolve the engine's GEMM route (single predicate shared with the
-    model layer: Pallas only without a live mesh)."""
+    model layer: Pallas without a live mesh, or per-shard inside the TP
+    shard_map wrapper)."""
     return "pallas" if dispatch.pallas_route_active(cfg) else "xla"
+
+
+def tp_serve_reason(cfg: ModelConfig, mesh=None, params: Any = None) -> str:
+    """Why the TP shard_map serving wrap is NOT active (empty = it is).
+
+    The wrap (DESIGN.md §14) runs every step function's body per-shard —
+    column-parallel QKV/up-projections, row-parallel o_proj/wo with one
+    boundary all-reduce each, KV heads sharded over the cache — so it only
+    engages when every axis it splits actually divides. With `params` the
+    inferred specs are verified too (`tp_spec_violations`): a weight the
+    divisibility fallback replicated would be reduce-summed tp× inside the
+    body, so any gap keeps the wrap off. The returned string names the
+    real rejection; dispatch.explain prints it alongside the mesh shape."""
+    mesh = current_mesh() if mesh is None else mesh
+    if mesh is None or "model" not in mesh.axis_names \
+            or mesh.shape["model"] <= 1:
+        return "no live mesh with a model axis > 1"
+    tp = mesh.shape["model"]
+    if cfg.gemm_impl != "pallas":
+        return (f"gemm_impl={cfg.gemm_impl!r} — the wrap exists to put the "
+                "Pallas kernels on per-shard shapes; XLA serving stays on "
+                "the GSPMD graph")
+    if cfg.parallel == "dp":
+        return 'parallel="dp": the model axis carries ZeRO, not TP'
+    if cfg.family not in _CONT_BATCH_FAMILIES or cfg.family == "moe_lm":
+        return (f"family {cfg.family!r}: MoE expert dispatch / SSM state "
+                "keep their own sharding (no generic KV-head split)")
+    if cfg.num_heads % tp or cfg.num_kv_heads % tp:
+        return (f"heads do not divide the model axis: num_heads="
+                f"{cfg.num_heads}, num_kv_heads={cfg.num_kv_heads}, "
+                f"tp={tp}")
+    if cfg.d_ff % tp:
+        return f"d_ff={cfg.d_ff} % tp={tp} != 0 (column-parallel MLP split)"
+    if cfg.vocab_size % tp:
+        return (f"vocab_size={cfg.vocab_size} % tp={tp} != 0 "
+                "(vocab-parallel embed/head split)")
+    if params is not None:
+        from repro.dist.sharding import param_specs, tp_spec_violations
+        gaps = tp_spec_violations(
+            params, param_specs(params, mesh, cfg,
+                                fsdp_min_shard_elems=None))
+        if gaps:
+            return ("weight leaves fall back to replication under the TP "
+                    "specs (packed K-planes must split on DBB block "
+                    "boundaries): " + ", ".join(gaps[:4])
+                    + ("..." if len(gaps) > 4 else ""))
+    return ""
 
 
 def _decompress_non_layer(params, cfg: ModelConfig):
@@ -255,21 +315,75 @@ class ServeEngine:
         # next to their dense copies for the engine's lifetime
         self.params = jax.jit(
             lambda p: _decompress_non_layer(p, self.cfg))(self.params)
-        self._prefill = jax.jit(make_prefill_step(self.cfg))
-        self._decode_raw = make_decode_step(self.cfg)
+        # TP serving wrap (DESIGN.md §14): with a live TP mesh and the
+        # Pallas route requested, every step function's body runs per-shard
+        # under one shard_map — params/KV sharded by the Megatron specs,
+        # boundary collectives inside the body. tp_reason records why the
+        # wrap is off (empty = on) for explain/diagnostics.
+        mesh = current_mesh()
+        self.tp_reason = tp_serve_reason(self.cfg, mesh, self.params)
+        self._tp = 0 if self.tp_reason else mesh.shape["model"]
+        self._mesh = None if self.tp_reason else mesh
+        if self._tp:
+            from repro.dist.sharding import (named_sharding_tree,
+                                             param_specs)
+            self._pspecs = param_specs(self.params, mesh, self.cfg,
+                                       fsdp_min_shard_elems=None)
+            self.params = jax.device_put(
+                self.params, named_sharding_tree(self._pspecs, mesh))
+        self._prefill = jax.jit(self._tp_step(make_prefill_step))
+        self._decode_raw = self._tp_step(make_decode_step)
         self._decode = jax.jit(self._decode_raw, donate_argnums=1)
         self._chunk_fns: Dict[int, Any] = {}
         self._admit = jax.jit(self._admit_fn, donate_argnums=0)
         self._admit_paged = jax.jit(self._admit_paged_fn, donate_argnums=0)
-        self._packed_prefill = jax.jit(make_packed_prefill_step(self.cfg),
+        self._packed_prefill = jax.jit(self._tp_step(make_packed_prefill_step),
                                        donate_argnums=1)
-        self._prefill_continue = jax.jit(make_chunk_prefill_step(self.cfg),
+        self._prefill_continue = jax.jit(self._tp_step(make_chunk_prefill_step),
                                          donate_argnums=1)
         self._install = jax.jit(self._install_fn, donate_argnums=0)
         self._install_paged = jax.jit(self._install_paged_fn,
                                       donate_argnums=0)
         # filled by the paged serve() scheduler (occupancy benchmarking)
         self.serve_stats: Dict[str, int] = {}
+
+    def _tp_step(self, maker):
+        """Build one step function from its maker; when the TP wrap is
+        active, shard_map it over the serving mesh (DESIGN.md §14).
+
+        The body runs the step built with a *localized* cfg (heads ÷ tp,
+        head_dim pinned so the ratio survives) inside `shard_tp_ctx`, which
+        is what re-enables the Pallas route guards on per-shard shapes.
+        Params shard by the Megatron TP specs; the KV cache shards its
+        KV-heads dim (contiguous and paged layouts both carry it at dim 3,
+        so paged block tables are per-shard: replicated tables indexing
+        shard-local pools of local heads); token/bookkeeping args
+        replicate. Cache specs are derived per call from the actual tree —
+        generate/serve/paged caches differ in structure."""
+        if not self._tp:
+            return maker(self.cfg)
+        tp, mesh, pspecs = self._tp, self._mesh, self._pspecs
+        lcfg = self.cfg.replace(
+            num_heads=self.cfg.num_heads // tp,
+            num_kv_heads=self.cfg.num_kv_heads // tp,
+            head_dim=self.cfg.resolved_head_dim)
+        inner = maker(lcfg)
+
+        def stepped(params, cache, *rest):
+            from repro.dist.sharding import serve_cache_specs
+            cspecs = serve_cache_specs(cache, mesh)
+
+            def body(p, c, *r):
+                with shard_tp_ctx(tp):
+                    return inner(p, c, *r)
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(pspecs, cspecs) + (P(),) * len(rest),
+                out_specs=(P(), cspecs),
+                check_vma=False)(params, cache, *rest)
+
+        return stepped
 
     # -- decode chunks: N steps per host round-trip -----------------------
 
@@ -479,7 +593,7 @@ class ServeEngine:
         use_paged = (self.cfg.kv_page_size > 0 if self.paged is None
                      else self.paged)
         if use_paged:
-            reason = _paged_unsupported_reason(self.cfg)
+            reason = _paged_unsupported_reason(self.cfg, self._tp)
             if reason:
                 # the paged branch decodes through the flash kernel
                 # unconditionally — honor a config it cannot serve by
@@ -808,21 +922,28 @@ class ServeEngine:
 # serve() KV backends: how cache space is reserved and admissions scatter
 # ---------------------------------------------------------------------------
 
-def _paged_unsupported_reason(cfg: ModelConfig) -> str:
+def _paged_unsupported_reason(cfg: ModelConfig, tp: int = 0) -> str:
     """Why the paged scheduler cannot serve this config (empty = it can).
     Its decode branch runs the flash kernel unconditionally, so it is
     only offered when the flash backend is what the contiguous engine
     would run too (same `_flash_backend` predicate — anything else, e.g.
     a pinned XLA oracle or the default xla GEMM route, would void the
     paged-vs-contiguous bit-identity contract) and when the GQA group
-    passes the kernel's resident-query gate."""
+    passes the kernel's resident-query gate. Under the TP serving wrap
+    (tp > 1) the predicate is evaluated as the shard bodies will see it —
+    the live mesh alone no longer vetoes the kernel."""
     from repro.kernels.common import SKINNY_M_MAX, skinny_ok
     from repro.models.attention import _flash_backend
-    if not _flash_backend(cfg):
+    if tp > 1:
+        with shard_tp_ctx(tp):
+            flash = _flash_backend(cfg)
+    else:
+        flash = _flash_backend(cfg)
+    if not flash:
         return (f"flash attention backend inactive (attn_impl="
                 f"{cfg.attn_impl!r}, gemm_impl={cfg.gemm_impl!r}; needs "
-                "attn_impl='flash', or 'auto' with the single-device "
-                "Pallas route)")
+                "attn_impl='flash', or 'auto' with the Pallas route — "
+                "single device, or per-shard under the TP serving wrap)")
     g = cfg.num_heads // max(1, cfg.num_kv_heads)
     if not skinny_ok(g, cfg.resolved_head_dim,
                      jnp.dtype(cfg.dtype).itemsize):

@@ -159,6 +159,176 @@ out = {"diff": float(jnp.abs(y_pp - y_seq).max())}
     assert out["diff"] < 1e-5
 
 
+def test_tp_gemm_bit_exact_matrix():
+    """Sharded-Pallas vs single-device-Pallas vs XLA over the TP GEMM
+    matrix: {int8, bf16} × {dense, DBB-packed} × {column (N) split,
+    row (K) split + boundary psum} on 2- and 4-device meshes.
+
+    Splits without a reduction (column) must be BIT-identical on every
+    dtype; K-splits are bit-identical for int8 (integer accumulate —
+    addition order free) and tolerance-bounded for floats (the psum
+    reorders the accumulation)."""
+    out = _run("""
+import dataclasses
+from repro.core.dbb import pack_dbb
+from repro.dist.compat import shard_map
+from repro.dist.mesh_ctx import shard_tp_ctx, use_mesh
+from repro.kernels import dispatch
+from repro.launch.mesh import make_smoke_mesh
+
+M, K, N, BLOCK, NNZ = 8, 256, 256, 8, 4
+k0 = jax.random.PRNGKey(0)
+out = {}
+for tp in (2, 4):
+    mesh = make_smoke_mesh(data=1, model=tp)
+    for dt_name in ("int8", "bf16"):
+        if dt_name == "int8":
+            x = jax.random.randint(k0, (M, K), -4, 4, jnp.int8)
+            w = jax.random.randint(jax.random.fold_in(k0, 1), (K, N),
+                                   -4, 4, jnp.int8)
+            cases = [("dense", w)]
+        else:
+            x = jax.random.normal(k0, (M, K)).astype(jnp.bfloat16)
+            wf = (jax.random.normal(jax.random.fold_in(k0, 1), (K, N))
+                  / jnp.sqrt(K)).astype(jnp.bfloat16)
+            cases = [("dense", wf), ("packed", pack_dbb(wf, BLOCK, NNZ))]
+        for wname, wv in cases:
+            kw = dict(out_dtype=x.dtype) if wname == "packed" else {}
+            y_pal = dispatch.matmul(x, wv, pallas=True, **kw)
+            y_xla = dispatch.matmul(x, wv, pallas=False, **kw)
+            is_dbb = wname == "packed"
+            wspec = (jax.tree_util.tree_map(lambda _: P(None, "model"), wv)
+                     if is_dbb else P(None, "model"))
+            with use_mesh(mesh):
+                def col(xl, wl):
+                    with shard_tp_ctx(tp):
+                        return dispatch.matmul(xl, wl, pallas=True, **kw)
+                y_col = shard_map(col, mesh=mesh,
+                                  in_specs=(P(), wspec),
+                                  out_specs=P(None, "model"),
+                                  check_vma=False)(x, wv)
+                wspec_r = (jax.tree_util.tree_map(lambda _: P("model", None),
+                                                  wv)
+                           if is_dbb else P("model", None))
+                def row(xl, wl):
+                    with shard_tp_ctx(tp):
+                        y = dispatch.matmul(xl, wl, pallas=True, **kw)
+                    return jax.lax.psum(y, "model")
+                y_row = shard_map(row, mesh=mesh,
+                                  in_specs=(P(None, "model"), wspec_r),
+                                  out_specs=P(),
+                                  check_vma=False)(x, wv)
+            key = f"tp{tp}/{dt_name}/{wname}"
+            f32 = lambda a: jnp.asarray(a, jnp.float32)
+            out[key + "/col_vs_pallas"] = float(
+                jnp.abs(f32(y_col) - f32(y_pal)).max())
+            out[key + "/col_vs_xla"] = float(
+                jnp.abs(f32(y_col) - f32(y_xla)).max())
+            out[key + "/row_vs_pallas"] = float(
+                jnp.abs(f32(y_row) - f32(y_pal)).max())
+            out[key + "/ref_scale"] = float(jnp.abs(f32(y_pal)).max())
+""", devices=4)
+    for key, diff in out.items():
+        if key.endswith("/ref_scale"):
+            continue
+        scale = out[key.rsplit("/", 1)[0] + "/ref_scale"]
+        if "/int8/" in key or "/col_vs_pallas" in key:
+            assert diff == 0.0, (key, diff)       # bit-identical
+        else:
+            assert diff <= max(scale, 1.0) * 2e-2, (key, diff, scale)
+
+
+def test_tp_serve_parity_matrix():
+    """The acceptance contract on a 4-device mesh: with
+    ``gemm_impl="pallas"`` the engine routes prefill GEMM, skinny decode
+    and flash attention through shard_map'd Pallas kernels (asserted via
+    dispatch.explain), and the ragged packed-prefill serving loop is
+    token-identical to single-device Pallas AND the XLA route on BOTH KV
+    backends, dense and DBB-packed, whole-prompt and chunked prefill."""
+    out = _run("""
+from repro.config import DbbConfig, ModelConfig
+from repro.core.dbb_linear import pack_tree
+from repro.dist.mesh_ctx import use_mesh
+from repro.kernels import dispatch
+from repro.models import registry
+from repro.serve.engine import ServeEngine
+
+dbb = DbbConfig(enabled=True, block=8, nnz=4)
+cfg = ModelConfig(family="dense_lm", d_model=64, d_ff=256, num_layers=2,
+                  num_heads=8, num_kv_heads=4, vocab_size=128,
+                  dtype="float32", gemm_impl="pallas", kv_page_size=8,
+                  dbb=dbb)
+params = registry.init_params(jax.random.PRNGKey(0), cfg)
+packed = pack_tree(params, dbb)
+prompts = [[5, 6, 7, 8], [9, 10, 11], [3, 4], [12, 13, 14, 15, 16]]
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+
+out = {"streams": {}, "routes": {}, "tp_reason": {}}
+for label, p in (("dense", params), ("packed", packed)):
+    ref_x = ServeEngine(cfg.replace(gemm_impl="xla"), p, max_batch=4,
+                        paged=False).serve(prompts, max_new_tokens=6)
+    ref_p = ServeEngine(cfg, p, max_batch=4).serve(prompts,
+                                                   max_new_tokens=6)
+    with use_mesh(mesh):
+        eng = ServeEngine(cfg, p, max_batch=4)
+        out["tp_reason"][label] = eng.tp_reason
+        tp_paged = eng.serve(prompts, max_new_tokens=6)
+        tp_contig = ServeEngine(cfg, p, max_batch=4, paged=False).serve(
+            prompts, max_new_tokens=6)
+        tp_chunked = ServeEngine(cfg, p, max_batch=4,
+                                 prefill_chunk=3).serve(
+            prompts, max_new_tokens=6)
+    out["streams"][label] = {
+        "xla": ref_x, "pallas1": ref_p, "tp_paged": tp_paged,
+        "tp_contig": tp_contig, "tp_chunked": tp_chunked}
+
+# route assertions: explain() costs the per-shard instance the shard_map
+# bodies run, on representative serving shapes (global dims + tp=4)
+with use_mesh(mesh):
+    pre = dispatch.explain("matmul", m=512, k=1024, n=4096, cfg=cfg,
+                           tp=4)
+    dec = dispatch.explain("matmul", m=8, k=1024, n=32768, cfg=cfg,
+                           tp=4, gemv=True)
+    att = dispatch.explain("attention", m=512, k=128, n=512, batch=8,
+                           cfg=cfg, tp=4)
+    out["routes"]["prefill_gemm"] = next(d.name for d in pre if d.chosen)
+    out["routes"]["decode_gemv"] = next(d.name for d in dec if d.chosen)
+    out["routes"]["attention"] = next(d.name for d in att if d.chosen)
+    out["routes"]["mesh_note"] = dispatch.format_table(pre).splitlines()[0]
+""", devices=4)
+    for label, streams in out["streams"].items():
+        ref = streams["pallas1"]
+        for name, got in streams.items():
+            assert got == ref, (label, name, got, ref)
+    assert out["tp_reason"] == {"dense": "", "packed": ""}
+    assert out["routes"]["prefill_gemm"] in ("sta", "skinny_sta")
+    assert out["routes"]["decode_gemv"] in ("skinny_sta", "skinny_dbb")
+    assert out["routes"]["attention"] == "attn_flash"
+    assert "costed for mesh" in out["routes"]["mesh_note"]
+
+
+def test_tp_greedy_vocab_parallel_heads():
+    """Satellite: both vocab-parallel greedy heads — the column-sharded
+    scalar-combine (`greedy_vocab_parallel`) and the `psum_scatter`
+    variant (`greedy_scatter`, each hop moves [B, vocab/tp] instead of
+    [B, vocab]) — match the dense argmax."""
+    out = _run("""
+from repro.dist.collectives import greedy_scatter, greedy_vocab_parallel
+from repro.launch.mesh import make_smoke_mesh
+
+mesh = make_smoke_mesh(data=1, model=4)
+k = jax.random.PRNGKey(0)
+h = jax.random.normal(k, (6, 32))
+w = jax.random.normal(jax.random.fold_in(k, 1), (32, 128)) / 8.0
+ref = jnp.argmax(h @ w, axis=-1)
+vp = greedy_vocab_parallel(h, w, mesh)
+sc = greedy_scatter(h, w, mesh)
+out = {"vp": int((vp == ref).all()), "sc": int((sc == ref).all())}
+""", devices=4)
+    assert out["vp"] == 1
+    assert out["sc"] == 1
+
+
 def test_dryrun_cell_on_virtual_devices():
     """End-to-end dry-run of one smoke-sized cell on 8 devices: lower +
     compile + roofline terms present."""

@@ -1,0 +1,213 @@
+"""Single-process tests for the TP-aware dispatch layer (DESIGN.md §14):
+per-shard costing with the collective-bytes term, honest guard reasons
+under axis splits, the tp-vmem analysis pass, serving cache/param spec
+inference, and the wrap's refusal conditions. No devices or meshes are
+spawned — the multi-device behaviour lives in test_dist_multidevice.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import tp_vmem
+from repro.config import DbbConfig, ModelConfig
+from repro.kernels import dispatch
+from repro.kernels.dispatch import OpSpec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    def __hash__(self):
+        return hash(tuple(self.shape.items()))
+
+
+TP4 = _FakeMesh({"data": 1, "model": 4})
+
+
+# ---------------------------------------------------------------------------
+# collectives.axis_size — clear error outside a mesh (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_axis_size_outside_mesh_raises_actionable_error():
+    from repro.dist.collectives import axis_size
+    with pytest.raises(RuntimeError, match="outside a mesh"):
+        axis_size("model")
+
+
+# ---------------------------------------------------------------------------
+# explain(): per-shard costing + collective term + mesh header
+# ---------------------------------------------------------------------------
+
+def test_explain_tp_collective_term_and_mesh_header():
+    cfg = ModelConfig(family="dense_lm", gemm_impl="pallas")
+    dec = dispatch.explain("matmul", m=256, k=2048, n=2048, cfg=cfg,
+                           tp=4, collective="all-reduce")
+    chosen = next(d for d in dec if d.chosen)
+    assert chosen.collective_bytes > 0        # the all-reduce is priced
+    table = dispatch.format_table(dec)
+    assert "costed for mesh" in table.splitlines()[0]
+    assert "tp=4" in table.splitlines()[0]
+    # column-parallel (no boundary collective) prices zero wire bytes
+    col = dispatch.explain("matmul", m=256, k=2048, n=2048, cfg=cfg, tp=4)
+    assert all(d.collective_bytes == 0 for d in col)
+
+
+def test_explain_tp_costs_per_shard_instance():
+    """tp=4 must cost the LOCAL instance: a column split shrinks N (and
+    the weight bytes) ~4x vs the tp=1 table for the same global dims."""
+    cfg = ModelConfig(family="dense_lm", gemm_impl="pallas")
+    one = dispatch.explain("matmul", m=256, k=2048, n=8192, cfg=cfg, tp=1)
+    four = dispatch.explain("matmul", m=256, k=2048, n=8192, cfg=cfg, tp=4)
+    f1 = next(d for d in one if d.name == "sta")
+    f4 = next(d for d in four if d.name == "sta")
+    assert f4.flops == pytest.approx(f1.flops / 4, rel=1e-6)
+    assert f4.bytes < f1.bytes
+
+
+# ---------------------------------------------------------------------------
+# guard reasons name the real rejection (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _guards(spec):
+    return {name: r.guard(spec)
+            for name, r in dispatch.routes_for("matmul").items()}
+
+
+def test_guard_reason_names_axis_split():
+    # N=100 does not divide tp=8: the column split has no local instance
+    spec = OpSpec(domain="matmul", m=128, k=256, n=100, pallas=True, tp=8)
+    g = _guards(spec)["sta"]
+    assert "unsupported axis split" in g and "N=100" in g and "8" in g
+
+
+def test_guard_reason_names_block_interior_split():
+    # per-shard K = 8·8/16 = 4 < block 8: the row split lands inside a
+    # DBB block — the guard must say so, not claim a generic failure
+    spec = OpSpec(domain="matmul", m=128, k=64, n=256, packed=True,
+                  pallas=True, tp=16, collective="all-reduce", block=8)
+    g = _guards(spec)["dbb_packed"]
+    assert "splits inside a block" in g or "unsupported axis split" in g
+
+
+def test_guard_reason_inactive_route_mentions_shard_map_reenable():
+    spec = OpSpec(domain="matmul", m=128, k=256, n=256, pallas=False)
+    g = _guards(spec)["sta"]
+    assert "shard_map" in g
+
+
+# ---------------------------------------------------------------------------
+# analysis pass 6: per-shard VMEM / route survival
+# ---------------------------------------------------------------------------
+
+def test_tp_vmem_pass_clean_on_real_registry():
+    from repro.analysis import dispatch_check
+    routes = {d: dispatch.routes_for(d) for d in dispatch.DOMAINS}
+    checked, violations = tp_vmem.check_registry(
+        routes, dispatch_check.default_specs())
+    assert checked > 0
+    assert violations == []
+
+
+def test_tp_vmem_pass_catches_global_dim_guard():
+    """A guard that consults GLOBAL dims under tp (here: rejects the
+    sharded spec on a budget its local shape passes) must be flagged."""
+    real = dispatch.routes_for("matmul")["sta"]
+
+    def bad_guard(spec):
+        g = real.guard(dataclasses.replace(spec, tp=1, collective=""))
+        if g:
+            return g
+        if spec.tp > 1 and spec.k * spec.n * spec.itemsize > 2 ** 22:
+            return "weight tile exceeds VMEM budget"   # global k·n!
+        return ""
+
+    routes = {"matmul": {"sta": dataclasses.replace(real, guard=bad_guard)}}
+    specs = {"matmul": [OpSpec(domain="matmul", m=256, k=2048, n=2048,
+                               pallas=True)]}
+    _, violations = tp_vmem.check_registry(routes, specs)
+    assert any(v.code == "tp-route-loss" for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# serving spec inference (pure, _FakeMesh — no devices)
+# ---------------------------------------------------------------------------
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_serve_cache_specs_shards_kv_heads_both_layouts():
+    from repro.dist.sharding import serve_cache_specs
+    contig = {"k": _sds(2, 4, 64, 8, 32), "v": _sds(2, 4, 64, 8, 32),
+              "length": _sds(4), "start": _sds(4)}
+    paged = {"k_pages": _sds(2, 33, 8, 8, 32),
+             "v_pages": _sds(2, 33, 8, 8, 32),
+             "block_table": _sds(4, 8), "length": _sds(4)}
+    cs = serve_cache_specs(contig, TP4)
+    ps = serve_cache_specs(paged, TP4)
+    kv_spec = P(None, None, None, "model", None)
+    assert cs["k"] == kv_spec and cs["v"] == kv_spec
+    assert ps["k_pages"] == kv_spec and ps["v_pages"] == kv_spec
+    # bookkeeping replicates — paged block tables are per-shard-valid
+    assert ps["block_table"] == P(None, None)
+    assert cs["length"] == P(None)
+
+
+def test_serve_cache_specs_replicates_when_heads_do_not_divide():
+    from repro.dist.sharding import serve_cache_specs
+    cache = {"k": _sds(2, 4, 64, 6, 32)}          # 6 heads, tp=4
+    assert serve_cache_specs(cache, TP4)["k"] == P(None, None, None,
+                                                   None, None)
+
+
+def test_tp_spec_violations_flags_replicated_row_weight():
+    from repro.dist.sharding import tp_spec_violations
+    params = {"layers": {"o_proj": {"w": _sds(128, 128)},
+                         "q_proj": {"w": _sds(128, 128)}}}
+    good = {"layers": {"o_proj": {"w": P("model", None)},
+                       "q_proj": {"w": P(None, "model")}}}
+    assert tp_spec_violations(params, good) == []
+    bad = {"layers": {"o_proj": {"w": P(None, None)},
+                      "q_proj": {"w": P(None, "model")}}}
+    gaps = tp_spec_violations(params, bad)
+    assert gaps and "o_proj" in gaps[0]
+
+
+def test_tp_spec_violations_flags_row_parallel_bias():
+    from repro.dist.sharding import tp_spec_violations
+    params = {"layers": {"wo": {"w": _sds(128, 128), "b": _sds(128)}}}
+    specs = {"layers": {"wo": {"w": P("model", None), "b": P(None)}}}
+    gaps = tp_spec_violations(params, specs)
+    assert any("bias" in g for g in gaps)
+
+
+# ---------------------------------------------------------------------------
+# tp_serve_reason — the wrap's refusal conditions name real causes
+# ---------------------------------------------------------------------------
+
+def test_tp_serve_reason_conditions():
+    from repro.serve.engine import tp_serve_reason
+    cfg = ModelConfig(family="dense_lm", d_model=64, d_ff=256,
+                      num_layers=1, num_heads=8, num_kv_heads=4,
+                      vocab_size=128, gemm_impl="pallas")
+    assert "no live mesh" in tp_serve_reason(cfg, None)
+    assert "gemm_impl" in tp_serve_reason(
+        cfg.replace(gemm_impl="xla"), TP4)
+    assert "moe" in tp_serve_reason(
+        cfg.replace(family="moe_lm"), TP4).lower()
+    assert "heads" in tp_serve_reason(cfg.replace(num_kv_heads=3), TP4)
+    assert "d_ff" in tp_serve_reason(cfg.replace(d_ff=130), TP4)
+    assert "vocab" in tp_serve_reason(cfg.replace(vocab_size=130), TP4)
+    assert tp_serve_reason(cfg, TP4) == ""
+
+
+def test_roofline_collective_bw_public():
+    from repro.roofline.analysis import HW_V5E, collective_bw
+    ar = collective_bw("all-reduce", HW_V5E)
+    ag = collective_bw("all-gather", HW_V5E)
+    assert ar > 0 and ag == pytest.approx(2 * ar)
