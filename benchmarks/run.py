@@ -11,9 +11,11 @@ paged-KV occupancy, DESIGN.md §10) to ``BENCH_attn.json``, and the
 kernel-dispatch section (auto vs forced routes across the decode/
 prefill/conv shape grid, DESIGN.md §11) to ``BENCH_dispatch.json``, and
 the packed-prefill section (pad-FLOP elimination + chunked-prefill TTFT,
-DESIGN.md §12) to ``BENCH_packed.json`` so the perf trajectory is
-machine-readable run-over-run (CI runs ``--smoke``, which executes only
-those sections on reduced shapes and still emits all five files).
+DESIGN.md §12) to ``BENCH_packed.json``, and the sampling/speculative
+section (tokens/step vs draft-k + the fused-epilogue A/B, DESIGN.md §15)
+to ``BENCH_sampling.json`` so the perf trajectory is machine-readable
+run-over-run (CI runs ``--smoke``, which executes only those sections on
+reduced shapes and still emits all six files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -37,6 +39,8 @@ _ATTN_SECTIONS = ("attn_paged",)
 _DISPATCH_SECTIONS = ("dispatch_routes",)
 # sections whose rows land in BENCH_packed.json (packed prefill, §12)
 _PACKED_SECTIONS = ("packed_prefill",)
+# sections whose rows land in BENCH_sampling.json (sampling + spec, §15)
+_SAMPLING_SECTIONS = ("spec_decode",)
 
 
 def main(argv=None) -> int:
@@ -55,8 +59,8 @@ def main(argv=None) -> int:
     from benchmarks import (attn_paged, conv_gemm, decode_serve,
                             dispatch_routes, fig4_layers, fig5_sweep,
                             fused_epilogue, packed_prefill,
-                            roofline_bench, table1_dbb_accuracy,
-                            table2_efficiency)
+                            roofline_bench, spec_decode,
+                            table1_dbb_accuracy, table2_efficiency)
 
     sections = [
         ("conv_gemm (implicit vs materialized im2col)",
@@ -71,6 +75,8 @@ def main(argv=None) -> int:
          "dispatch_routes", lambda: dispatch_routes.run(fast=fast)),
         ("packed_prefill (padding-free admission + chunked prefill, §12)",
          "packed_prefill", lambda: packed_prefill.run(fast=fast)),
+        ("spec_decode (sampling head + self-speculative decode, §15)",
+         "spec_decode", lambda: spec_decode.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -86,7 +92,7 @@ def main(argv=None) -> int:
         sections = [s for s in sections
                     if s[1] in (_PERF_SECTIONS + _DECODE_SECTIONS
                                 + _ATTN_SECTIONS + _DISPATCH_SECTIONS
-                                + _PACKED_SECTIONS)]
+                                + _PACKED_SECTIONS + _SAMPLING_SECTIONS)]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -131,6 +137,12 @@ def main(argv=None) -> int:
         path = os.path.join(args.out, "BENCH_packed.json")
         with open(path, "w") as f:
             json.dump(pkd, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    smp = {k: results[k] for k in _SAMPLING_SECTIONS if k in results}
+    if smp:
+        path = os.path.join(args.out, "BENCH_sampling.json")
+        with open(path, "w") as f:
+            json.dump(smp, f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
     if failures:

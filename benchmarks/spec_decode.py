@@ -1,0 +1,165 @@
+"""Sampling + self-speculative decode A/B (DESIGN.md §15).
+
+Three measurements on one smoke LM:
+
+1. **Tokens/step vs draft-k**: serve the same sampled workload at
+   ``draft_k = 0`` (plain sampling) and increasing draft depths. The
+   weights are made *acceptance-friendly* by zeroing every layer past
+   the draft boundary — those layers become exact residual identities,
+   so the truncated draft model agrees with the full model and the
+   rejection-sampling verifier accepts nearly every draft. This is the
+   regime where self-speculation pays: the A/B's speedup floor mirrors
+   the continuous-batching benchmark's.
+
+2. **Acceptance accounting**: the engine's `serve_stats` speculative
+   counters (`spec_emitted / spec_steps`), reported as tokens/step and
+   the per-draft acceptance rate.
+
+3. **Penalty-epilogue A/B**: one skinny head-GEMV shape sampled through
+   the fused Pallas epilogue route and through the XLA reference
+   sampler — the streams must be bit-identical (the roofline costs of
+   the two routes are what `BENCH_dispatch.json` tracks; here the check
+   is semantic equivalence plus wall time for the record).
+
+Emitted as the ``spec_decode`` section of ``BENCH_sampling.json`` by
+`benchmarks.run` (CI smoke-runs it and uploads the artifact).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SPEEDUP_FLOOR = 1.3     # acceptance: spec decode ≥ 1.3x plain sampling
+
+
+def _identity_tail(params: Dict, nd: int) -> Dict:
+    """Zero every stacked-layer leaf from layer ``nd`` on: those layers'
+    attention/MLP blocks emit exact zeros, the residual stream passes
+    through unchanged, and the truncated draft model computes the same
+    logits as the full model — the acceptance-friendly regime."""
+    def z(a):
+        m = jnp.arange(a.shape[0]) < nd
+        return a * m.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+    return dict(params, layers=jax.tree_util.tree_map(z, params["layers"]))
+
+
+def _build(seed: int = 0):
+    from repro.configs import get_config
+    from repro.models import registry
+
+    # deepen and widen the smoke config: self-speculation trades k cheap
+    # truncated steps for one multi-token verify, which only pays when
+    # the full model is meaningfully deeper than the draft (2 smoke
+    # layers give a 1-layer draft that costs half a full step — no room
+    # to win) and when per-step compute dominates the interpreter's
+    # fixed per-op dispatch overhead (the smoke dims are overhead-bound)
+    cfg = get_config("olmo-1b", smoke=True).replace(
+        remat="none", num_layers=8, d_model=512, d_ff=1536,
+        num_heads=8, num_kv_heads=8)
+    params = registry.init_params(jax.random.PRNGKey(seed), cfg)
+    nd = 1
+    return cfg, _identity_tail(params, nd), nd
+
+
+def _epilogue_ab(cfg, params) -> Dict:
+    """Fused Pallas epilogue vs the XLA reference sampler on one skinny
+    head shape: bit-identical tokens, wall time for the record."""
+    from repro.kernels import dispatch
+    from repro.models import registry
+
+    pcfg = cfg.replace(gemm_impl="pallas")
+    b, d = 4, cfg.d_model
+    w = registry.lm_head_weight(params, cfg).astype(jnp.float32)
+    v = w.shape[-1]
+    h = jax.random.normal(jax.random.PRNGKey(1), (b, d), jnp.float32)
+    counts = jnp.zeros((b, v), jnp.int32)
+    row_f = jnp.full((b,), 0.7, jnp.float32)
+    one = jnp.ones((b,), jnp.float32)
+    zero = jnp.zeros((b,), jnp.float32)
+    seeds = jnp.arange(b, dtype=jnp.int32)
+    step = jnp.zeros((b,), jnp.int32)
+
+    def call(route):
+        return dispatch.head_sample(
+            h, w, counts, row_f, one, zero, zero, seeds, step,
+            cfg=pcfg, route=route)
+
+    routes = {}
+    toks = {}
+    for route in ("head_sample_fused", "head_sample_xla"):
+        fn = jax.jit(lambda r=route: call(r))
+        tok = np.asarray(fn())                       # compile + run
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        routes[route] = round(time.perf_counter() - t0, 6)
+        toks[route] = tok
+    bit_equal = bool(
+        (toks["head_sample_fused"] == toks["head_sample_xla"]).all())
+    assert bit_equal, "fused epilogue diverged from the XLA sampler"
+    return {"shape_bkn": [b, d, v], "bit_equal": bit_equal,
+            "fused_s": routes["head_sample_fused"],
+            "xla_s": routes["head_sample_xla"]}
+
+
+def run(fast: bool = False) -> Dict:
+    from repro.serve.engine import ServeEngine
+    from repro.serve.sampling import SamplingParams
+
+    cfg, params, nd = _build()
+    rng = np.random.default_rng(0)
+    n_req = 8 if fast else 12
+    max_new = 16 if fast else 24
+    prompts = [list(rng.integers(2, 500, size=6)) for _ in range(n_req)]
+    budgets = [max_new] * n_req
+    sampling = [SamplingParams(temperature=0.7, seed=i)
+                for i in range(n_req)]
+    # eos greedy can't emit: decode length stays budget-driven, so the
+    # A/B measures the step loop, not random early stops
+    eng = ServeEngine(cfg, params, max_batch=4, eos_id=-1, fetch_chunk=4,
+                      draft_layers=nd)
+
+    rows: List[Dict] = []
+    tok_s_by_k: Dict[int, float] = {}
+    for k in (0, 2, 3):
+        eng.serve(prompts[:4], budgets[:4], sampling=sampling[:4],
+                  draft_k=k)                          # warmup/compile
+        t_best, outs = float("inf"), None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            outs = eng.serve(prompts, budgets, sampling=sampling,
+                             draft_k=k)
+            t_best = min(t_best, time.perf_counter() - t0)
+        n_tok = sum(len(o) for o in outs)
+        tok_s = n_tok / t_best
+        tok_s_by_k[k] = tok_s
+        row = {"draft_k": k, "draft_layers": nd if k else 0,
+               "total_tokens": n_tok, "tok_s": round(tok_s, 2)}
+        if k:
+            st = eng.serve_stats
+            tps = st["spec_emitted"] / max(1, st["spec_steps"])
+            row["tokens_per_step"] = round(tps, 3)
+            row["acceptance_rate"] = round((tps - 1) / k, 3)
+            row["speedup_vs_plain"] = round(tok_s / tok_s_by_k[0], 3)
+        print(f"  draft_k={k}: {tok_s:9.1f} tok/s"
+              + (f" ({row['tokens_per_step']:.2f} tok/step, "
+                 f"acceptance {row['acceptance_rate']:.2f}, "
+                 f"{row['speedup_vs_plain']:.2f}x)" if k else ""))
+        rows.append(row)
+
+    best = max(r.get("speedup_vs_plain", 0.0) for r in rows)
+    assert best >= SPEEDUP_FLOOR, (
+        f"speculative speedup {best:.2f}x below the {SPEEDUP_FLOOR}x "
+        f"floor at acceptance-friendly settings")
+
+    epi = _epilogue_ab(cfg, params)
+    print(f"  fused epilogue vs XLA sampler: bit_equal={epi['bit_equal']} "
+          f"({epi['fused_s']*1e3:.1f}ms vs {epi['xla_s']*1e3:.1f}ms)")
+    return {"tokens_per_step": rows, "penalty_epilogue_ab": epi}
+
+
+if __name__ == "__main__":
+    run()

@@ -42,6 +42,7 @@ CONTRACT_MODULES = (
     "repro.kernels.skinny.contract",
     "repro.kernels.conv_gemm.contract",
     "repro.kernels.attn.contract",
+    "repro.kernels.sample.contract",
 )
 
 

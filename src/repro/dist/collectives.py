@@ -20,7 +20,7 @@ from repro.dist.mesh_ctx import current_mesh
 __all__ = ["dense_ce", "dense_ce_chunked", "vocab_parallel_ce",
            "vocab_parallel_embed", "cross_entropy", "axis_size",
            "overlapped_psum", "shard_embed_lookup", "shard_greedy",
-           "greedy_vocab_parallel", "greedy_scatter"]
+           "shard_sample", "greedy_vocab_parallel", "greedy_scatter"]
 
 
 def axis_size(name: str = "model") -> int:
@@ -215,6 +215,53 @@ def shard_greedy(h: jax.Array, w_head_local: jax.Array, *,
     logits = dispatch.matmul(h, w_head_local.astype(jnp.float32), cfg=cfg,
                              pallas=(impl == "pallas"), gemv=True)
     return _greedy_combine(logits, axis)
+
+
+def shard_sample(h: jax.Array, w_head_local: jax.Array, counts: jax.Array,
+                 temp, rep, pres, freq, seed, step, *,
+                 top_k=None, top_p=None, use_tt: bool = False,
+                 impl: str = "xla", cfg=None,
+                 axis: str = "model") -> jax.Array:
+    """Vocab-parallel sampling head from inside a shard_map body — the
+    sampling twin of `shard_greedy` (DESIGN.md §15).
+
+    Each shard runs the head GEMV + sampling epilogue on its column
+    slice ``[d, v/tp]`` with noise keyed to GLOBAL vocab ids (the shard
+    offset feeds the counter hash), reduces to one (best score, global
+    argmax) pair per row, and the same [tp, B] scalar all_gather combine
+    the greedy head uses picks the winner — bit-identical to a
+    single-device run over the full row, because per-shard scores equal
+    the corresponding slice of the full-row scores and the combine keeps
+    `jnp.argmax`'s first-max order across vocab-ordered shards.
+
+    ``counts`` arrives replicated ``[B, V]`` (it is per-request state,
+    not weight); each shard slices its window. ``use_tt`` (STATIC) is
+    the top-k/top-p escape hatch: the masks are global order statistics,
+    so the shards all-gather the [B, V] logits once and run the full XLA
+    reference sampler identically — correctness over wire-efficiency for
+    the rows that ask for it.
+    """
+    from repro.kernels import dispatch
+    idx = jax.lax.axis_index(axis)
+    v_loc = w_head_local.shape[-1]
+    base = idx * v_loc
+    if use_tt:
+        from repro.kernels.sample.ref import sample_logits
+        logits_loc = dispatch.matmul(h, w_head_local.astype(jnp.float32),
+                                     cfg=cfg, pallas=(impl == "pallas"),
+                                     gemv=True)
+        logits = jax.lax.all_gather(logits_loc, axis, axis=-1, tiled=True)
+        return sample_logits(logits, counts, temp, top_k, top_p, rep,
+                             pres, freq, seed, step, use_tt=True)
+    counts_loc = jax.lax.dynamic_slice_in_dim(counts, base, v_loc, axis=1)
+    score, tok_loc = dispatch.head_sample(
+        h, w_head_local, counts_loc, temp, rep, pres, freq, seed, step,
+        base=base, cfg=cfg, pallas=(impl == "pallas"), return_score=True)
+    all_max = jax.lax.all_gather(score, axis)               # [tp, B]
+    all_arg = jax.lax.all_gather(tok_loc + base, axis)      # global ids
+    winner = jnp.argmax(all_max, axis=0)
+    return jnp.take_along_axis(
+        all_arg, winner[None], axis=0)[0].astype(jnp.int32)
 
 
 def greedy_vocab_parallel(hidden: jax.Array, w_head: jax.Array, mesh,

@@ -52,9 +52,9 @@ from repro.roofline.analysis import HW_V5E, Hardware, collective_bw
 __all__ = [
     "Route", "RouteDecision", "OpSpec", "register_route", "routes_for",
     "select", "explain", "format_table", "matmul", "conv", "attention",
-    "decode_attention_route", "pallas_route_active", "flash_backend_active",
-    "forced_route", "routes_from_cfg", "FORCE_ROUTE_ENV", "COST_TIE_RTOL",
-    "DOMAINS",
+    "head_sample", "decode_attention_route", "pallas_route_active",
+    "flash_backend_active", "forced_route", "routes_from_cfg",
+    "FORCE_ROUTE_ENV", "COST_TIE_RTOL", "DOMAINS",
 ]
 
 FORCE_ROUTE_ENV = "REPRO_FORCE_ROUTE"
@@ -62,7 +62,7 @@ FORCE_ROUTE_ENV = "REPRO_FORCE_ROUTE"
 # within it the more specialized kernel wins on priority).
 COST_TIE_RTOL = 0.10
 
-DOMAINS = ("matmul", "conv", "attention", "attn_decode")
+DOMAINS = ("matmul", "conv", "attention", "attn_decode", "head_sample")
 
 _MASK_BYTES = 1          # DBB bitmask storage: 1 byte per 8-block
 _F32 = 4
@@ -114,6 +114,10 @@ class OpSpec:
     # decode extras
     page: int = 0
     ring: bool = False
+    # head_sample extras: top-k/top-p active for some row — they are
+    # global order statistics, which the streaming fused epilogue cannot
+    # compute (the XLA sampler materializes the row and sorts)
+    sample_tt: bool = False
     # TP sharding (DESIGN.md §14): tp > 1 costs the op as the per-shard
     # instance a TP shard_map body would run — row-parallel ops (those
     # paying a boundary collective) split K, everything else splits N.
@@ -372,10 +376,10 @@ def explain(domain: str = "matmul", *, m: int, k: int, n: int,
             pallas = True
     itemsize = jnp.dtype(dtype).itemsize
     spec_kw.setdefault("out_itemsize", itemsize)
-    if domain in ("attention", "attn_decode"):
-        # the attention kernels take floats only; the GEMM/conv kernels
-        # also accept int8 — mirror the front doors' own float_ok exactly
-        # or explain() would report routes the runtime never takes
+    if domain in ("attention", "attn_decode", "head_sample"):
+        # the attention + sampling kernels take floats only; the GEMM/conv
+        # kernels also accept int8 — mirror the front doors' own float_ok
+        # exactly or explain() would report routes the runtime never takes
         spec_kw.setdefault("float_ok",
                            jnp.issubdtype(jnp.dtype(dtype), jnp.floating))
     else:
@@ -1143,3 +1147,127 @@ def decode_attention_route(cfg, *, group: int, head_dim: int, itemsize: int,
                   float_ok=floating)
     name, _ = select(spec, routes_from_cfg(cfg))
     return name
+
+
+# ---------------------------------------------------------------------------
+# head_sample domain (fused sampling head, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+# VPU ops per logit in the sampling epilogue: penalty selects + 3 hash
+# mixes (~4 ops each) + the log/log/scale of the gumbel transform
+_SAMPLE_EPI_OPS = 16.0
+
+
+def _guard_head_sample_fused(spec: OpSpec) -> str:
+    if not spec.pallas:
+        return ("Pallas route not selected (gemm_impl != 'pallas', or a "
+                "global GSPMD graph — per-shard shard_map bodies "
+                "re-enable it)")
+    if not spec.float_ok:
+        return "non-float hidden rows (the sampling epilogue is f32)"
+    if spec.sample_tt:
+        return ("top-k/top-p are global order statistics — the streaming "
+                "epilogue cannot sort the row (XLA sampler materializes)")
+    r = _tp_split_reason(spec)      # vocab-parallel: column split of N
+    if r:
+        return r
+    if not skinny_ok(spec.m, spec.k, spec.itemsize):
+        return (f"outside the skinny regime (M ≤ {SKINNY_M_MAX} and "
+                f"resident [M,K] ≤ VMEM/4)")
+    _, _, n_loc = _shard_dims(spec)
+    if spec.k % 128 or n_loc % 128:
+        return (f"K={spec.k} / local N={n_loc} not divisible by the "
+                "128-lane tile (vocab padding could win the argmax)")
+    return ""
+
+
+def _hs_fused_cost(spec: OpSpec) -> Tuple[float, float]:
+    mp, kp, np_ = _mm_dims(spec, skinny=True)
+    flops = 2.0 * mp * kp * np_ + _SAMPLE_EPI_OPS * mp * np_
+    # resident rows + streamed weight + streamed counts; the logits and
+    # scores live only in VMEM — output traffic is the [M, 1] scalar pair
+    nbytes = (mp * kp * spec.itemsize + kp * np_ * spec.itemsize
+              + mp * np_ * _F32 + 2.0 * mp * _F32)
+    return flops, nbytes
+
+
+def _hs_xla_cost(spec: OpSpec) -> Tuple[float, float]:
+    m, k, n = _shard_dims(spec)
+    flops = 2.0 * m * k * n + _SAMPLE_EPI_OPS * m * n
+    # the GEMV writes [M, N] logits to HBM, then the sampler re-reads
+    # them for the penalty pass and the score/argmax pass
+    nbytes = (m * k * spec.itemsize + k * n * spec.itemsize
+              + m * n * _F32 + 2.0 * 2.0 * m * n * _F32
+              + m * n * _F32)                       # counts read
+    if spec.sample_tt:
+        # sort + softmax/cumsum of the sorted row, another ~2 round-trips
+        nbytes += 4.0 * m * n * _F32
+    return flops, nbytes
+
+
+register_route(Route(
+    name="head_sample_fused", domain="head_sample", priority=0,
+    guard=_guard_head_sample_fused,
+    cost=_hs_fused_cost,
+    describe="skinny head GEMV + fused penalty/temperature/Gumbel "
+             "epilogue; logits never materialized, scalar (score, id) "
+             "out (vocab-parallel combine under TP)"))
+
+register_route(Route(
+    name="head_sample_xla", domain="head_sample", priority=9,
+    guard=lambda s: "",
+    cost=_hs_xla_cost,
+    describe="materialized [B,V] logits + XLA reference sampler "
+             "(top-k/top-p capable)"))
+
+
+def head_sample(h: jax.Array, w_head, counts: jax.Array, temp, rep, pres,
+                freq, seed, step, *, top_k=None, top_p=None,
+                use_tt: bool = False, base=0, cfg=None,
+                pallas: Optional[bool] = None, route: Optional[str] = None,
+                return_score: bool = False):
+    """Front door for the sampling head: one token per row from hidden
+    rows ``h [B, K]`` against the head weight ``w_head [K, N]``, with the
+    TensorRT-LLM-contract penalties read from ``counts [B, N]`` and
+    counter-hash Gumbel noise keyed by per-row ``(seed, step)``.
+
+    ``use_tt`` is a STATIC flag — pass True only when some live row
+    actually uses top-k/top-p; it forces the XLA sampler route (the
+    masks are global order statistics) and traces the masking code.
+    ``base`` offsets noise to global vocab ids for vocab-parallel TP
+    shards; ``return_score=True`` additionally returns the winning score
+    so the caller can run the scalar (max, argmax) shard combine.
+    """
+    b, k_dim = h.shape
+    k_w, n = w_head.shape
+    assert k_dim == k_w, (h.shape, w_head.shape)
+    if pallas is None:
+        pallas = pallas_route_active(cfg)
+    spec = OpSpec(
+        domain="head_sample", m=b, k=k_dim, n=n,
+        itemsize=4, out_itemsize=4, gemv=True, pallas=bool(pallas),
+        sample_tt=bool(use_tt),
+        float_ok=jnp.issubdtype(h.dtype, jnp.floating))
+    if route is not None:
+        dec = _decide(_REGISTRY["head_sample"][route], spec, HW_V5E)
+        if not dec.applicable:
+            raise ValueError(f"route {route!r} rejected this op: "
+                             f"{dec.reason}")
+        name = route
+    else:
+        name, _ = select(spec, routes_from_cfg(cfg))
+
+    if name == "head_sample_fused":
+        from repro.kernels.sample.ops import head_sample_fused
+        score, tok = head_sample_fused(
+            h, w_head, counts, temp, rep, pres, freq, seed, step,
+            base=base)
+    else:
+        from repro.kernels.sample.ref import sample_argmax
+        logits = matmul(h.astype(jnp.float32),
+                        w_head.astype(jnp.float32), cfg=cfg,
+                        pallas=bool(pallas), gemv=True)
+        score, tok = sample_argmax(
+            logits, counts, temp, rep, pres, freq, seed, step,
+            base=base, top_k=top_k, top_p=top_p, use_tt=use_tt)
+    return (score, tok) if return_score else tok

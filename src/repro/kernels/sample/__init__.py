@@ -1,0 +1,19 @@
+"""Fused head-sampling kernels + the shared XLA reference sampler
+(DESIGN.md §15)."""
+from repro.kernels.sample.kernel import head_sample_fused_pallas
+from repro.kernels.sample.ops import head_sample_fused
+from repro.kernels.sample.ref import (NEG_INF, SALT_ACCEPT, SALT_RESAMPLE,
+                                      SALT_TOKEN, apply_penalties,
+                                      gumbel_noise, hash_u32,
+                                      inv_temperature, mask_top_k,
+                                      mask_top_p, probs_from_logits,
+                                      sample_argmax, sample_logits,
+                                      sample_scores, uniform_noise)
+
+__all__ = [
+    "head_sample_fused_pallas", "head_sample_fused",
+    "NEG_INF", "SALT_TOKEN", "SALT_ACCEPT", "SALT_RESAMPLE",
+    "hash_u32", "uniform_noise", "gumbel_noise", "apply_penalties",
+    "inv_temperature", "mask_top_k", "mask_top_p", "sample_scores",
+    "sample_argmax", "sample_logits", "probs_from_logits",
+]

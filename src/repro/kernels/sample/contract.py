@@ -1,0 +1,91 @@
+"""KernelContract declarations for the fused sampling head
+(`head_sample_fused_pallas`) — DESIGN.md §13/§15.
+
+Same skinny weight-streaming regime as the decode GEMV: the padded
+hidden block ``[mp, kp]`` is grid-constant (``resident``, budgeted by
+`SKINNY_RESIDENT_BUDGET`) while weight and counts tiles stream over an
+(N, K) grid. The difference from `skinny/contract.py` is the epilogue:
+the per-row best (score, index) pair is a *running argmax carried
+across N tiles*, so both outputs are revisited over **both** grid dims
+— both must be ``"arbitrary"`` and both are declared ``acc_dims``.
+The logits tile itself lives only in the VMEM accumulator; the
+epilogue's score/global-id tiles are declared as ``extra_vmem_bytes``.
+
+The instance set mirrors the dispatch guard's three rejection reasons:
+the resident-budget boundary (largest K that exactly fills VMEM/4 —
+admitted — and one lane-tile past it — vmem-rejected) plus a
+lane-divisibility reject (``k % 128 != 0``), which is *not* a VMEM
+reject and must not trip the dead-headroom check.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET, LANE, SUBLANE
+from repro.kernels.common import SKINNY_RESIDENT_BUDGET, round_up, skinny_ok
+
+__all__ = ["contracts"]
+
+_F32 = 4
+
+
+def _instance(m: int, k: int, n: int, *, itemsize: int = 4
+              ) -> KernelContract:
+    mp = round_up(max(m, 1), SUBLANE)
+    kp = round_up(max(k, 1), LANE)
+    np_ = round_up(max(n, 1), LANE)
+    bk, bn = LANE, LANE
+    grid = (np_ // bn, kp // bk)
+    vmem_ok = skinny_ok(m, k, itemsize)
+    lane_ok = k % bk == 0 and n % bn == 0
+
+    row = lambda name: BlockDecl(name, (mp, 1), lambda j, kk: (0, 0),
+                                 (mp, 1), 4)
+    return KernelContract(
+        name=f"head_sample_fused[m{m} k{k} n{n}]",
+        route="head_sample_fused", domain="head_sample",
+        grid=grid,
+        # the running argmax reads its own prior value: every visit is a
+        # read-modify-write of the (score, index) pair, so *both* dims
+        # are sequential — unlike the plain skinny GEMM, N cannot be
+        # "parallel" here
+        dimension_semantics=("arbitrary", "arbitrary"),
+        inputs=(
+            BlockDecl("x", (mp, kp), lambda j, kk: (0, 0), (mp, kp),
+                      itemsize, resident=True),
+            BlockDecl("w", (bk, bn), lambda j, kk: (kk, j), (kp, np_),
+                      itemsize),
+            BlockDecl("counts", (mp, bn), lambda j, kk: (0, j),
+                      (mp, np_), 4),
+            row("temp"), row("rep"), row("pres"), row("freq"),
+            row("seed"), row("step"), row("base"),
+        ),
+        outputs=(
+            BlockDecl("best_score", (mp, 1), lambda j, kk: (0, 0),
+                      (mp, 1), 4),
+            BlockDecl("best_idx", (mp, 1), lambda j, kk: (0, 0),
+                      (mp, 1), 4),
+        ),
+        scratch=(ScratchDecl("acc", (mp, bn), 4),),
+        acc_dims=(0, 1), guarded_init=True, guarded_store=True,
+        vmem_budget=KERNEL_VMEM_BUDGET,
+        resident_budget=SKINNY_RESIDENT_BUDGET,
+        # epilogue intermediates at k == n_k - 1: the penalized score
+        # tile (f32) and the global-token-id tile (i32)
+        extra_vmem_bytes=2 * mp * bn * _F32,
+        admitted=vmem_ok and lane_ok,
+        vmem_reject=not vmem_ok)
+
+
+def contracts() -> List[KernelContract]:
+    # K that exactly fills the resident budget for mp = 8, f32 — and the
+    # first K one lane-tile past it (rejected by skinny_ok)
+    k_fit = SKINNY_RESIDENT_BUDGET // (SUBLANE * _F32)
+    return [
+        _instance(1, 2048, 32000),          # decode head GEMV, full vocab
+        _instance(8, 2048, 4000),           # TP-local vocab shard
+        _instance(8, k_fit, 256),           # boundary: fits exactly
+        _instance(8, k_fit + LANE, 256),    # boundary: vmem-rejected
+        _instance(8, 192, 256),             # lane reject (not a vmem one)
+    ]

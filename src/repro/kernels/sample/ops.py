@@ -1,0 +1,71 @@
+"""Shape-policy wrapper for the fused head-sample kernel.
+
+Pads the batch rows to the sublane quantum (the same policy the skinny
+GEMM wrapper applies), fills the pad rows with identity sampling params
+(temperature 0, repetition 1, zero counts — so they run a harmless
+argmax over zero logits), and unpads the scalar outputs. K/N
+divisibility by the 128 tile is a dispatch-guard precondition, not
+padded here: zero-padding the vocab dim would let a pad column win the
+argmax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sta import SUBLANE
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.sample.kernel import head_sample_fused_pallas
+
+__all__ = ["head_sample_fused"]
+
+
+def _col(a, b: int, pad: int, dtype, fill) -> jax.Array:
+    out = jnp.asarray(a, dtype).reshape(b, 1)
+    if pad:
+        out = jnp.pad(out, ((0, pad), (0, 0)), constant_values=fill)
+    return out
+
+
+def head_sample_fused(
+    h: jax.Array,        # [B, K] hidden rows
+    w: jax.Array,        # [K, N] head weight (local vocab slice under TP)
+    counts: jax.Array,   # [B, N] i32 output-token counts
+    temp: jax.Array,     # [B] f32
+    rep: jax.Array,      # [B] f32
+    pres: jax.Array,     # [B] f32
+    freq: jax.Array,     # [B] f32
+    seed: jax.Array,     # [B] i32/u32 bit pattern
+    step: jax.Array,     # [B] i32
+    base=0,              # scalar: global vocab id of w's column 0
+    *,
+    block_k: int = 128,
+    block_n: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(best score [B] f32, sampled LOCAL index [B] i32)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, _ = h.shape
+    mp = round_up(max(b, 1), SUBLANE)
+    pad = mp - b
+    x = h.astype(jnp.float32)
+    c = counts.astype(jnp.int32)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    base_col = jnp.broadcast_to(
+        jnp.asarray(base, jnp.int32).reshape(1, 1), (mp, 1))
+    score, idx = head_sample_fused_pallas(
+        x, w.astype(jnp.float32), c,
+        _col(temp, b, pad, jnp.float32, 0.0),
+        _col(rep, b, pad, jnp.float32, 1.0),
+        _col(pres, b, pad, jnp.float32, 0.0),
+        _col(freq, b, pad, jnp.float32, 0.0),
+        _col(seed, b, pad, jnp.int32, 0),
+        _col(step, b, pad, jnp.int32, 0),
+        base_col,
+        block_k=block_k, block_n=block_n, interpret=interpret)
+    return score[:b, 0], idx[:b, 0]

@@ -27,7 +27,8 @@ __all__ = ["main"]
 
 
 def _log_routes(cfg, batch: int, smax: int, packed: bool,
-                total_tokens: int = 0) -> None:
+                total_tokens: int = 0, sampling_on: bool = False,
+                use_tt: bool = False) -> None:
     """Print the dispatch registry's ranked route tables (DESIGN.md §11)
     for this serving run's hot shapes — decode-batch layer GEMM, prefill
     attention at the shape the engine actually dispatches, and decode
@@ -66,6 +67,12 @@ def _log_routes(cfg, batch: int, smax: int, packed: bool,
         print(dispatch.format_table(dispatch.explain(
             "attention", m=smax, k=hd, n=smax, dtype=cfg.dtype, cfg=cfg,
             batch=batch)))
+    if sampling_on:
+        print(f"- head sample [M={batch}, K={d}, N={cfg.vocab_size}]"
+              f"{' (top-k/top-p active)' if use_tt else ''}:")
+        print(dispatch.format_table(dispatch.explain(
+            "head_sample", m=batch, k=d, n=cfg.vocab_size,
+            dtype=cfg.dtype, cfg=cfg, sample_tt=use_tt)))
     g = cfg.num_heads // max(1, cfg.num_kv_heads)
     page = cfg.kv_page_size or math.gcd(smax, DEFAULT_PAGE)
     route = dispatch.decode_attention_route(
@@ -112,6 +119,20 @@ def main(argv=None) -> int:
                          "this many tokens so long prompts interleave "
                          "with decode steps (bounds TTFT jitter); 0 = "
                          "whole-prompt prefill (packed mode only)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every request "
+                         "(0 = greedy, bit-identical to the legacy "
+                         "argmax path; DESIGN.md §15)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = off; any truncation "
+                         "pins the head to the XLA sampler route)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = off)")
+    ap.add_argument("--draft-k", type=int, default=0,
+                    help="self-speculative decode: draft this many "
+                         "tokens per step with the truncated-layer "
+                         "model, verify in one batched step (0 = off; "
+                         "incompatible with top-k/top-p)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -148,18 +169,39 @@ def main(argv=None) -> int:
     # "packed" only when the weights actually are (--packed AND dbb on).
     # Packed admission charges prefill at the first wave's real token
     # count (sum over admitted prompts), not the B×T_max rectangle.
+    sampled = (args.temperature > 0.0 or args.top_k > 0
+               or args.top_p < 1.0 or args.draft_k > 0)
+    sampling = None
+    if sampled:
+        from repro.serve.sampling import SamplingParams
+        sampling = [SamplingParams(temperature=args.temperature,
+                                   top_k=args.top_k, top_p=args.top_p,
+                                   seed=args.seed + i)
+                    for i in range(n_req)]
+    use_tt = args.top_k > 0 or args.top_p < 1.0
     wave = sum(len(p) for p in prompts[:args.batch])
     _log_routes(cfg, args.batch, args.prompt_len + args.max_new,
                 packed=bool(args.packed and cfg.dbb.enabled),
-                total_tokens=wave if args.prefill_mode == "packed" else 0)
+                total_tokens=wave if args.prefill_mode == "packed" else 0,
+                sampling_on=sampled, use_tt=use_tt)
+    if sampled:
+        print(f"sampling: temperature={args.temperature} "
+              f"top_k={args.top_k} top_p={args.top_p} "
+              f"seeds={args.seed}..{args.seed + n_req - 1} (per request); "
+              f"speculative draft_k={args.draft_k}"
+              + (" (draft = first num_layers//2 layers, rejection-"
+                 "sampling verify)" if args.draft_k else " (off)"))
     eng = ServeEngine(cfg, params, max_batch=args.batch,
                       kv_pool_pages=args.kv_pool_pages,
                       prefill_mode=args.prefill_mode,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      draft_k=args.draft_k)
     if n_req > args.batch:
-        outs = eng.serve(prompts, max_new_tokens=args.max_new)
+        outs = eng.serve(prompts, max_new_tokens=args.max_new,
+                         sampling=sampling)
     else:
-        outs = eng.generate(prompts, max_new_tokens=args.max_new)
+        outs = eng.generate(prompts, max_new_tokens=args.max_new,
+                            sampling=sampling)
     for i, o in enumerate(outs):
         print(f"req{i}: {o}")
     return 0

@@ -33,7 +33,8 @@ from repro.models.common import apply_rope, linear_init
 
 __all__ = ["attention_init", "attention_apply", "packed_attention_apply",
            "chunk_attention_apply", "decode_attention_apply",
-           "paged_decode_attention_apply", "init_kv_cache"]
+           "paged_decode_attention_apply", "verify_attention_apply",
+           "paged_verify_attention_apply", "init_kv_cache"]
 
 _NEG_INF = -1e30
 
@@ -486,6 +487,84 @@ def decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
     o = o.reshape(b, 1, hq * hd).astype(x.dtype)
     y = _o_proj(p["o_proj"], o, cfg)
     return y, new_k, new_v
+
+
+def verify_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                           cache_k: jax.Array, cache_v: jax.Array,
+                           lengths: jax.Array,
+                           start: Optional[jax.Array] = None,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Speculative VERIFY attention (DESIGN.md §15): x [B, T, d] carries
+    the current token plus the T-1 draft tokens; their K/V land at
+    absolute cache slots ``lengths .. lengths+T-1`` and every position
+    attends the row's cache causally (self included) — one skinny-M
+    batched step scores all T candidates through the unchanged cache
+    instead of T sequential decode steps.
+
+    Rejected drafts are rolled back by LENGTH ACCOUNTING alone: the
+    engine advances ``length`` by the accepted count, future steps mask
+    ``kpos > length`` and the next write overwrites the stale slots, so
+    the pool itself is never touched twice. Same ragged contract as
+    `decode_attention_apply`: RoPE at logical positions
+    ``lengths - start + t``, pad slots below ``start`` never attended.
+    """
+    b, t, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    smax = cache_k.shape[1]
+    st = jnp.zeros_like(lengths) if start is None else start
+    qpos = (lengths - st)[:, None] + jnp.arange(t)[None, :]   # [B,T] logical
+    q, k, v = _project_qkv(p, cfg, x, qpos)
+
+    def upd(cache, new, i):
+        return jax.lax.dynamic_update_slice(cache, new, (i, 0, 0))
+    new_k = jax.vmap(upd)(cache_k, k.astype(cache_k.dtype), lengths)
+    new_v = jax.vmap(upd)(cache_v, v.astype(cache_v.dtype), lengths)
+
+    # logical key positions: slot s holds logical position s - start, so
+    # pad slots sit below zero (masked) and the block's fresh keys line
+    # up exactly under qpos — causal `kpos <= qpos` bounds each candidate
+    # to its own prefix, matching a token-at-a-time decode bit-for-bit.
+    kpos = jnp.arange(smax)[None, :] - st[:, None]            # [B, Smax]
+    o = _naive_attention(q, new_k, new_v, qpos, kpos, cfg)
+    return _o_proj(p["o_proj"], o.reshape(b, t, hq * hd), cfg), new_k, new_v
+
+
+def paged_verify_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,
+                                 k_pages: jax.Array, v_pages: jax.Array,
+                                 block_table: jax.Array, lengths: jax.Array,
+                                 start: Optional[jax.Array] = None,
+                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """`verify_attention_apply` against the paged KV pool (DESIGN.md
+    §10/§15): the T candidate K/V scatter through the block table to
+    their owning physical pages, then the row's logical cache is
+    gathered back for the same naive masked attention — identical key
+    order and identical f32 arithmetic as the contiguous twin, so paged
+    and contiguous speculative serving stay bit-identical. Rows whose
+    table points at the reserved dummy page (retired slots still
+    stepping) write there harmlessly; logical page indices clamp so
+    overshoot never runs off the table."""
+    from repro.kernels.attn.ref import gather_pages
+    b, t, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    page = k_pages.shape[1]
+    n_log = block_table.shape[1]
+    st = jnp.zeros_like(lengths) if start is None else start
+    qpos = (lengths - st)[:, None] + jnp.arange(t)[None, :]   # [B,T] logical
+    q, k, v = _project_qkv(p, cfg, x, qpos)
+
+    slots = lengths[:, None] + jnp.arange(t)[None, :]         # [B,T] absolute
+    logp = jnp.clip(slots // page, 0, n_log - 1)
+    phys = jnp.take_along_axis(block_table, logp, axis=1)     # [B,T]
+    off = slots % page
+    new_kp = k_pages.at[phys, off].set(k.astype(k_pages.dtype))
+    new_vp = v_pages.at[phys, off].set(v.astype(v_pages.dtype))
+
+    krow = gather_pages(new_kp, block_table)                  # [B, S, Hkv, D]
+    vrow = gather_pages(new_vp, block_table)
+    kpos = jnp.arange(n_log * page)[None, :] - st[:, None]
+    o = _naive_attention(q, krow, vrow, qpos, kpos, cfg)
+    return (_o_proj(p["o_proj"], o.reshape(b, t, hq * hd), cfg),
+            new_kp, new_vp)
 
 
 def paged_decode_attention_apply(p: Dict, cfg: ModelConfig, x: jax.Array,

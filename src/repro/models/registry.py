@@ -10,8 +10,8 @@ from repro.config import ModelConfig
 from repro.models import cnn as cnn_mod
 from repro.models import transformer as tf
 
-__all__ = ["init_params", "forward", "decode_step", "prefill",
-           "prefill_packed", "prefill_continue", "init_cache",
+__all__ = ["init_params", "forward", "decode_step", "verify_step",
+           "prefill", "prefill_packed", "prefill_continue", "init_cache",
            "lm_head_weight"]
 
 _LM_FAMILIES = ("dense_lm", "moe_lm", "rwkv6", "zamba2", "vlm_lm", "audio_lm")
@@ -39,6 +39,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
 
 
 decode_step = tf.decode_step
+verify_step = tf.verify_step
 prefill = tf.prefill
 prefill_packed = tf.prefill_packed
 prefill_continue = tf.prefill_continue

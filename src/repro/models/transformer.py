@@ -33,8 +33,8 @@ from repro.models.common import (dtype_of, embed_apply, embed_init,
 from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 
-__all__ = ["init_params", "forward", "decode_step", "prefill",
-           "prefill_packed", "prefill_continue", "init_cache",
+__all__ = ["init_params", "forward", "decode_step", "verify_step",
+           "prefill", "prefill_packed", "prefill_continue", "init_cache",
            "lm_head_weight"]
 
 
@@ -290,6 +290,70 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     }
 
 
+def _cached_layer_body(cfg: ModelConfig, attn_call):
+    """One cached-step layer body (decode and speculative verify; the KV
+    layout — contiguous vs paged, DESIGN.md §10 — and the step kind only
+    change the attention call, so all four paths share this block and
+    cannot drift)."""
+    def body(x, xs):
+        lp, ck, cv = xs
+        lp = _unpack_layer(lp, cfg)
+        h = norm_apply(cfg.norm, lp["ln_attn"], x)
+        y, nk, nv = attn_call(lp, h, ck, cv)
+        x = x + y
+        h = norm_apply(cfg.norm, lp["ln_mlp"], x)
+        if cfg.family == "moe_lm":
+            z, _ = moe_apply(lp["moe"], cfg, h)
+            x = x + z
+        else:
+            x = x + mlp_apply(lp["mlp"], cfg, h)
+        return x, (nk, nv)
+    return body
+
+
+def verify_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Speculative VERIFY: score T candidate tokens in ONE skinny-M
+    batched step (DESIGN.md §15). ``tokens [B, T]`` carries the current
+    token plus the T-1 draft tokens per row; every layer's K/V is written
+    at cache slots ``length .. length+T-1`` and the returned hidden
+    ``[B, T, d]`` yields the full model's distribution at each candidate
+    position.
+
+    ``cache["length"]`` is left UNTOUCHED: the caller advances it by the
+    accepted count, which IS the rollback — stale K/V past the accepted
+    prefix is masked by ``kpos <= length`` everywhere and overwritten by
+    the next step, in both KV layouts."""
+    assert cfg.family in ("dense_lm", "moe_lm", "vlm_lm",
+                          "audio_lm"), cfg.family
+    dtype = dtype_of(cfg)
+    x = embed_apply(params["embed"], tokens, dtype,
+                    vocab_parallel=cfg.parallel != "dp")
+    if cfg.family in ("dense_lm", "moe_lm", "vlm_lm"):
+        x = x * (cfg.d_model ** 0.5)
+    start = cache.get("start")
+    lengths = cache["length"]
+
+    if "k_pages" in cache:
+        table = cache["block_table"]
+        body = _cached_layer_body(
+            cfg, lambda lp, h, kp, vp: attn.paged_verify_attention_apply(
+                lp["attn"], cfg, h, kp, vp, table, lengths, start=start))
+        x, (nkp, nvp) = jax.lax.scan(
+            body, x, (params["layers"], cache["k_pages"],
+                      cache["v_pages"]))
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        return x, dict(cache, k_pages=nkp, v_pages=nvp)
+
+    body = _cached_layer_body(
+        cfg, lambda lp, h, ck, cv: attn.verify_attention_apply(
+            lp["attn"], cfg, h, ck, cv, lengths, start=start))
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return x, dict(cache, k=nk, v=nv)
+
+
 def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                 cache: Dict, embeds: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
@@ -328,23 +392,7 @@ def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     start = cache.get("start")
 
     def make_body(attn_call):
-        """One decode layer body; the KV layout (contiguous vs paged,
-        DESIGN.md §10) only changes the attention call, so both cache
-        layouts share this block and cannot drift."""
-        def body(x, xs):
-            lp, ck, cv = xs
-            lp = _unpack_layer(lp, cfg)
-            h = norm_apply(cfg.norm, lp["ln_attn"], x)
-            y, nk, nv = attn_call(lp, h, ck, cv)
-            x = x + y
-            h = norm_apply(cfg.norm, lp["ln_mlp"], x)
-            if cfg.family == "moe_lm":
-                z, _ = moe_apply(lp["moe"], cfg, h)
-                x = x + z
-            else:
-                x = x + mlp_apply(lp["mlp"], cfg, h)
-            return x, (nk, nv)
-        return body
+        return _cached_layer_body(cfg, attn_call)
 
     if "k_pages" in cache:
         # paged KV cache (DESIGN.md §10): per-layer page pools scan with

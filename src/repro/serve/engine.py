@@ -55,6 +55,9 @@ from repro.models import registry
 
 __all__ = ["make_decode_step", "make_prefill_step",
            "make_packed_prefill_step", "make_chunk_prefill_step",
+           "make_sample_decode_step", "make_spec_decode_step",
+           "make_sample_prefill_step", "make_sample_packed_prefill_step",
+           "make_sample_chunk_prefill_step",
            "ServeEngine", "greedy_from_hidden", "tp_serve_reason"]
 
 # Families whose decode cache is the attention [L, B, S, H, D] K/V layout
@@ -238,6 +241,235 @@ def make_chunk_prefill_step(cfg: ModelConfig):
     return step
 
 
+def make_sample_decode_step(cfg: ModelConfig, use_tt: bool = False):
+    """Sampled decode (DESIGN.md §15): ``step(params, cache, tokens [B],
+    sstate) -> ((next_tokens [B], sstate), cache)``.
+
+    The sampling twin of `make_decode_step`: the head runs the fused
+    penalty→temperature→gumbel epilogue through the dispatch registry and
+    the emitted token folds into the on-device history (counts scatter +
+    RNG ordinal) — no host sync added to the chunk loop. ``use_tt`` is
+    static: False traces no top-k/top-p code at all (and keeps the fused
+    route eligible); True pins the head to the XLA sampler."""
+    from repro.serve import sampling
+
+    def step(params, cache, tokens, sstate):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.decode_step(p, cfg, tokens, cache)
+        nxt = sampling.sample_from_hidden(
+            hidden, registry.lm_head_weight(p, cfg), sstate,
+            impl=_gemm_impl(cfg), cfg=cfg, use_tt=use_tt)
+        return (nxt, sampling.record_tokens(sstate, nxt)), new_cache
+
+    return step
+
+
+def make_spec_decode_step(cfg: ModelConfig, draft_k: int,
+                          draft_layers: int):
+    """Self-speculative decode (DESIGN.md §15): ``step(params, cache,
+    tokens [B], sstate) -> ((emit [B, k+1], n_emit [B], sstate), cache)``.
+
+    One speculative step per call: the TRUNCATED model (first
+    ``draft_layers`` of the stacked weights, same embed/head) drafts
+    ``draft_k`` tokens autoregressively against a throwaway copy of the
+    cache's first layers; the FULL model verifies all k+1 positions in
+    one skinny-M batched forward (`registry.verify_step` — K/V written at
+    the absolute slots, ``length`` untouched); the standard
+    rejection-sampling rule accepts a prefix and resamples the first
+    rejected position from the residual distribution. Acceptance-aware
+    slot accounting: ``length`` advances by exactly ``n_emit``, so the
+    rejected tokens' K/V writes sit above the attention mask and are
+    overwritten by the next step — the paged cache's rejected writes land
+    in still-granted pages of the same row, never another request's.
+
+    Top-k/top-p are not supported here (the engine gates speculation off
+    for such batches): the acceptance rule needs matched p/q
+    distributions, and truncating both would still leave the draft
+    sampling its tokens from a differently-truncated support."""
+    from repro.serve import sampling
+    nd = draft_layers
+    assert 0 < nd < cfg.num_layers, (nd, cfg.num_layers)
+    dcfg = cfg.replace(num_layers=nd)
+    k = draft_k
+    _KV_KEYS = ("k", "v", "k_pages", "v_pages")
+
+    def head_logits(h2d, p):
+        """[M, d] hidden rows → [M, V] FULL-vocab f32 logits (the accept
+        rule needs whole distributions; under TP the per-shard GEMV
+        all-gathers its vocab columns — [M, V] with M ≤ B·(k+1) skinny
+        rows, not a decode-batch [B, V] per layer)."""
+        w = registry.lm_head_weight(p, cfg).astype(jnp.float32)
+        lg = dispatch.matmul(h2d.astype(jnp.float32), w, cfg=cfg,
+                             pallas=(_gemm_impl(cfg) == "pallas"),
+                             gemv=True)
+        if shard_tp() > 1:
+            lg = jax.lax.all_gather(lg, "model", axis=-1, tiled=True)
+        return lg
+
+    def step(params, cache, tokens, sstate):
+        from repro.kernels.sample import sample_logits
+        p = _decompress_non_layer(params, cfg)
+        b = tokens.shape[0]
+        s = sstate
+        # -- draft: k autoregressive steps of the truncated model over a
+        # throwaway first-nd-layers view of the cache (functional copies
+        # — the real cache is untouched until verify writes it)
+        dparams = dict(p, layers=jax.tree_util.tree_map(
+            lambda a: a[:nd], p["layers"]))
+        dcache = {key: (v[:nd] if key in _KV_KEYS else v)
+                  for key, v in cache.items()}
+        cur = tokens
+        d_toks, d_lgs = [], []
+        for i in range(k):
+            hidden, dcache = registry.decode_step(dparams, dcfg, cur,
+                                                  dcache)
+            lg = head_logits(hidden[:, -1], p)
+            # counts snapshotted across the step (sampling/ops.py doc);
+            # ordinal step+i matches the non-spec stream's draw counter
+            tok = sample_logits(lg, s["counts"], s["temp"], s["top_k"],
+                                s["top_p"], s["rep"], s["pres"], s["freq"],
+                                s["seed"], s["step"] + i)
+            d_toks.append(tok)
+            d_lgs.append(lg)
+            cur = tok
+        draft_tok = jnp.stack(d_toks, axis=1)            # [B, k]
+        draft_lg = jnp.stack(d_lgs, axis=1)              # [B, k, V]
+        # -- verify: one skinny-M forward of the FULL model over
+        # [cur, d_0..d_{k-1}]; writes K/V at slots length..length+k in
+        # every layer, leaves cache["length"] untouched
+        vt = jnp.concatenate([tokens[:, None], draft_tok], axis=1)
+        hidden, vcache = registry.verify_step(p, cfg, vt, cache)
+        vlg = head_logits(hidden.reshape(b * (k + 1), -1), p)
+        vlg = vlg.reshape(b, k + 1, -1)                  # [B, k+1, V]
+        emit, n_emit = sampling.speculative_accept_state(
+            draft_tok, draft_lg, vlg, s)
+        # acceptance-aware slot accounting: exactly the accepted prefix +
+        # cur become resident (the new cur = emit[n_emit-1] is NOT yet
+        # written — same invariant as plain decode); rejected tokens'
+        # writes sit at kpos >= length and are re-written next step
+        new_cache = dict(vcache, length=cache["length"] + n_emit)
+        return (emit, n_emit,
+                sampling.record_emitted(s, emit, n_emit)), new_cache
+
+    return step
+
+
+def make_sample_prefill_step(cfg: ModelConfig, use_tt: bool = False):
+    """Sampled prefill: ``step(params, cache, batch, fvals [G, 5],
+    ivals [G, 2]) -> ((first token [G], sstate [G-row]), cache)``.
+
+    The knob arrays are `pack_params` rows; a fresh request has zero
+    output history, so the step builds a zero-counts state, samples the
+    first token at RNG ordinal 0, and returns the state with that token
+    already recorded (counts + ordinal advanced to 1)."""
+    from repro.serve import sampling
+
+    def step(params, cache, batch, fvals, ivals):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.prefill(
+            p, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            prefix_embeds=batch.get("prefix_embeds"),
+            cache=cache,
+            start=batch.get("start"))
+        w = registry.lm_head_weight(p, cfg)
+        vocab = w.shape[-1] * max(1, shard_tp())
+        state = sampling.fresh_state(fvals, ivals, vocab)
+        nxt = sampling.sample_from_hidden(hidden[:, -1:], w, state,
+                                          impl=_gemm_impl(cfg), cfg=cfg,
+                                          use_tt=use_tt)
+        return (nxt, sampling.record_tokens(state, nxt)), new_cache
+
+    return step
+
+
+def make_sample_packed_prefill_step(cfg: ModelConfig,
+                                    use_tt: bool = False):
+    """Sampled twin of `make_packed_prefill_step` (+ ``fvals [Gp, 5]`` /
+    ``ivals [Gp, 2]`` in packed item order) → ``((tokens [Gp], sstate),
+    cache)``. Spare gather rows carry zero knobs — temperature 0 over a
+    zero history is a plain argmax, and their tokens are never consumed."""
+    from repro.serve import sampling
+
+    def step(params, cache, tokens, seg_ids, positions, rows, cols,
+             gather_idx, fvals, ivals):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.prefill_packed(
+            p, cfg, tokens, seg_ids, positions, rows, cols, cache)
+        last = jnp.take(hidden[0], gather_idx, axis=0)[:, None]
+        w = registry.lm_head_weight(p, cfg)
+        vocab = w.shape[-1] * max(1, shard_tp())
+        state = sampling.fresh_state(fvals, ivals, vocab)
+        nxt = sampling.sample_from_hidden(last, w, state,
+                                          impl=_gemm_impl(cfg), cfg=cfg,
+                                          use_tt=use_tt)
+        return (nxt, sampling.record_tokens(state, nxt)), new_cache
+
+    return step
+
+
+def make_sample_chunk_prefill_step(cfg: ModelConfig,
+                                   use_tt: bool = False):
+    """Sampled twin of `make_chunk_prefill_step` (+ ``fvals [1, 5]`` /
+    ``ivals [1, 2]``) → ``((token [1], sstate), cache)``. The token is
+    only consumed when the chunk completes the prompt — it is that
+    request's FIRST emitted token, drawn at RNG ordinal 0."""
+    from repro.serve import sampling
+
+    def step(params, cache, tokens, positions, rows, cols, kv_sel,
+             last_idx, fvals, ivals):
+        p = _decompress_non_layer(params, cfg)
+        hidden, new_cache = registry.prefill_continue(
+            p, cfg, tokens, positions, rows, cols, kv_sel, cache)
+        last = jnp.take(hidden, last_idx, axis=1)[:, None]
+        w = registry.lm_head_weight(p, cfg)
+        vocab = w.shape[-1] * max(1, shard_tp())
+        state = sampling.fresh_state(fvals, ivals, vocab)
+        nxt = sampling.sample_from_hidden(last, w, state,
+                                          impl=_gemm_impl(cfg), cfg=cfg,
+                                          use_tt=use_tt)
+        return (nxt, sampling.record_tokens(state, nxt)), new_cache
+
+    return step
+
+
+def _consume_slot(host_emit: np.ndarray, host_nem: np.ndarray, slot: int,
+                  row: List[int], left: int, eos_id: int
+                  ) -> Tuple[int, bool]:
+    """Drain one slot's emitted tokens from a fetched chunk into ``row``.
+
+    ``host_emit`` [steps, B, ke] / ``host_nem`` [steps, B]: per decode
+    step, the first ``host_nem[s, slot]`` entries of
+    ``host_emit[s, slot]`` are real (speculative steps emit a variable
+    1..k+1; plain steps always 1). Consumption stops at EOS or when the
+    request's remaining ``left`` budget hits zero — surplus tokens from
+    overshoot steps are discarded, exactly like the greedy loops.
+    Returns (remaining budget, finished)."""
+    for s in range(host_emit.shape[0]):
+        for j in range(int(host_nem[s, slot])):
+            t = int(host_emit[s, slot, j])
+            row.append(t)
+            left -= 1
+            if t == eos_id or left <= 0:
+                return left, True
+    return left, False
+
+
+def _bump_spec_stats(stats: Dict[str, int], host_n: np.ndarray,
+                     active: Dict[int, int]) -> None:
+    """Accumulate speculative accounting over a chunk's live slots:
+    tokens emitted vs speculative steps run (acceptance rate falls out as
+    ``(spec_emitted / spec_steps - 1) / draft_k``). Overshoot steps of
+    rows retiring mid-chunk are included — a slight undercount of the
+    true acceptance, fine for the serve-stats gauge."""
+    stats["spec_steps"] = (stats.get("spec_steps", 0)
+                           + host_n.shape[0] * len(active))
+    stats["spec_emitted"] = (stats.get("spec_emitted", 0)
+                             + sum(int(host_n[:, s].sum())
+                                   for s in active))
+
+
 def _bucket_len(n: int, minimum: int = 8) -> int:
     """Pad a prompt length up to a power-of-two bucket (≥ minimum) so the
     per-slot admission prefill compiles once per bucket, not once per
@@ -306,6 +538,13 @@ class ServeEngine:
     # prefill with decode chunks (bounds decode-row TTFT jitter under
     # heavy admission). 0 = whole-prompt prefill. Packed mode only.
     prefill_chunk: int = 0
+    # self-speculative decode (DESIGN.md §15): draft_k > 0 drafts that
+    # many tokens per step with the truncated model and verifies them in
+    # one batched forward. Only engages on sampled calls (generate/serve
+    # with ``sampling=``); per-call ``draft_k=`` overrides. draft_layers
+    # picks the truncation depth (0 = num_layers // 2).
+    draft_k: int = 0
+    draft_layers: int = 0
 
     def __post_init__(self):
         # hoisted non-layer decompression: pay the embed/LM-head DBB
@@ -344,6 +583,13 @@ class ServeEngine:
         self._install = jax.jit(self._install_fn, donate_argnums=0)
         self._install_paged = jax.jit(self._install_paged_fn,
                                       donate_argnums=0)
+        # sampled/speculative variants, built lazily per static knob set
+        # (use_tt, draft_k) — a greedy engine never traces sampling code
+        self._sample_raws: Dict[Any, Any] = {}
+        self._sample_chunks: Dict[Any, Any] = {}
+        self._sample_prefills: Dict[Any, Any] = {}
+        self._sstate_admit = jax.jit(self._sstate_admit_fn,
+                                     donate_argnums=0)
         # filled by the paged serve() scheduler (occupancy benchmarking)
         self.serve_stats: Dict[str, int] = {}
 
@@ -403,11 +649,22 @@ class ServeEngine:
             raw, eos = self._decode_raw, self.eos_id
 
             def chunk(params, cache, cur, done):
-                def body(carry, _):
+                def live(carry):
                     cur, cache, done = carry
                     nxt, cache = raw(params, cache, cur)
                     done = done | (nxt == eos)
                     return (nxt, cache, done), nxt
+
+                def skip(carry):
+                    # early exit: once every row is done mid-chunk the
+                    # remaining scan iterations skip the whole-model step
+                    # (the repeated cur is never consumed — done rows'
+                    # token loops already broke at their EOS)
+                    return carry, carry[0]
+
+                def body(carry, _):
+                    return jax.lax.cond(jnp.all(carry[2]), skip, live,
+                                        carry)
 
                 (cur, cache, done), toks = jax.lax.scan(
                     body, (cur, cache, done), None, length=steps)
@@ -417,11 +674,114 @@ class ServeEngine:
             self._chunk_fns[steps] = fn
         return fn
 
+    # -- sampled / speculative variants (DESIGN.md §15) -------------------
+
+    def _resolved_draft_layers(self) -> int:
+        return self.draft_layers or max(1, self.cfg.num_layers // 2)
+
+    def _sample_raw(self, use_tt: bool, draft_k: int):
+        """`_tp_step`-wrapped sampled (or speculative) decode step, cached
+        per static knob set."""
+        key = (use_tt, draft_k)
+        fn = self._sample_raws.get(key)
+        if fn is None:
+            if draft_k > 0:
+                nd = self._resolved_draft_layers()
+                fn = self._tp_step(
+                    lambda c: make_spec_decode_step(c, draft_k, nd))
+            else:
+                fn = self._tp_step(
+                    lambda c: make_sample_decode_step(c, use_tt))
+            self._sample_raws[key] = fn
+        return fn
+
+    def _sample_prefill_fn(self, mode: str, use_tt: bool):
+        """Jitted sampled prefill for ``mode`` in padded/packed/chunk."""
+        key = (mode, use_tt)
+        fn = self._sample_prefills.get(key)
+        if fn is None:
+            maker = {"padded": make_sample_prefill_step,
+                     "packed": make_sample_packed_prefill_step,
+                     "chunk": make_sample_chunk_prefill_step}[mode]
+            stepped = self._tp_step(lambda c: maker(c, use_tt))
+            # padded admission reuses a pristine cache template (never
+            # donated); packed/chunk scatter into the live shared cache
+            fn = (jax.jit(stepped) if mode == "padded"
+                  else jax.jit(stepped, donate_argnums=1))
+            self._sample_prefills[key] = fn
+        return fn
+
+    def _sample_chunk_fn(self, steps: int, use_tt: bool, draft_k: int):
+        """Sampled twin of `_chunk_fn`: carries (cur, cache, done, sstate)
+        and emits ``(emit [steps, B, ke], n_emit [steps, B])`` with
+        ``ke = draft_k + 1`` (1 for plain sampling) — the host drains a
+        variable number of real tokens per step (`_consume_slot`). Same
+        all-done early exit as the greedy chunk."""
+        key = (steps, use_tt, draft_k)
+        fn = self._sample_chunks.get(key)
+        if fn is None:
+            raw = self._sample_raw(use_tt, draft_k)
+            eos, ke = self.eos_id, draft_k + 1
+            spec = draft_k > 0
+
+            def chunk(params, cache, cur, done, sstate):
+                def live(carry):
+                    cur, cache, done, sstate = carry
+                    if spec:
+                        (emit, nem, sstate), cache = raw(
+                            params, cache, cur, sstate)
+                        mask = jnp.arange(ke)[None, :] < nem[:, None]
+                        done = done | jnp.any((emit == eos) & mask,
+                                              axis=1)
+                        cur = jnp.take_along_axis(
+                            emit, (nem - 1)[:, None], axis=1)[:, 0]
+                    else:
+                        (cur, sstate), cache = raw(params, cache, cur,
+                                                   sstate)
+                        emit = cur[:, None]
+                        nem = jnp.ones(cur.shape, jnp.int32)
+                        done = done | (cur == eos)
+                    return (cur, cache, done, sstate), (emit, nem)
+
+                def skip(carry):
+                    cur = carry[0]
+                    return carry, (
+                        jnp.broadcast_to(cur[:, None],
+                                         (cur.shape[0], ke)),
+                        jnp.ones(cur.shape, jnp.int32))
+
+                def body(carry, _):
+                    return jax.lax.cond(jnp.all(carry[2]), skip, live,
+                                        carry)
+
+                (cur, cache, done, sstate), (emit, nem) = jax.lax.scan(
+                    body, (cur, cache, done, sstate), None, length=steps)
+                return cur, cache, done, sstate, emit, nem
+
+            fn = jax.jit(chunk, donate_argnums=(1, 4))
+            self._sample_chunks[key] = fn
+        return fn
+
+    @staticmethod
+    def _sstate_admit_fn(sstate, slot, fvals, ivals, tok):
+        """Install one admitted request's sampling lanes at ``slot`` and
+        fold its prefill-sampled first token into the fresh history
+        (counts[slot, tok] = 1, RNG ordinal = 1 — matching what
+        `record_tokens` did inside the prefill step's own G-row state)."""
+        from repro.serve.sampling import state_install
+        s = state_install(sstate, slot, fvals, ivals)
+        return dict(s, counts=s["counts"].at[slot, tok].add(1),
+                    step=s["step"].at[slot].set(1))
+
     # -- static batch -----------------------------------------------------
 
-    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16
-                 ) -> List[List[int]]:
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                 sampling: Optional[Sequence[Any]] = None,
+                 draft_k: Optional[int] = None) -> List[List[int]]:
         assert len(prompts) <= self.max_batch
+        if sampling is not None:
+            return self._generate_sampled(prompts, max_new_tokens,
+                                          sampling, draft_k)
         b = len(prompts)
         max_len = max(len(p) for p in prompts)
         total = max_len + max_new_tokens
@@ -437,6 +797,12 @@ class ServeEngine:
             # machinery — an all-zero start would force every batched
             # prefill onto the naive [B,S] attention path for nothing
             batch["start"] = jnp.asarray(start)
+            if self._tp:
+                # the TP wrap derives shard_map out_specs from the INPUT
+                # cache tree; ragged prefill adds the "start" leaf to the
+                # returned cache, so seed it up front to keep the pytree
+                # structures aligned
+                cache["start"] = jnp.zeros((self.max_batch,), jnp.int32)
             if self.cfg.family in ("rwkv6", "zamba2"):
                 import warnings
                 warnings.warn(
@@ -466,6 +832,100 @@ class ServeEngine:
                 row.append(int(t))
                 if t == self.eos_id:
                     break
+            outs.append(row)
+        return outs
+
+    def _spec_mode(self, sampling: Sequence[Any],
+                   draft_k: Optional[int]) -> Tuple[bool, int]:
+        """Resolve a sampled call's static knobs: (use_tt, draft_k), with
+        speculation gated OFF (warning, not error) when this config or
+        batch cannot honor it."""
+        import warnings
+
+        from repro.serve.sampling import any_uses_tt
+        use_tt = any_uses_tt(sampling)
+        dk = self.draft_k if draft_k is None else draft_k
+        if dk > 0:
+            reason = ""
+            if self.cfg.family not in _CONT_BATCH_FAMILIES:
+                reason = (f"family {self.cfg.family!r} has no "
+                          "slot-addressed K/V cache for batched verify")
+            elif use_tt:
+                reason = ("top-k/top-p requests in the batch — the "
+                          "acceptance rule needs untruncated p/q")
+            elif self.cfg.num_layers < 2:
+                reason = "needs num_layers >= 2 to truncate a draft"
+            if reason:
+                warnings.warn(f"speculative decode disabled ({reason}) — "
+                              "serving with plain sampling", stacklevel=3)
+                dk = 0
+        return use_tt, dk
+
+    def _generate_sampled(self, prompts: List[List[int]],
+                          max_new_tokens: int, sampling: Sequence[Any],
+                          draft_k: Optional[int]) -> List[List[int]]:
+        """Sampled/speculative twin of the static `generate` path. Same
+        one-sync-per-chunk loop; chunks emit (emit, n_emit) blocks and the
+        host drains a variable token count per step."""
+        from repro.serve.sampling import pack_params
+        b = len(prompts)
+        assert len(sampling) == b, (len(sampling), b)
+        use_tt, dk = self._spec_mode(sampling, draft_k)
+        ke = dk + 1
+        max_len = max(len(p) for p in prompts)
+        # speculative verify writes a (k+1)-slab at the write cursor:
+        # give the cache that margin past the budget so no in-budget
+        # step's slab ever clamps into resident slots
+        total = max_len + max_new_tokens + (ke if dk else 0)
+        toks = np.zeros((self.max_batch, max_len), np.int32)
+        start = np.zeros((self.max_batch,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, max_len - len(p):] = p          # left-pad
+            start[i] = max_len - len(p)
+        fv = np.zeros((self.max_batch, 5), np.float32)
+        fv[:, 1] = 1.0                               # top_p identity
+        fv[:, 2] = 1.0                               # repetition identity
+        iv = np.zeros((self.max_batch, 2), np.int32)
+        for i, sp in enumerate(sampling):
+            f, ivv = pack_params(sp)
+            fv[i], iv[i] = np.asarray(f), np.asarray(ivv)
+        cache = registry.init_cache(self.cfg, self.max_batch, total)
+        batch = {"tokens": jnp.asarray(toks)}
+        if start.any():
+            batch["start"] = jnp.asarray(start)
+            if self._tp:
+                # keep shard_map in/out cache pytrees aligned (see
+                # `generate`)
+                cache["start"] = jnp.zeros((self.max_batch,), jnp.int32)
+        (cur, sstate), cache = self._sample_prefill_fn("padded", use_tt)(
+            self.params, cache, batch, jnp.asarray(fv), jnp.asarray(iv))
+        done = jnp.asarray(np.arange(self.max_batch) >= b) | (
+            cur == self.eos_id)
+        first = np.zeros((1, self.max_batch, ke), np.int64)
+        first[0, :, 0] = np.asarray(cur)
+        he_list = [first]
+        hn_list = [np.ones((1, self.max_batch), np.int64)]
+        # per-row emitted counts steer the loop: speculative chunks emit
+        # 1..k+1 per step, so "steps run" no longer measures progress
+        got = np.ones((self.max_batch,), np.int64)
+        while True:
+            dh = np.asarray(done)
+            if np.all(dh | (got >= max_new_tokens)):
+                break
+            cur, cache, done, sstate, e_d, n_d = self._sample_chunk_fn(
+                self.fetch_chunk, use_tt, dk)(
+                    self.params, cache, cur, done, sstate)
+            he_list.append(np.asarray(e_d))
+            hn = np.asarray(n_d)
+            hn_list.append(hn)
+            got += hn.sum(axis=0)
+        host_e = np.concatenate(he_list, axis=0)
+        host_n = np.concatenate(hn_list, axis=0)
+        outs: List[List[int]] = []
+        for i in range(b):
+            row: List[int] = []
+            _consume_slot(host_e, host_n, i, row, max_new_tokens,
+                          self.eos_id)
             outs.append(row)
         return outs
 
@@ -538,7 +998,9 @@ class ServeEngine:
               fetch_chunk: Optional[int] = None,
               prompt_bucket: int = 8,
               prefill_mode: Optional[str] = None,
-              prefill_chunk: Optional[int] = None) -> List[List[int]]:
+              prefill_chunk: Optional[int] = None,
+              sampling: Optional[Sequence[Any]] = None,
+              draft_k: Optional[int] = None) -> List[List[int]]:
         """Continuous-batching greedy decode over any number of requests.
 
         max_new_tokens: one budget for all requests, or one per request.
@@ -561,6 +1023,8 @@ class ServeEngine:
             assert len(budgets) == n_req, (len(budgets), n_req)
         if n_req == 0:
             return []
+        if sampling is not None:
+            assert len(sampling) == n_req, (len(sampling), n_req)
         if self.cfg.family not in _CONT_BATCH_FAMILIES:
             # SSM/hybrid states have no slot-scatterable K/V cache yet —
             # serve them as static waves (correct, just not continuous)
@@ -573,15 +1037,24 @@ class ServeEngine:
             for i in range(0, n_req, self.max_batch):
                 wave_p = prompts[i:i + self.max_batch]
                 wave_b = budgets[i:i + self.max_batch]
-                res = self.generate(wave_p, max_new_tokens=max(wave_b))
+                wave_s = (None if sampling is None
+                          else sampling[i:i + self.max_batch])
+                res = self.generate(wave_p, max_new_tokens=max(wave_b),
+                                    sampling=wave_s, draft_k=draft_k)
                 outs.extend(r[:bud] for r, bud in zip(res, wave_b))
             return outs
 
+        use_tt, dk = (False, 0) if sampling is None else \
+            self._spec_mode(sampling, draft_k)
+        # speculative margin: verify writes a (k+1)-slab at the write
+        # cursor, so every reservation (and smax) carries that headroom
+        dmargin = dk + 1 if dk else 0
         chunk = fetch_chunk or self.fetch_chunk
         blens = [_bucket_len(len(p), prompt_bucket) for p in prompts]
         # bucket the cache length too: serve() calls with nearby budgets
         # must reuse one compiled chunk scan / admit scatter / prefill
-        smax = _bucket_len(max(blens) + max(budgets), prompt_bucket)
+        smax = _bucket_len(max(blens) + max(budgets) + dmargin,
+                           prompt_bucket)
         if self.cfg.kv_page_size > 0:
             # page-align smax for BOTH schedulers: the contiguous flash
             # decode gate needs smax % page == 0, and a contiguous engine
@@ -612,22 +1085,32 @@ class ServeEngine:
             pchunk = (prefill_chunk if prefill_chunk is not None
                       else self.prefill_chunk)
             return self._serve_loop_packed(prompts, budgets, blens, smax,
-                                           chunk, backend, pchunk)
+                                           chunk, backend, pchunk,
+                                           sampling, use_tt, dk)
         return self._serve_loop(prompts, budgets, blens, smax, chunk,
-                                backend)
+                                backend, sampling, use_tt, dk)
 
     def _serve_loop(self, prompts: List[List[int]], budgets: List[int],
-                    blens: List[int], smax: int, chunk: int, backend
-                    ) -> List[List[int]]:
+                    blens: List[int], smax: int, chunk: int, backend,
+                    sampling: Optional[Sequence[Any]] = None,
+                    use_tt: bool = False, dk: int = 0) -> List[List[int]]:
         """The one continuous-batching scheduler both KV layouts share.
         The backend only decides how cache space is reserved and where
         admissions scatter (contiguous slots vs allocated pages) — token
         accounting, chunk decode, and retirement live here once, so the
         two layouts cannot drift apart (their token streams are asserted
-        bit-identical, DESIGN.md §10)."""
+        bit-identical, DESIGN.md §10). With ``sampling`` the decode chunks
+        carry the device-resident sampling state (and, with ``dk > 0``,
+        run speculative steps emitting 1..k+1 tokens each)."""
+        sampled = sampling is not None
+        dmargin = dk + 1 if dk else 0
         cache = backend.init_cache()
         cur = jnp.zeros((self.max_batch,), jnp.int32)
         done = jnp.ones((self.max_batch,), bool)
+        sstate = None
+        if sampled:
+            from repro.serve.sampling import pack_params, sampling_state
+            sstate = sampling_state(self.max_batch, self.cfg.vocab_size)
         outs: List[List[int]] = [[] for _ in prompts]
         queue = deque(range(len(prompts)))
         free = list(range(self.max_batch))
@@ -639,16 +1122,23 @@ class ServeEngine:
         c1_template = registry.init_cache(self.cfg, 1, smax)
 
         def admit(slot: int, ridx: int):
-            nonlocal cache, cur, done
-            grant = backend.reserve(ridx, blens[ridx], budgets[ridx])
+            nonlocal cache, cur, done, sstate
+            grant = backend.reserve(ridx, blens[ridx],
+                                    budgets[ridx] + dmargin)
             if grant is None:
                 return "defer"                       # wait for retirements
             p, bl = prompts[ridx], blens[ridx]
             toks = np.zeros((1, bl), np.int32)
             toks[0, bl - len(p):] = p                # left-pad to bucket
-            nxt1, c1 = self._prefill(self.params, c1_template, {
-                "tokens": jnp.asarray(toks),
-                "start": jnp.asarray([bl - len(p)], np.int32)})
+            batch1 = {"tokens": jnp.asarray(toks),
+                      "start": jnp.asarray([bl - len(p)], np.int32)}
+            if sampled:
+                fv, iv = pack_params(sampling[ridx])
+                (nxt1, _), c1 = self._sample_prefill_fn("padded", use_tt)(
+                    self.params, c1_template, batch1,
+                    fv[None], iv[None])
+            else:
+                nxt1, c1 = self._prefill(self.params, c1_template, batch1)
             tok = int(jax.device_get(nxt1)[0])       # first generated token
             outs[ridx].append(tok)
             if tok == self.eos_id or budgets[ridx] <= 1:
@@ -656,6 +1146,9 @@ class ServeEngine:
                 return False                         # finished at prefill
             cache, cur, done = backend.admit(cache, c1, cur, done, slot,
                                              nxt1[0], grant)
+            if sampled:
+                sstate = self._sstate_admit(sstate, jnp.int32(slot), fv,
+                                            iv, nxt1[0])
             active[slot] = ridx
             left[ridx] = budgets[ridx] - 1
             return True
@@ -690,17 +1183,26 @@ class ServeEngine:
             # fixed-size chunks (one compiled scan); rows that hit EOS or
             # their budget mid-chunk have their surplus tokens discarded
             # below and retire at the chunk boundary
-            cur, cache, done, toks_d = self._chunk_fn(chunk)(
-                self.params, cache, cur, done)
-            host = np.asarray(toks_d)                # one fetch per chunk
+            if sampled:
+                cur, cache, done, sstate, e_d, n_d = self._sample_chunk_fn(
+                    chunk, use_tt, dk)(self.params, cache, cur, done,
+                                       sstate)
+                host_e = np.asarray(e_d)             # one fetch per chunk
+                host_n = np.asarray(n_d)
+            else:
+                cur, cache, done, toks_d = self._chunk_fn(chunk)(
+                    self.params, cache, cur, done)
+                host_e = np.asarray(toks_d)[:, :, None]
+                host_n = np.ones(host_e.shape[:2], np.int64)
+            if dk:
+                _bump_spec_stats(backend.stats, host_n, active)
             retired = []
             for slot, ridx in active.items():
-                for t in host[:, slot]:
-                    outs[ridx].append(int(t))
-                    left[ridx] -= 1
-                    if t == self.eos_id or left[ridx] <= 0:
-                        retired.append(slot)
-                        break
+                left[ridx], fin = _consume_slot(host_e, host_n, slot,
+                                                outs[ridx], left[ridx],
+                                                self.eos_id)
+                if fin:
+                    retired.append(slot)
             for slot in retired:
                 del active[slot]
                 free.append(slot)
@@ -711,7 +1213,9 @@ class ServeEngine:
 
     def _serve_loop_packed(self, prompts: List[List[int]],
                            budgets: List[int], blens: List[int], smax: int,
-                           chunk: int, backend, prefill_chunk: int
+                           chunk: int, backend, prefill_chunk: int,
+                           sampling: Optional[Sequence[Any]] = None,
+                           use_tt: bool = False, dk: int = 0
                            ) -> List[List[int]]:
         """Padding-free continuous batching (DESIGN.md §12). Differences
         from `_serve_loop`:
@@ -738,6 +1242,8 @@ class ServeEngine:
         reserved dummy page."""
         import time
         t0 = time.perf_counter()
+        sampled = sampling is not None
+        dmargin = dk + 1 if dk else 0
         cache = backend.init_cache()
         paged = "k_pages" in cache
         if not paged:
@@ -745,6 +1251,10 @@ class ServeEngine:
                                                 jnp.int32))
         cur = jnp.zeros((self.max_batch,), jnp.int32)
         done = jnp.ones((self.max_batch,), bool)
+        sstate = None
+        if sampled:
+            from repro.serve.sampling import pack_params, sampling_state
+            sstate = sampling_state(self.max_batch, self.cfg.vocab_size)
         outs: List[List[int]] = [[] for _ in prompts]
         queue = deque(range(len(prompts)))
         free = list(range(self.max_batch))
@@ -766,7 +1276,7 @@ class ServeEngine:
                 stats["max_prefill_call_tokens"], tokens_padded)
 
         def complete(slot: int, st: list, tok: int):
-            nonlocal cache, cur, done
+            nonlocal cache, cur, done, sstate
             ridx, grant = st[0], st[2]
             outs[ridx].append(tok)
             ttft[ridx] = time.perf_counter() - t0
@@ -778,6 +1288,10 @@ class ServeEngine:
             cache, cur, done = backend.install(
                 cache, cur, done, slot, jnp.int32(tok),
                 len(prompts[ridx]), grant)
+            if sampled:
+                fv, iv = pack_params(sampling[ridx])
+                sstate = self._sstate_admit(sstate, jnp.int32(slot), fv,
+                                            iv, jnp.int32(tok))
             active[slot] = ridx
             left[ridx] = budgets[ridx] - 1
 
@@ -795,11 +1309,16 @@ class ServeEngine:
             cols = np.zeros((cp,), np.int32)
             rows[:c], cols[:c] = backend.token_addr(
                 slot, st[2], np.arange(off, off + c, dtype=np.int64))
-            nxt, cache = self._prefill_continue(
-                self.params, cache, jnp.asarray(toks),
-                jnp.asarray(pos)[None], jnp.asarray(rows),
-                jnp.asarray(cols), backend.kv_sel(slot, st[2]),
-                jnp.int32(c - 1))
+            cargs = (self.params, cache, jnp.asarray(toks),
+                     jnp.asarray(pos)[None], jnp.asarray(rows),
+                     jnp.asarray(cols), backend.kv_sel(slot, st[2]),
+                     jnp.int32(c - 1))
+            if sampled:
+                fv, iv = pack_params(sampling[ridx])
+                (nxt, _), cache = self._sample_prefill_fn("chunk", use_tt)(
+                    *cargs, fv[None], iv[None])
+            else:
+                nxt, cache = self._prefill_continue(*cargs)
             st[1] = off + c
             bump(cp, c)
             if st[1] == len(p):
@@ -816,7 +1335,7 @@ class ServeEngine:
                 if budgets[ridx] <= 0:
                     continue
                 grant = backend.reserve(ridx, len(prompts[ridx]),
-                                        budgets[ridx])
+                                        budgets[ridx] + dmargin)
                 if grant is None:
                     skipped.append(ridx)
                     stats["deferred_admissions"] += 1
@@ -873,11 +1392,23 @@ class ServeEngine:
                                            np.arange(c, dtype=np.int64))
                     gidx[i] = off + c - 1
                     off += c
-                nxt, cache = self._packed_prefill(
-                    self.params, cache, jnp.asarray(toks)[None],
-                    jnp.asarray(seg), jnp.asarray(pos)[None],
-                    jnp.asarray(rows), jnp.asarray(cols),
-                    jnp.asarray(gidx))
+                pargs = (self.params, cache, jnp.asarray(toks)[None],
+                         jnp.asarray(seg), jnp.asarray(pos)[None],
+                         jnp.asarray(rows), jnp.asarray(cols),
+                         jnp.asarray(gidx))
+                if sampled:
+                    fvp = np.zeros((gidx.shape[0], 5), np.float32)
+                    fvp[:, 1] = 1.0                  # spare rows: identity
+                    fvp[:, 2] = 1.0
+                    ivp = np.zeros((gidx.shape[0], 2), np.int32)
+                    for i, (slot, st, c) in enumerate(items):
+                        f, ivv = pack_params(sampling[st[0]])
+                        fvp[i], ivp[i] = np.asarray(f), np.asarray(ivv)
+                    (nxt, _), cache = self._sample_prefill_fn(
+                        "packed", use_tt)(*pargs, jnp.asarray(fvp),
+                                          jnp.asarray(ivp))
+                else:
+                    nxt, cache = self._packed_prefill(*pargs)
                 bump(tp, total)
                 host_tok = None
                 for i, (slot, st, c) in enumerate(items):
@@ -891,17 +1422,26 @@ class ServeEngine:
             if not active:
                 continue
             stats["peak_active"] = max(stats["peak_active"], len(active))
-            cur, cache, done, toks_d = self._chunk_fn(chunk)(
-                self.params, cache, cur, done)
-            host = np.asarray(toks_d)                # one fetch per chunk
+            if sampled:
+                cur, cache, done, sstate, e_d, n_d = self._sample_chunk_fn(
+                    chunk, use_tt, dk)(self.params, cache, cur, done,
+                                       sstate)
+                host_e = np.asarray(e_d)             # one fetch per chunk
+                host_n = np.asarray(n_d)
+            else:
+                cur, cache, done, toks_d = self._chunk_fn(chunk)(
+                    self.params, cache, cur, done)
+                host_e = np.asarray(toks_d)[:, :, None]
+                host_n = np.ones(host_e.shape[:2], np.int64)
+            if dk:
+                _bump_spec_stats(stats, host_n, active)
             retired = []
             for slot, ridx in active.items():
-                for t in host[:, slot]:
-                    outs[ridx].append(int(t))
-                    left[ridx] -= 1
-                    if t == self.eos_id or left[ridx] <= 0:
-                        retired.append(slot)
-                        break
+                left[ridx], fin = _consume_slot(host_e, host_n, slot,
+                                                outs[ridx], left[ridx],
+                                                self.eos_id)
+                if fin:
+                    retired.append(slot)
             for slot in retired:
                 del active[slot]
                 free.append(slot)

@@ -1,0 +1,17 @@
+"""On-device sampling subsystem (DESIGN.md §15): per-request params as
+device-resident [B]-vectors, the penalty→temperature→gumbel sampling
+head, and the self-speculative accept/reject rule."""
+from repro.serve.sampling.ops import (accept_speculative, record_emitted,
+                                      record_tokens, sample_from_hidden,
+                                      speculative_accept_state)
+from repro.serve.sampling.params import (SamplingParams, any_uses_tt,
+                                         fresh_state, pack_params,
+                                         sampling_state, state_from_params,
+                                         state_install)
+
+__all__ = [
+    "SamplingParams", "sampling_state", "state_from_params",
+    "state_install", "pack_params", "fresh_state", "any_uses_tt",
+    "sample_from_hidden", "record_tokens", "record_emitted",
+    "accept_speculative", "speculative_accept_state",
+]

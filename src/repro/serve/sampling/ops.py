@@ -1,0 +1,187 @@
+"""Device-side sampling operations for the serving engine (DESIGN.md §15).
+
+Three groups, all pure functions over the `sampling_state` dict so they
+compose inside the engine's jitted chunk scans:
+
+  * `sample_from_hidden` — the sampling twin of `engine.greedy_from_hidden`:
+    last-position hidden state → sampled token through the dispatch
+    registry (`head_sample`), with the vocab-parallel TP combine when a
+    mesh is live. Default params reduce to greedy bit-exactly.
+  * `record_tokens` / `record_emitted` — the on-device history update
+    (counts scatter-add + RNG-ordinal advance). Unconditional: dead rows
+    accumulate garbage into their own lanes, re-zeroed at admission.
+  * `accept_speculative` — the standard rejection-sampling acceptance
+    rule for self-speculative decode. Draft token ``d_i`` (drawn from the
+    truncated-model distribution ``q_i``) is accepted iff
+    ``u_i < p_i[d_i] / q_i[d_i]`` with ``p_i`` the full-model
+    distribution; the first rejected position resamples from the
+    residual ``norm(max(p_i - q_i, 0))``, and a fully-accepted draft
+    earns a bonus token from ``p_k`` — expressed as the SAME residual
+    formula with ``q_k := 0`` (``max(p - 0, 0) = p``), so one gather and
+    one gumbel-argmax cover both cases. The emitted prefix is provably
+    distributed as k+1 i.i.d. draws from ``p`` (Leviathan et al. 2023);
+    at temperature 0 every quantity is deterministic and the emitted
+    stream is bit-identical to plain greedy decode of the full model.
+
+Penalty counts are snapshotted at the start of a speculative step and
+shared by all k+1 positions (draft and verify see the same history) —
+exact when the penalties sit at their identity defaults, the standard
+approximation otherwise (a non-spec loop would fold each emitted token
+into the next position's counts).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.mesh_ctx import shard_tp
+from repro.kernels import dispatch
+from repro.kernels.sample import (NEG_INF, SALT_ACCEPT, SALT_RESAMPLE,
+                                  gumbel_noise, probs_from_logits,
+                                  uniform_noise)
+
+__all__ = ["sample_from_hidden", "record_tokens", "record_emitted",
+           "accept_speculative", "speculative_accept_state"]
+
+# Floor for the draft probability in the acceptance ratio: q[d] is
+# mathematically > 0 (d was sampled from q) but an extreme softmax can
+# underflow in f32; the floor keeps the ratio finite without changing
+# any non-degenerate comparison. Well above f32 denormals.
+_Q_TINY = np.float32(1e-30)
+
+
+def sample_from_hidden(hidden: jax.Array, w_head: jax.Array,
+                       state: Dict[str, jax.Array], *, impl: str = "xla",
+                       cfg=None, use_tt: bool = False,
+                       step_offset=0) -> jax.Array:
+    """hidden [B, T, d] → sampled next token [B] (last position).
+
+    The sampling twin of `greedy_from_hidden`: the head GEMV and the
+    penalty→temperature→gumbel epilogue go through the dispatch registry
+    (fused Pallas route when its guard admits, XLA reference otherwise).
+    Inside the TP serving wrap the vocab-column-sharded head runs the
+    same epilogue per shard on local columns and combines [B]-sized
+    (score, index) scalars — never [B, V] logits (DESIGN.md §14/§15).
+
+    ``step_offset`` shifts the RNG ordinal (the speculative draft loop
+    draws its i-th token at ``state["step"] + i``).
+    """
+    h = hidden[:, -1].astype(jnp.float32)
+    s = state
+    step = s["step"] + step_offset
+    if shard_tp() > 1:
+        from repro.dist.collectives import shard_sample
+        return shard_sample(h, w_head, s["counts"], s["temp"], s["rep"],
+                            s["pres"], s["freq"], s["seed"], step,
+                            top_k=s["top_k"], top_p=s["top_p"],
+                            use_tt=use_tt, impl=impl, cfg=cfg)
+    return dispatch.head_sample(h, w_head.astype(jnp.float32), s["counts"],
+                                s["temp"], s["rep"], s["pres"], s["freq"],
+                                s["seed"], step, top_k=s["top_k"],
+                                top_p=s["top_p"], use_tt=use_tt, cfg=cfg,
+                                pallas=(impl == "pallas"))
+
+
+def record_tokens(state: Dict[str, jax.Array], tok: jax.Array
+                  ) -> Dict[str, jax.Array]:
+    """Fold one emitted token per row into the history: counts[b, tok] += 1
+    and the RNG ordinal advances by one. Unconditional (see module doc)."""
+    b = tok.shape[0]
+    counts = state["counts"].at[jnp.arange(b), tok].add(1)
+    return dict(state, counts=counts, step=state["step"] + 1)
+
+
+def record_emitted(state: Dict[str, jax.Array], emit: jax.Array,
+                   n_emit: jax.Array) -> Dict[str, jax.Array]:
+    """Speculative variant: per row, the first ``n_emit[b]`` entries of
+    ``emit[b]`` [B, k+1] are real; the rest contribute zero. The ordinal
+    advances by ``n_emit`` so the next step's draws continue the exact
+    same counter stream a token-at-a-time loop would use."""
+    b, ke = emit.shape
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, ke))
+    live = (jnp.arange(ke)[None, :] < n_emit[:, None]).astype(jnp.int32)
+    counts = state["counts"].at[rows, emit].add(live)
+    return dict(state, counts=counts, step=state["step"] + n_emit)
+
+
+def accept_speculative(draft_tok: jax.Array, p_probs: jax.Array,
+                       q_probs: jax.Array, seed: jax.Array,
+                       step: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Rejection-sampling acceptance for one speculative step.
+
+    draft_tok [B, k] i32 — tokens drawn from the draft distributions;
+    p_probs [B, k+1, V] — full-model (verify) distributions at each of
+    the k draft positions plus the bonus position; q_probs [B, k, V] —
+    draft distributions; seed/step [B] — each row's RNG key and the
+    emitted-token ordinal at the start of this speculative step.
+
+    Returns ``(emit [B, k+1] i32, n_emit [B] i32 in 1..k+1)``: per row
+    the accepted draft prefix followed by the resampled (or bonus)
+    token; entries past ``n_emit`` are garbage the caller must mask.
+
+    Acceptance uniforms draw from the SALT_ACCEPT stream keyed at the
+    position's would-be ordinal ``step + i``; the residual resample
+    draws SALT_RESAMPLE gumbel at ``step + n_acc`` — both independent of
+    the SALT_TOKEN stream the draft consumed, and both functions of
+    (seed, ordinal) only, so acceptance is reproducible across batch
+    slots, chunk sizes, and TP layouts.
+    """
+    b, k = draft_tok.shape
+    v = p_probs.shape[-1]
+    pos = step[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    u = uniform_noise(seed[:, None], pos, jnp.zeros_like(pos), SALT_ACCEPT)
+    p_d = jnp.take_along_axis(p_probs[:, :k], draft_tok[..., None],
+                              axis=-1)[..., 0]              # [B, k]
+    q_d = jnp.take_along_axis(q_probs, draft_tok[..., None],
+                              axis=-1)[..., 0]
+    acc = u < p_d / jnp.maximum(q_d, _Q_TINY)
+    # leading run of accepts: position i survives iff 0..i all accepted
+    run = jnp.cumprod(acc.astype(jnp.int32), axis=-1)
+    n_acc = jnp.sum(run, axis=-1).astype(jnp.int32)          # [B] 0..k
+    # residual at the first non-accepted position; q extended with a
+    # zero row makes the all-accepted bonus draw the same gather
+    q_ext = jnp.concatenate(
+        [q_probs, jnp.zeros((b, 1, v), q_probs.dtype)], axis=1)
+    resid = jnp.maximum(p_probs - q_ext, 0.0)                # [B, k+1, V]
+    r = jnp.take_along_axis(resid, n_acc[:, None, None], axis=1)[:, 0]
+    # gumbel-argmax over log r samples r/sum(r) without normalizing; a
+    # temperature-0 row's r is one-hot, so NEG_INF on the zero lanes
+    # dominates the (bounded) gumbel and the draw is the deterministic
+    # argmax — bit-identical to greedy.
+    logr = jnp.where(r > 0, jnp.log(jnp.maximum(r, _Q_TINY)),
+                     jnp.float32(NEG_INF))
+    col = jnp.arange(v, dtype=jnp.int32)[None, :]
+    g = gumbel_noise(seed[:, None], (step + n_acc)[:, None], col,
+                     SALT_RESAMPLE)
+    res_tok = jnp.argmax(logr + g, axis=-1).astype(jnp.int32)
+    emit = jnp.concatenate(
+        [draft_tok, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    emit = emit.at[jnp.arange(b), n_acc].set(res_tok)
+    return emit, n_acc + 1
+
+
+def speculative_accept_state(draft_tok: jax.Array, draft_logits: jax.Array,
+                             verify_logits: jax.Array,
+                             state: Dict[str, jax.Array]
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Convenience wrapper: build p/q from raw logits under the state's
+    penalty/temperature knobs (counts snapshotted across all positions —
+    module doc) and run the acceptance rule.
+
+    draft_logits [B, k, V]; verify_logits [B, k+1, V].
+    """
+    s = state
+    b = draft_tok.shape[0]
+
+    def bc(x):
+        return x.reshape(b, 1, 1)
+
+    counts = s["counts"][:, None]                            # [B, 1, V]
+    p = probs_from_logits(verify_logits, counts, bc(s["temp"]),
+                          bc(s["rep"]), bc(s["pres"]), bc(s["freq"]))
+    q = probs_from_logits(draft_logits, counts, bc(s["temp"]),
+                          bc(s["rep"]), bc(s["pres"]), bc(s["freq"]))
+    return accept_speculative(draft_tok, p, q, s["seed"], s["step"])

@@ -1,0 +1,138 @@
+"""Per-request sampling parameters + the device-resident sampling state
+(DESIGN.md §15).
+
+`SamplingParams` is the host-side request knob set (what `launch.serve`
+parses and the engine's admission queue carries). The device twin is a
+plain dict of ``[B]``-vectors — `sampling_state` — that rides through
+`_serve_loop`'s jitted chunk functions next to the KV cache:
+
+  * ``temp/top_p/rep/pres/freq`` f32 and ``top_k/seed/step`` i32 vectors,
+    one lane per batch slot;
+  * ``counts [B, V]`` i32 — the on-device output-token history the
+    penalty contract reads. It is updated inside the decode chunk (a
+    scatter-add per emitted token), so penalties never add a host sync
+    to the one-sync-per-chunk loop;
+  * ``step`` is each row's emitted-token ordinal — the RNG counter. The
+    prefill-sampled token draws at step 0; every later draw at the count
+    of tokens emitted before it. Keying noise by ordinal (not by decode
+    iteration) is what makes streams reproducible across chunk sizes and
+    what lets speculative decode (which emits a variable number of
+    tokens per step) advance the counter by ``n_emit``.
+
+State updates are unconditional on purpose: a finished row keeps
+accumulating garbage into its own lanes, but admission reinstalls the
+slot (`state_install`) which zeroes them — same lifecycle as the KV
+cache rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "sampling_state", "state_from_params",
+           "state_install", "pack_params", "fresh_state", "any_uses_tt"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """One request's sampling knobs (TensorRT-LLM-compatible defaults:
+    every field at its default is an exact identity, so the default
+    request is bit-identical to greedy decoding)."""
+    temperature: float = 0.0
+    top_k: int = 0                    # <= 0: off
+    top_p: float = 1.0                # >= 1: off
+    repetition_penalty: float = 1.0
+    presence_penalty: float = 0.0
+    frequency_penalty: float = 0.0
+    seed: int = 0
+
+    @property
+    def uses_tt(self) -> bool:
+        """Whether this request needs top-k/top-p masking — a *static*
+        routing fact: any such request pins the head to the XLA sampler
+        route (the masks are global order statistics)."""
+        return self.top_k > 0 or self.top_p < 1.0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sampling_state(max_batch: int, vocab: int) -> Dict[str, jax.Array]:
+    """Fresh all-defaults device state for ``max_batch`` slots."""
+    b = max_batch
+    return {
+        "temp": jnp.zeros((b,), jnp.float32),
+        "top_k": jnp.zeros((b,), jnp.int32),
+        "top_p": jnp.ones((b,), jnp.float32),
+        "rep": jnp.ones((b,), jnp.float32),
+        "pres": jnp.zeros((b,), jnp.float32),
+        "freq": jnp.zeros((b,), jnp.float32),
+        "seed": jnp.zeros((b,), jnp.int32),
+        "step": jnp.zeros((b,), jnp.int32),
+        "counts": jnp.zeros((b, vocab), jnp.int32),
+    }
+
+
+def pack_params(p: SamplingParams) -> Tuple[jax.Array, jax.Array]:
+    """Host → device marshalling for one request: a [5] f32 + [2] i32
+    pair, so the jitted installer never retraces on knob values."""
+    f = jnp.asarray([p.temperature, p.top_p, p.repetition_penalty,
+                     p.presence_penalty, p.frequency_penalty], jnp.float32)
+    # seeds are arbitrary 32-bit patterns; wrap into int32 range
+    i = jnp.asarray([p.top_k, (p.seed & 0xFFFFFFFF) - (1 << 32)
+                     if (p.seed & 0xFFFFFFFF) >= (1 << 31)
+                     else (p.seed & 0xFFFFFFFF)], jnp.int32)
+    return f, i
+
+
+def state_install(state: Dict[str, jax.Array], slot, fvals: jax.Array,
+                  ivals: jax.Array) -> Dict[str, jax.Array]:
+    """Install one request into a batch slot: set its knob lanes, zero
+    its history row, reset its RNG counter. jit-safe (traced ``slot``)."""
+    return {
+        "temp": state["temp"].at[slot].set(fvals[0]),
+        "top_p": state["top_p"].at[slot].set(fvals[1]),
+        "rep": state["rep"].at[slot].set(fvals[2]),
+        "pres": state["pres"].at[slot].set(fvals[3]),
+        "freq": state["freq"].at[slot].set(fvals[4]),
+        "top_k": state["top_k"].at[slot].set(ivals[0]),
+        "seed": state["seed"].at[slot].set(ivals[1]),
+        "step": state["step"].at[slot].set(0),
+        "counts": state["counts"].at[slot].set(0),
+    }
+
+
+def fresh_state(fvals: jax.Array, ivals: jax.Array, vocab: int
+                ) -> Dict[str, jax.Array]:
+    """Zero-history state for a batch of brand-new requests, straight from
+    the packed knob arrays (``fvals`` [G, 5] f32, ``ivals`` [G, 2] i32 —
+    rows of `pack_params`). This is what the sampled *prefill* steps use:
+    a fresh request has an empty output history, so counts are zeros (all
+    penalties reduce to identities) and the RNG ordinal is 0."""
+    g = fvals.shape[0]
+    return {
+        "temp": fvals[:, 0], "top_p": fvals[:, 1], "rep": fvals[:, 2],
+        "pres": fvals[:, 3], "freq": fvals[:, 4],
+        "top_k": ivals[:, 0], "seed": ivals[:, 1],
+        "step": jnp.zeros((g,), jnp.int32),
+        "counts": jnp.zeros((g, vocab), jnp.int32),
+    }
+
+
+def state_from_params(params: Sequence[SamplingParams], max_batch: int,
+                      vocab: int) -> Dict[str, jax.Array]:
+    """Whole-batch state for the static `generate` path (row i gets
+    ``params[i]``; spare slots keep defaults)."""
+    state = sampling_state(max_batch, vocab)
+    for i, p in enumerate(params):
+        f, iv = pack_params(p)
+        state = state_install(state, i, f, iv)
+    return state
+
+
+def any_uses_tt(params: Sequence[SamplingParams]) -> bool:
+    return any(p.uses_tt for p in params)

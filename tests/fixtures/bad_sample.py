@@ -1,0 +1,41 @@
+"""Known-bad fixture for the races pass, fused-sampling-head flavor:
+the running-argmax (score, index) outputs are revisited over *both*
+grid dims, but the kernel declared the N dim ``"parallel"`` — legal
+for a plain skinny GEMM (whose output row varies with N) but a
+read-modify-write race for the argmax carry. Expected code: ``race``.
+
+Everything else is disciplined on purpose: the accumulation is fully
+declared (``acc_dims=(0, 1)``), init/store are guarded, the index maps
+are in-bounds, and the instance fits its budgets — so the vmem and
+bounds passes stay quiet and the only defect is the N-dim semantics.
+"""
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET
+
+_row = lambda name: BlockDecl(name, (8, 1), lambda j, kk: (0, 0), (8, 1), 4)
+
+racy_argmax = KernelContract(
+    name="bad_sample_parallel_n", route="fixture", domain="head_sample",
+    grid=(4, 4),
+    # dim 0 is the N loop the argmax carry is revisited over — it must
+    # be "arbitrary", but this kernel declared it "parallel"
+    dimension_semantics=("parallel", "arbitrary"),
+    inputs=(
+        BlockDecl("x", (8, 512), lambda j, kk: (0, 0), (8, 512), 4,
+                  resident=True),
+        BlockDecl("w", (128, 128), lambda j, kk: (kk, j), (512, 512), 4),
+        BlockDecl("counts", (8, 128), lambda j, kk: (0, j), (8, 512), 4),
+        _row("temp"), _row("rep"), _row("pres"), _row("freq"),
+        _row("seed"), _row("step"), _row("base"),
+    ),
+    outputs=(
+        BlockDecl("best_score", (8, 1), lambda j, kk: (0, 0), (8, 1), 4),
+        BlockDecl("best_idx", (8, 1), lambda j, kk: (0, 0), (8, 1), 4),
+    ),
+    scratch=(ScratchDecl("acc", (8, 128), 4),),
+    acc_dims=(0, 1),
+    guarded_init=True, guarded_store=True,
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    admitted=True)
+
+CONTRACTS = [racy_argmax]

@@ -125,6 +125,7 @@ class TestRepoClean:
 _FIXTURE_EXPECT = [
     ("bad_vmem.py", "vmem", {"vmem-overflow", "dead-headroom"}),
     ("bad_race.py", "races", {"race", "unguarded-accumulation"}),
+    ("bad_sample.py", "races", {"race"}),
     ("bad_bounds.py", "bounds", {"oob", "overlapping-write"}),
     ("bad_materialize.py", "materialize", {"materialized"}),
     ("bad_dispatch.py", "dispatch",

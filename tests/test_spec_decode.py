@@ -1,0 +1,312 @@
+"""Self-speculative decode (DESIGN.md §15) property suite.
+
+  * the rejection-sampling acceptance rule against a per-row python
+    reference (same counter-RNG draws, loop-wise accept/resample);
+  * temperature-0 speculation is bit-identical to plain greedy decode
+    through the full engine, on both KV backends and under TP;
+  * sampled speculative streams are seed-reproducible across chunk
+    sizes, and the paged KV backend's rollback of rejected tokens'
+    cache writes is bit-equal to the contiguous backend;
+  * host-side gating: top-k/top-p requests disable speculation with a
+    warning and serve the plain sampled path.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    hypothesis.settings.register_profile(
+        "fast", max_examples=10, deadline=None)
+    hypothesis.settings.load_profile("fast")
+except ModuleNotFoundError:      # bare container: deterministic fallback
+    from _hyp_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.kernels.sample import (NEG_INF, SALT_ACCEPT, SALT_RESAMPLE,
+                                  gumbel_noise, probs_from_logits,
+                                  uniform_noise)
+from repro.models import registry
+from repro.serve.engine import ServeEngine
+from repro.serve.sampling import SamplingParams, speculative_accept_state
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule vs a loop-wise reference rejection sampler
+# ---------------------------------------------------------------------------
+
+def _state(b, v, temp=0.0, seed0=0, step0=0):
+    return {"temp": jnp.full((b,), temp, jnp.float32),
+            "top_k": jnp.zeros((b,), jnp.int32),
+            "top_p": jnp.ones((b,), jnp.float32),
+            "rep": jnp.ones((b,), jnp.float32),
+            "pres": jnp.zeros((b,), jnp.float32),
+            "freq": jnp.zeros((b,), jnp.float32),
+            "seed": jnp.arange(b, dtype=jnp.int32) + seed0,
+            "step": jnp.full((b,), step0, jnp.int32),
+            "counts": jnp.zeros((b, v), jnp.int32)}
+
+
+def _reference_accept(draft_tok, p, q, seed, step):
+    """Leviathan-et-al. rejection sampling, one row and one position at a
+    time, drawing the SAME counter-RNG streams the vectorized rule uses:
+    accept d_i iff u_i < p_i[d_i]/q_i[d_i]; first rejection resamples
+    from norm(max(p - q, 0)) via gumbel-argmax over log residual; a
+    fully-accepted draft draws the bonus from p_k (residual with q := 0).
+    """
+    b, k = draft_tok.shape
+    v = p.shape[-1]
+    emit = np.zeros((b, k + 1), np.int64)
+    n_emit = np.zeros((b,), np.int64)
+    cols = jnp.arange(v, dtype=jnp.int32)
+    for r in range(b):
+        n_acc = 0
+        for i in range(k):
+            u = float(uniform_noise(jnp.int32(seed[r]),
+                                    jnp.int32(step[r] + i),
+                                    jnp.int32(0), SALT_ACCEPT))
+            d = int(draft_tok[r, i])
+            if u < p[r, i, d] / max(q[r, i, d], 1e-30):
+                emit[r, i] = d
+                n_acc += 1
+            else:
+                break
+        q_row = q[r, n_acc] if n_acc < k else np.zeros((v,), p.dtype)
+        resid = np.maximum(p[r, n_acc] - q_row, 0.0)
+        logr = np.where(resid > 0, np.log(np.maximum(resid, 1e-30)),
+                        np.float32(NEG_INF))
+        g = np.asarray(gumbel_noise(jnp.int32(seed[r]),
+                                    jnp.int32(step[r] + n_acc),
+                                    cols, SALT_RESAMPLE))
+        emit[r, n_acc] = int(np.argmax(logr + g))
+        n_emit[r] = n_acc + 1
+    return emit, n_emit
+
+
+class TestAcceptanceRule:
+    def _logits(self, seed, b, k, v):
+        kk = jax.random.PRNGKey(seed)
+        dl = jax.random.normal(kk, (b, k, v), jnp.float32) * 2.0
+        vl = jax.random.normal(jax.random.fold_in(kk, 1),
+                               (b, k + 1, v), jnp.float32) * 2.0
+        return dl, vl
+
+    def test_temp0_identical_models_accept_everything(self):
+        b, k, v = 3, 4, 32
+        dl, vl = self._logits(0, 0, k, v)[0], None
+        dl = jax.random.normal(jax.random.PRNGKey(0), (b, k, v))
+        vl = jnp.concatenate(
+            [dl, jax.random.normal(jax.random.PRNGKey(1), (b, 1, v))],
+            axis=1)
+        draft = jnp.argmax(dl, -1).astype(jnp.int32)
+        emit, n = speculative_accept_state(draft, dl, vl, _state(b, v))
+        emit, n = np.asarray(emit), np.asarray(n)
+        assert (n == k + 1).all()
+        assert (emit[:, :k] == np.asarray(draft)).all()
+        assert (emit[:, k] == np.asarray(jnp.argmax(vl[:, k], -1))).all()
+
+    @given(st.integers(0, 3))
+    def test_temp0_first_divergence_truncates(self, j):
+        """Force the verify argmax to differ from the draft at position
+        j: exactly j drafts are accepted and the emitted token at j is
+        the full model's greedy choice."""
+        b, k, v = 2, 4, 32
+        dl, _ = self._logits(7 + j, b, k, v)
+        draft = jnp.argmax(dl, -1).astype(jnp.int32)
+        other = (np.asarray(draft[:, j]) + 1) % v
+        vln = np.array(jnp.concatenate([dl, dl[:, :1]], axis=1))
+        vln[np.arange(b), j, other] = 50.0     # new verify argmax at j
+        emit, n = speculative_accept_state(
+            draft, dl, jnp.asarray(vln), _state(b, v))
+        emit, n = np.asarray(emit), np.asarray(n)
+        assert (n == j + 1).all()
+        assert (emit[:, :j] == np.asarray(draft)[:, :j]).all()
+        assert (emit[np.arange(b), j] == other).all()
+
+    @given(st.integers(0, 12))
+    def test_matches_reference_rejection_sampler(self, seed):
+        b, k, v = 4, 3, 24
+        temp = 0.8
+        dl, vl = self._logits(seed + 20, b, k, v)
+        s = _state(b, v, temp=temp, seed0=seed * 13, step0=seed % 5)
+        # drafts need not come from q for the rule itself to be
+        # well-defined — any token ids exercise accept/reject paths
+        draft = jax.random.randint(jax.random.PRNGKey(seed), (b, k), 0, v)
+        draft = draft.astype(jnp.int32)
+        emit, n = speculative_accept_state(draft, dl, vl, s)
+        emit, n = np.asarray(emit), np.asarray(n)
+
+        bc = lambda x: x.reshape(b, 1, 1)
+        counts = s["counts"][:, None]
+        p = np.asarray(probs_from_logits(
+            vl, counts, bc(s["temp"]), bc(s["rep"]), bc(s["pres"]),
+            bc(s["freq"])))
+        q = np.asarray(probs_from_logits(
+            dl, counts, bc(s["temp"]), bc(s["rep"]), bc(s["pres"]),
+            bc(s["freq"])))
+        ref_emit, ref_n = _reference_accept(
+            np.asarray(draft), p, q, np.asarray(s["seed"]),
+            np.asarray(s["step"]))
+        assert (n == ref_n).all()
+        for r in range(b):
+            assert (emit[r, :n[r]] == ref_emit[r, :n[r]]).all()
+
+    def test_n_emit_bounds(self):
+        b, k, v = 4, 3, 24
+        dl, vl = self._logits(99, b, k, v)
+        draft = jnp.argmax(dl, -1).astype(jnp.int32)
+        _, n = speculative_accept_state(draft, dl, vl,
+                                        _state(b, v, temp=1.2))
+        n = np.asarray(n)
+        assert ((n >= 1) & (n <= k + 1)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine-level: spec streams vs plain streams
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("olmo-1b", smoke=True).replace(remat="none")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return registry.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(9)
+    return [list(rng.integers(2, 500, size=n)) for n in (5, 3, 6, 4)]
+
+
+class TestSpecEngine:
+    def test_spec_temp0_bit_identical_to_greedy(self, cfg, params,
+                                                prompts):
+        eng = ServeEngine(cfg, params, max_batch=4, fetch_chunk=4)
+        greedy = eng.generate(prompts, max_new_tokens=8)
+        spec = eng.generate(
+            prompts, max_new_tokens=8,
+            sampling=[SamplingParams() for _ in prompts], draft_k=2)
+        assert spec == greedy
+
+    def test_spec_stream_reproducible_across_chunks(self, cfg, params,
+                                                    prompts):
+        sp = [SamplingParams(temperature=0.8, seed=23 + i)
+              for i in range(len(prompts))]
+        outs = []
+        for chunk in (4, 3):
+            eng = ServeEngine(cfg, params, max_batch=4, fetch_chunk=chunk)
+            outs.append(eng.generate(prompts, max_new_tokens=8,
+                                     sampling=sp, draft_k=2))
+        assert outs[0] == outs[1]
+
+    def test_paged_backend_bit_equal_contiguous(self, cfg, params):
+        """Paged serve (with rejected-token rollback) must emit the same
+        speculative streams as the contiguous cache."""
+        rng = np.random.default_rng(11)
+        prompts = [list(rng.integers(2, 500, size=4)) for _ in range(5)]
+        sp = [SamplingParams(temperature=0.7, seed=31 + i)
+              for i in range(5)]
+        pcfg = cfg.replace(gemm_impl="pallas", attn_impl="flash")
+        cont = ServeEngine(pcfg, params, max_batch=2, fetch_chunk=4)
+        paged = ServeEngine(pcfg.replace(kv_page_size=8), params,
+                            max_batch=2, fetch_chunk=4)
+        a = cont.serve(prompts, 8, sampling=sp, draft_k=2)
+        b = paged.serve(prompts, 8, sampling=sp, draft_k=2)
+        assert a == b
+        assert cont.serve_stats["spec_steps"] > 0
+
+    def test_serve_acceptance_stats_recorded(self, cfg, params, prompts):
+        eng = ServeEngine(cfg, params, max_batch=2, fetch_chunk=4)
+        eng.serve(prompts, 8,
+                  sampling=[SamplingParams(temperature=0.6, seed=i)
+                            for i in range(len(prompts))], draft_k=2)
+        st_ = eng.serve_stats
+        assert st_["spec_steps"] > 0
+        # 1..k+1 tokens per speculative step, by construction
+        assert st_["spec_steps"] <= st_["spec_emitted"] \
+            <= 3 * st_["spec_steps"]
+
+    def test_top_k_request_gates_speculation_with_warning(self, cfg,
+                                                          params,
+                                                          prompts):
+        eng = ServeEngine(cfg, params, max_batch=4, fetch_chunk=4)
+        sp = [SamplingParams(temperature=0.8, top_k=4, seed=i)
+              for i in range(len(prompts))]
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            spec = eng.generate(prompts, max_new_tokens=8, sampling=sp,
+                                draft_k=2)
+        assert any("speculative decode disabled" in str(x.message)
+                   for x in w)
+        plain = eng.generate(prompts, max_new_tokens=8, sampling=sp)
+        assert spec == plain
+
+
+# ---------------------------------------------------------------------------
+# TP parity (subprocess-spawned virtual mesh)
+# ---------------------------------------------------------------------------
+
+def _run(body: str, devices: int = 2, timeout: int = 900) -> dict:
+    prog = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+import sys, json
+sys.path.insert(0, {_SRC!r})
+import jax, jax.numpy as jnp
+import numpy as np
+{body}
+print("JSON::" + json.dumps(out))
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    for line in r.stdout.splitlines():
+        if line.startswith("JSON::"):
+            return json.loads(line[len("JSON::"):])
+    raise AssertionError(f"no JSON in output: {r.stdout[-2000:]}")
+
+
+def test_tp_spec_temp0_matches_greedy():
+    out = _run("""
+from repro.configs import get_config
+from repro.dist.mesh_ctx import use_mesh
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import registry
+from repro.serve.engine import ServeEngine
+from repro.serve.sampling import SamplingParams
+
+cfg = get_config("olmo-1b", smoke=True).replace(remat="none")
+params = registry.init_params(jax.random.PRNGKey(0), cfg)
+prompts = [[5, 6, 7, 8], [9, 10, 11], [12, 13, 14, 15, 16]]
+mesh = make_smoke_mesh(data=1, model=2)
+with use_mesh(mesh):
+    eng = ServeEngine(cfg, params, max_batch=4, fetch_chunk=4)
+    tp_greedy = eng.generate(prompts, max_new_tokens=8)
+    tp_spec = eng.generate(prompts, max_new_tokens=8,
+                           sampling=[SamplingParams() for _ in prompts],
+                           draft_k=2)
+single = ServeEngine(cfg, params, max_batch=4, fetch_chunk=4)
+ref = single.generate(prompts, max_new_tokens=8)
+out = {"spec_eq_greedy": tp_spec == tp_greedy,
+       "tp_eq_single": tp_greedy == ref}
+""")
+    assert out["spec_eq_greedy"], \
+        "TP speculative temp-0 diverged from TP greedy"
+    assert out["tp_eq_single"], "TP greedy diverged from single-device"
