@@ -1,0 +1,258 @@
+"""INT4 groupwise weight streaming A/B — the decode bandwidth floor.
+
+Decode is weight-bandwidth-bound: every generated token re-reads the
+whole packed weight tree from HBM, so tokens/sec scales inversely with
+weight bytes per token. The w4 format (DESIGN.md §16) halves the DBB
+value plane — two INT4 slots per byte plus a per-group ``[K//G, N]``
+f32 scale plane — and the w4 kernel routes stream the nibble plane
+directly, expanding to int8 only inside VMEM.
+
+Four sections:
+
+  footprint — exact format math (``dbb_footprint_bytes``): HBM bytes
+      per decode token for INT8-DBB vs INT4-DBB across model shapes.
+  roofline  — the dispatch registry's modeled decode step time for the
+      chosen packed route at bits=8 vs bits=4 on bandwidth-bound decode
+      shapes. **Asserts** the modeled tokens/sec gain is >= 1.3x — the
+      acceptance floor; the format guarantees ~1.5x at B=8/nnz=4/G=128
+      so a miss means the cost model or the byte math regressed.
+  measured  — small-shape interpret-mode wall clock for the int8 vs w4
+      packed GEMM (correctness-grade only on CPU: the interpreter is
+      compute-bound, so this is informational, never asserted).
+  accuracy  — table1-style DBB CNN training, then fake-quant eval:
+      INT8 per-channel vs INT4 groupwise on identical weights/data.
+      **Asserts** INT4 costs <= 1% accuracy vs the INT8-DBB baseline.
+
+Run:  PYTHONPATH=src python -m benchmarks.quant_stream [--fast]
+"""
+from __future__ import annotations
+
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# decode-shaped (M = small batch) bandwidth-bound GEMMs: MLP up/down
+# projections at 1-2B-param model dims, and the big head GEMV
+ROOFLINE_SHAPES = [
+    (8, 2048, 8192),
+    (8, 8192, 2048),
+    (1, 2048, 32768),
+]
+FOOTPRINT_SHAPES = [(2048, 8192), (8192, 2048), (2048, 32768)]
+MEASURED_SHAPES = [(8, 512, 512)]
+FAST_MEASURED = [(8, 256, 256)]
+
+SPEEDUP_FLOOR = 1.3         # acceptance floor (ISSUE 10 / DESIGN.md §16)
+ACC_FLOOR = 0.01            # <= 1% accuracy cost vs INT8-DBB
+
+
+def _footprint_rows(block: int = 8, nnz: int = 4, group: int = 128):
+    from repro.core.dbb import dbb_footprint_bytes, dense_footprint_bytes
+    rows = []
+    for k, n in FOOTPRINT_SHAPES:
+        dense = dense_footprint_bytes(k, n, itemsize=1)
+        b8 = dbb_footprint_bytes(k, n, block, nnz, itemsize=1)
+        b4 = dbb_footprint_bytes(k, n, block, nnz, itemsize=1,
+                                 bits=4, group=group)
+        rows.append({"k": k, "n": n, "dense_int8_bytes": dense,
+                     "dbb_int8_bytes": b8, "dbb_int4_bytes": b4,
+                     "int4_vs_int8": round(b8 / b4, 4),
+                     "int4_vs_dense": round(dense / b4, 4)})
+    return rows
+
+
+def _roofline_rows(group: int = 128):
+    from repro.kernels import dispatch
+    rows = []
+    for m, k, n in ROOFLINE_SHAPES:
+        def chosen(**kw):
+            ds = dispatch.explain("matmul", m=m, k=k, n=n,
+                                  dtype="float32", packed=True,
+                                  pallas=True, **kw)
+            return next(d for d in ds if d.chosen)
+        d8 = chosen()
+        d4 = chosen(bits=4, group=group)
+        rows.append({
+            "shape": (m, k, n),
+            "int8_route": d8.name, "int4_route": d4.name,
+            "int8_weight_bytes": d8.weight_bytes,
+            "int4_weight_bytes": d4.weight_bytes,
+            "int8_tok_per_s": m / d8.cost_s,
+            "int4_tok_per_s": m / d4.cost_s,
+            "speedup": d8.cost_s / d4.cost_s,
+        })
+    return rows
+
+
+def _best_of(fn, n: int = 3) -> float:
+    jax.block_until_ready(fn())            # compile + warmup
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measured_rows(fast: bool, block: int = 8, nnz: int = 4):
+    from repro.core.dbb import DbbWeight, pack_dbb
+    from repro.core.quant import quantize_weight
+    from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
+    rows = []
+    for m, k, n in (FAST_MEASURED if fast else MEASURED_SHAPES):
+        group = min(k, 128)
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n),
+                              jnp.float32)
+        qw = quantize_weight(w)
+        p8f = pack_dbb(qw.q.astype(jnp.float32), block, nnz)
+        p8 = DbbWeight(values=p8f.values.astype(jnp.int8), indices=None,
+                      bitmask=p8f.bitmask, scale=qw.scale, block=block,
+                      nnz=nnz, k_dim=k)
+        p4 = pack_dbb(w, block, nnz, bits=4, group=group)
+        f8 = jax.jit(lambda: dbb_gemm_packed(x, p8))
+        f4 = jax.jit(lambda: dbb_gemm_packed(x, p4))
+        # parity: both are fake-quantized views of the same w, so they
+        # agree to quantization error, not bit-exactly
+        y8, y4 = np.asarray(f8()), np.asarray(f4())
+        scale = float(np.abs(y8).mean()) or 1.0
+        rows.append({"shape": (m, k, n),
+                     "int8_s": _best_of(f8), "int4_s": _best_of(f4),
+                     "mean_rel_gap": float(np.abs(y8 - y4).mean()) / scale,
+                     "note": "interpret-mode wall clock (informational)"})
+    return rows
+
+
+def _fake_quant_tree(params, dbb_cfg, bits: int, group: int):
+    """Replace every DBB-eligible leaf with its fake-quantized (pack ->
+    unpack) self: INT8 per-out-channel or INT4 groupwise, both through
+    the same DBB top-nnz projection the packed formats store."""
+    from repro.core.dbb import pack_dbb, unpack_dbb
+    from repro.core.quant import quantize_weight
+    from repro.core.sparsity import _path_str, dbb_eligible
+
+    def visit(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        if not dbb_eligible(_path_str(path), dbb_cfg):
+            return leaf
+        kd = leaf.shape[-2]
+        if kd % dbb_cfg.block != 0:
+            return leaf
+        g = group if (group > 0 and group % dbb_cfg.block == 0
+                      and kd % group == 0) else dbb_cfg.block
+
+        def fq(w2):
+            if bits == 4:
+                p = pack_dbb(w2.astype(jnp.float32), dbb_cfg.block,
+                             dbb_cfg.nnz, bits=4, group=g)
+                return unpack_dbb(p).astype(leaf.dtype)
+            qw = quantize_weight(w2.astype(jnp.float32))
+            p = pack_dbb(qw.q.astype(jnp.float32), dbb_cfg.block,
+                         dbb_cfg.nnz)
+            return (unpack_dbb(p) * qw.scale[None, :]).astype(leaf.dtype)
+
+        fn = fq
+        for _ in range(leaf.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(leaf)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _accuracy_rows(steps: int):
+    from benchmarks.table1_dbb_accuracy import _accuracy
+    from repro.config import DbbConfig, RunConfig, ShapeSpec, TrainConfig
+    from repro.configs import get_config
+    from repro.launch.train import train_loop
+
+    arch, nnz = "lenet5-dbb", 4
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(dbb=DbbConfig(enabled=True, block=8, nnz=nnz,
+                                    apply_to=("conv",)))
+    rc = RunConfig(model=cfg, train=TrainConfig(
+        steps=steps, learning_rate=3e-3, log_every=10 ** 9, seed=0,
+        dbb_prune_start=steps // 3, dbb_prune_ramp=steps // 3))
+    state, _ = train_loop(rc, ShapeSpec("t", 16, 32, "train"),
+                          log=lambda *_: None)
+
+    def acc_of(params):
+        return _accuracy(rc, types.SimpleNamespace(params=params))
+
+    acc_f = acc_of(state.params)
+    acc_8 = acc_of(_fake_quant_tree(state.params, cfg.dbb, 8, 0))
+    acc_4 = acc_of(_fake_quant_tree(state.params, cfg.dbb, 4, 128))
+    return {"model": arch, "nnz": nnz, "steps": steps,
+            "float_dbb_acc": round(acc_f, 4),
+            "int8_dbb_acc": round(acc_8, 4),
+            "int4_dbb_acc": round(acc_4, 4),
+            "int4_vs_int8_delta": round(acc_8 - acc_4, 4)}
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    fp = _footprint_rows()
+    rf = _roofline_rows()
+    ms = _measured_rows(fast)
+    acc = _accuracy_rows(steps=30 if fast else 60)
+
+    if not quiet:
+        print(f"{'K,N':>14s} {'dense':>10s} {'int8-dbb':>10s} "
+              f"{'int4-dbb':>10s} {'vs int8':>8s}")
+        for r in fp:
+            print(f"{r['k']:>6d},{r['n']:>7d} "
+                  f"{r['dense_int8_bytes'] / 2**20:8.2f}MB "
+                  f"{r['dbb_int8_bytes'] / 2**20:8.2f}MB "
+                  f"{r['dbb_int4_bytes'] / 2**20:8.2f}MB "
+                  f"{r['int4_vs_int8']:7.2f}x")
+        print(f"\n{'M,K,N':>18s} {'int8 route':>14s} {'int4 route':>14s} "
+              f"{'tok/s int8':>11s} {'tok/s int4':>11s} {'speedup':>8s}")
+        for r in rf:
+            m, k, n = r["shape"]
+            print(f"{m:>5d},{k:>5d},{n:>6d} {r['int8_route']:>14s} "
+                  f"{r['int4_route']:>14s} {r['int8_tok_per_s']:>11.0f} "
+                  f"{r['int4_tok_per_s']:>11.0f} {r['speedup']:7.2f}x")
+        for r in ms:
+            m, k, n = r["shape"]
+            print(f"measured {m},{k},{n}: int8 {r['int8_s']*1e3:.1f}ms "
+                  f"int4 {r['int4_s']*1e3:.1f}ms "
+                  f"(rel gap {r['mean_rel_gap']:.3f}; {r['note']})")
+        print(f"accuracy ({acc['model']}, nnz={acc['nnz']}): "
+              f"float-dbb {acc['float_dbb_acc']:.3f} "
+              f"int8-dbb {acc['int8_dbb_acc']:.3f} "
+              f"int4-dbb {acc['int4_dbb_acc']:.3f} "
+              f"(delta {acc['int4_vs_int8_delta']:+.3f})")
+
+    worst = min(r["speedup"] for r in rf)
+    assert worst >= SPEEDUP_FLOOR, (
+        f"modeled w4 decode speedup {worst:.2f}x under the "
+        f"{SPEEDUP_FLOOR}x floor — weight-byte math or the dispatch "
+        f"cost model regressed")
+    assert acc["int4_vs_int8_delta"] <= ACC_FLOOR + 1e-9, (
+        f"INT4 groupwise costs {acc['int4_vs_int8_delta']*100:.2f}% "
+        f"accuracy vs INT8-DBB (floor: {ACC_FLOOR*100:.0f}%)")
+    if not quiet:
+        print(f"modeled decode speedup >= {SPEEDUP_FLOOR}x on all "
+              f"bandwidth-bound shapes (worst {worst:.2f}x); INT4 "
+              f"accuracy within {ACC_FLOOR*100:.0f}% of INT8-DBB")
+    return {"footprint": fp, "roofline": rf, "measured": ms,
+            "accuracy": acc, "modeled_speedup_floor": SPEEDUP_FLOOR,
+            "worst_modeled_speedup": round(worst, 4)}
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

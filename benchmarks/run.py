@@ -13,9 +13,11 @@ prefill/conv shape grid, DESIGN.md §11) to ``BENCH_dispatch.json``, and
 the packed-prefill section (pad-FLOP elimination + chunked-prefill TTFT,
 DESIGN.md §12) to ``BENCH_packed.json``, and the sampling/speculative
 section (tokens/step vs draft-k + the fused-epilogue A/B, DESIGN.md §15)
-to ``BENCH_sampling.json`` so the perf trajectory is machine-readable
+to ``BENCH_sampling.json``, and the INT4 weight-streaming section
+(footprint/roofline/accuracy A/B vs INT8-DBB, DESIGN.md §16) to
+``BENCH_quant.json`` so the perf trajectory is machine-readable
 run-over-run (CI runs ``--smoke``, which executes only those sections on
-reduced shapes and still emits all six files).
+reduced shapes and still emits all seven files).
 
 table1 (DBB accuracy) trains small CNNs and takes a few minutes on CPU;
 --fast trims step counts.
@@ -41,6 +43,8 @@ _DISPATCH_SECTIONS = ("dispatch_routes",)
 _PACKED_SECTIONS = ("packed_prefill",)
 # sections whose rows land in BENCH_sampling.json (sampling + spec, §15)
 _SAMPLING_SECTIONS = ("spec_decode",)
+# sections whose rows land in BENCH_quant.json (INT4 weight stream, §16)
+_QUANT_SECTIONS = ("quant_stream",)
 
 
 def main(argv=None) -> int:
@@ -59,7 +63,7 @@ def main(argv=None) -> int:
     from benchmarks import (attn_paged, conv_gemm, decode_serve,
                             dispatch_routes, fig4_layers, fig5_sweep,
                             fused_epilogue, packed_prefill,
-                            roofline_bench, spec_decode,
+                            quant_stream, roofline_bench, spec_decode,
                             table1_dbb_accuracy, table2_efficiency)
 
     sections = [
@@ -77,6 +81,8 @@ def main(argv=None) -> int:
          "packed_prefill", lambda: packed_prefill.run(fast=fast)),
         ("spec_decode (sampling head + self-speculative decode, §15)",
          "spec_decode", lambda: spec_decode.run(fast=fast)),
+        ("quant_stream (INT4 groupwise weight streaming, §16)",
+         "quant_stream", lambda: quant_stream.run(fast=fast)),
         ("table2_efficiency (paper Table II)",
          "table2_efficiency", lambda: table2_efficiency.run()),
         ("fig5_sweep (paper Fig. 5)", "fig5_sweep",
@@ -92,7 +98,8 @@ def main(argv=None) -> int:
         sections = [s for s in sections
                     if s[1] in (_PERF_SECTIONS + _DECODE_SECTIONS
                                 + _ATTN_SECTIONS + _DISPATCH_SECTIONS
-                                + _PACKED_SECTIONS + _SAMPLING_SECTIONS)]
+                                + _PACKED_SECTIONS + _SAMPLING_SECTIONS
+                                + _QUANT_SECTIONS)]
 
     failures, results = [], {}
     for name, key, fn in sections:
@@ -143,6 +150,12 @@ def main(argv=None) -> int:
         path = os.path.join(args.out, "BENCH_sampling.json")
         with open(path, "w") as f:
             json.dump(smp, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+    qnt = {k: results[k] for k in _QUANT_SECTIONS if k in results}
+    if qnt:
+        path = os.path.join(args.out, "BENCH_quant.json")
+        with open(path, "w") as f:
+            json.dump(qnt, f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
     if failures:

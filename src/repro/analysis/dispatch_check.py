@@ -51,6 +51,12 @@ def default_specs() -> Dict[str, List]:
                     mm.append(OpSpec(
                         domain="matmul", m=m, k=k, n=n, itemsize=4,
                         packed=packed, pallas=True))
+                    if packed and k % 128 == 0:
+                        # nibble-plane variant (DESIGN.md §16): reachable
+                        # only where the scale group divides K
+                        mm.append(OpSpec(
+                            domain="matmul", m=m, k=k, n=n, itemsize=4,
+                            packed=True, pallas=True, bits=4, group=128))
     # reachability extremes: XLA-only call sites and the decode GEMV
     mm.append(OpSpec(domain="matmul", m=8, k=256, n=256, pallas=False))
     mm.append(OpSpec(domain="matmul", m=8, k=256, n=32000, pallas=True,

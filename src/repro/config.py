@@ -25,11 +25,19 @@ class DbbConfig:
     enabled:   master switch; dense models run with enabled=False.
     apply_to:  which weight families get DBB'd. Attention score/value matmuls
                are activation×activation and are never DBB'd (weights only).
+    weight_bits: value-plane width for `pack_tree`. 8 = the paper's INT8/
+               float deployment; 4 nibble-packs the surviving values with
+               groupwise scales (DESIGN.md §16) on every leaf whose K
+               divides quant_group (others stay 8-bit packed).
+    quant_group: scale-group length G along dense K for weight_bits=4
+               (must be a multiple of block).
     """
     block: int = 8
     nnz: int = 4
     enabled: bool = False
     apply_to: Tuple[str, ...] = ("mlp", "attn_proj", "expert")
+    weight_bits: int = 8
+    quant_group: int = 128
 
     @property
     def density(self) -> float:
@@ -40,8 +48,13 @@ class DbbConfig:
         """Compressed bytes / dense bytes for INT8 weights (paper: 62.5%).
 
         Per block of B INT8 values: k value bytes + ceil(B/8) bitmask bytes.
+        weight_bits=4 halves the value term and adds 4 scale bytes per
+        G-group (37.5% + 4/G of dense at B=8/k=4 — DESIGN.md §16).
         """
         mask_bytes = (self.block + 7) // 8
+        if self.weight_bits == 4 and self.quant_group > 0:
+            return ((self.nnz * 0.5 + mask_bytes) / self.block
+                    + 4.0 / self.quant_group)
         return (self.nnz + mask_bytes) / self.block
 
 

@@ -21,6 +21,16 @@ Storage format (paper: "simple bitmask compression"; DESIGN.md §2):
 
 For B=8, k=4, INT8: (4 value bytes + 1 mask byte) / 8 bytes = 62.5% of dense
 ⇒ the paper's 37.5% weight-memory reduction.
+
+Sub-8-bit values plane (DESIGN.md §16): ``pack_dbb(..., bits=4, group=G)``
+stores the surviving values as nibble-packed INT4 — two slots per int8
+byte (packed row i holds compressed row 2i in the low nibble, 2i+1 in the
+high nibble) — quantized symmetrically to [-7, 7] per group of G dense K
+rows, with the per-group scales in ``scale [K//G, N]`` f32. The group must
+be a multiple of the DBB block so a compressed row's scale group is
+column-independent (every dense position of block kb lands in group
+kb·B // G). For B=8, k=4, INT4: (2 value bytes + 1 mask byte) / 8 = 37.5%
+of dense INT8 bytes — the decode weight stream roughly halves again.
 """
 from __future__ import annotations
 
@@ -33,21 +43,30 @@ import numpy as np
 
 __all__ = [
     "DbbWeight", "dbb_mask", "dbb_project", "pack_dbb", "unpack_dbb",
+    "pack_nibbles", "unpack_nibbles", "INT4_MAX",
     "dbb_footprint_bytes", "dense_footprint_bytes", "validate_dbb",
 ]
+
+# symmetric INT4 grid [-7, 7] (the -8 code is unused, like INT8's -128)
+INT4_MAX = 7
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DbbWeight:
-    """Packed DBB weight. A pytree; `block`/`nnz`/`k_dim` are static."""
-    values: jax.Array    # [K//B * k, N]
+    """Packed DBB weight. A pytree; `block`/`nnz`/`k_dim`/`bits`/`group`
+    are static. ``bits=8`` stores one value per ``values`` element;
+    ``bits=4`` nibble-packs two INT4 slots per int8 byte and ``scale``
+    holds the groupwise ``[K//G, N]`` dequant plane (DESIGN.md §16)."""
+    values: jax.Array    # [K//B * k, N]  (bits=4: [K//B * k // 2, N] int8)
     indices: jax.Array   # [K//B * k, N] int32, block-local in [0, B)
     bitmask: jax.Array   # [K//B, N] uint32
-    scale: Optional[jax.Array]  # [N] per-out-channel quant scale, or None
+    scale: Optional[jax.Array]  # [N] per-channel (bits=8) / [K//G, N] (bits=4)
     block: int = dataclasses.field(metadata=dict(static=True), default=8)
     nnz: int = dataclasses.field(metadata=dict(static=True), default=4)
     k_dim: int = dataclasses.field(metadata=dict(static=True), default=0)
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+    group: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def n_dim(self) -> int:
@@ -133,9 +152,46 @@ def dbb_project(w: jax.Array, block: int, nnz: int) -> jax.Array:
     return jnp.where(dbb_mask(w, block, nnz), w, jnp.zeros_like(w))
 
 
+def pack_nibbles(q: jax.Array) -> jax.Array:
+    """Nibble-pack an int8 array of INT4-range rows: ``[R, N] → [R//2, N]``,
+    packed row i = row 2i in the low nibble, row 2i+1 in the high nibble.
+    R must be even; values must lie in [-8, 7]."""
+    r, _ = q.shape
+    if r % 2 != 0:
+        raise ValueError(f"nibble packing needs an even row count, got {r}")
+    u = jax.lax.bitcast_convert_type(q.astype(jnp.int8), jnp.uint8)
+    lo = u[0::2] & 0xF
+    hi = u[1::2] & 0xF
+    return jax.lax.bitcast_convert_type(lo | (hi << 4), jnp.int8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of `pack_nibbles`: ``[R//2, N] int8 → [R, N] int8`` with each
+    nibble sign-extended. Pure shift arithmetic (``(p << 4) >> 4`` for the
+    low nibble, ``p >> 4`` for the high one) so the same expansion runs
+    unchanged inside the Pallas kernel bodies."""
+    r2, n = packed.shape
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=1).reshape(r2 * 2, n)
+
+
+def _check_w4_dims(k_dim: int, block: int, nnz: int, group: int) -> None:
+    if group <= 0 or group % block != 0:
+        raise ValueError(f"group={group} must be a positive multiple of "
+                         f"block={block} (scale groups cover whole blocks)")
+    if k_dim % group != 0:
+        raise ValueError(f"K={k_dim} not divisible by group={group}")
+    if (k_dim // block * nnz) % 2 != 0:
+        raise ValueError(
+            f"K//B·k = {k_dim // block * nnz} compressed rows must be even "
+            f"to nibble-pack (K={k_dim}, block={block}, nnz={nnz})")
+
+
 def pack_dbb(
     w: jax.Array, block: int = 8, nnz: int = 4,
     scale: Optional[jax.Array] = None,
+    bits: int = 8, group: int = 128,
 ) -> DbbWeight:
     """Compress ``W[K, N]`` to the DBB format (projects first if needed).
 
@@ -143,7 +199,20 @@ def pack_dbb(
     ``bitmask [K/B, N]`` and diagnostic ``indices [K/B·k, N]`` — the layout
     contract in DESIGN.md §2, shared with `kernels.dbb_gemm`. K must divide
     by ``block``; N is unconstrained here (kernels pad it).
+
+    ``bits=4`` additionally quantizes the surviving values to the
+    symmetric INT4 grid per ``group`` dense K rows (group % block == 0,
+    K % group == 0), nibble-packs the values plane to ``[K/B·k/2, N]`` and
+    stores the per-group scales in ``scale [K//G, N]`` (DESIGN.md §16);
+    a caller-supplied ``scale`` is not accepted in that mode.
     """
+    if bits not in (4, 8):
+        raise ValueError(f"bits={bits} not supported (4 or 8)")
+    if bits == 4:
+        if scale is not None:
+            raise ValueError("bits=4 derives groupwise scales itself; "
+                             "per-channel scale is the bits=8 format")
+        return _pack_dbb_w4(w, block, nnz, group)
     k_dim, n = w.shape
     _check_dims(k_dim, block, nnz)
     kb = k_dim // block
@@ -160,22 +229,81 @@ def pack_dbb(
         (jnp.uint32(1) << idx.astype(jnp.uint32)),
         jnp.uint32(0),
     ).sum(axis=-1, dtype=jnp.uint32)                          # [Kb, N]
+    # canonical slot order = bitmask-rank order: live values compact into
+    # the leading slots (dead zero slots trail), which is what the
+    # kernels' popcount-rank decompression assumes. Continuous weights
+    # never produce dead slots mid-block, but quantized (bits=4) input
+    # routinely rounds selected values to exactly zero.
+    live = jnp.abs(vals) > 0
+    order = jnp.argsort(jnp.where(live, idx, idx + block), axis=-1)
+    idx = jnp.take_along_axis(idx, order, axis=-1)
+    vals = jnp.take_along_axis(vals, order, axis=-1)
     values = vals.transpose(0, 2, 1).reshape(kb * nnz, n)
     indices = idx.astype(jnp.int32).transpose(0, 2, 1).reshape(kb * nnz, n)
     return DbbWeight(values=values, indices=indices, bitmask=bitmask,
                      scale=scale, block=block, nnz=nnz, k_dim=k_dim)
 
 
+def _pack_dbb_w4(w: jax.Array, block: int, nnz: int,
+                 group: int) -> DbbWeight:
+    """bits=4 pack: groupwise symmetric quantize to [-7, 7], DBB-select on
+    the *quantized* grid (so the bitmask matches the stored INT4 values
+    exactly), then nibble-pack the values plane."""
+    k_dim, n = w.shape
+    _check_dims(k_dim, block, nnz)
+    _check_w4_dims(k_dim, block, nnz, group)
+    g = w.astype(jnp.float32).reshape(k_dim // group, group, n)
+    scale = (jnp.max(jnp.abs(g), axis=1) / INT4_MAX).astype(jnp.float32)
+    scale = jnp.where(scale > 0, scale, jnp.ones_like(scale))  # [K//G, N]
+    q = jnp.clip(jnp.round(g / scale[:, None, :]), -INT4_MAX, INT4_MAX)
+    q = q.reshape(k_dim, n).astype(jnp.int8)
+    p8 = pack_dbb(q, block=block, nnz=nnz)    # top-k on the INT4 grid
+    return DbbWeight(values=pack_nibbles(p8.values), indices=p8.indices,
+                     bitmask=p8.bitmask, scale=scale, block=block,
+                     nnz=nnz, k_dim=k_dim, bits=4, group=group)
+
+
+def _decompress_bitmask(values: jax.Array, bitmask: jax.Array, *,
+                        block: int) -> jax.Array:
+    """Bitmask-rank decompression ``[Kb·k, N] + [Kb, N] → [K, N]`` — the
+    indices-free analogue of `unpack_dbb`'s one-hot path, for leaves whose
+    diagnostic ``indices`` plane has been stripped (the serving format).
+    Same rank = popcount-of-lower-bits recovery the kernels use."""
+    kbn, n = values.shape
+    kb = bitmask.shape[0]
+    k = kbn // kb
+    vals = values.reshape(kb, k, n)
+    pos = jnp.arange(block, dtype=jnp.uint32)
+    bits = ((bitmask[:, None, :] >> pos[None, :, None]) & 1)  # [Kb, B, N]
+    rank = (jnp.cumsum(bits, axis=1) - bits).astype(jnp.int32)
+    rank = jnp.clip(rank, 0, k - 1)
+    gathered = jnp.take_along_axis(vals, rank, axis=1)        # [Kb, B, N]
+    dense = jnp.where(bits.astype(bool), gathered,
+                      jnp.zeros_like(gathered))
+    return dense.reshape(kb * block, n)
+
+
 def unpack_dbb(p: DbbWeight) -> jax.Array:
-    """Decompress a `DbbWeight` to dense ``[K, N]`` and apply the
-    per-channel scale if present — the host-side analogue of the kernels'
-    in-VMEM decompression (DESIGN.md §2)."""
+    """Decompress a `DbbWeight` to dense ``[K, N]`` and apply the scale
+    plane if present — the host-side analogue of the kernels' in-VMEM
+    decompression (DESIGN.md §2). ``bits=4`` leaves sign-extend the
+    nibble plane first and dequantize with the groupwise ``[K//G, N]``
+    scales; leaves whose diagnostic ``indices`` were stripped (serving)
+    fall back to bitmask-rank decompression."""
     kb, n, k = p.num_blocks, p.n_dim, p.nnz
-    vals = p.values.reshape(kb, k, n).transpose(0, 2, 1)      # [Kb, N, k]
-    idx = p.indices.reshape(kb, k, n).transpose(0, 2, 1)      # [Kb, N, k]
-    onehot = jax.nn.one_hot(idx, p.block, dtype=vals.dtype, axis=-1)
-    dense = jnp.einsum("bnk,bnkB->bnB", vals, onehot)         # [Kb, N, B]
-    out = dense.transpose(0, 2, 1).reshape(p.k_dim, n)
+    values = unpack_nibbles(p.values) if p.bits == 4 else p.values
+    if p.indices is None:
+        out = _decompress_bitmask(values, p.bitmask, block=p.block)
+    else:
+        vals = values.reshape(kb, k, n).transpose(0, 2, 1)    # [Kb, N, k]
+        idx = p.indices.reshape(kb, k, n).transpose(0, 2, 1)  # [Kb, N, k]
+        onehot = jax.nn.one_hot(idx, p.block, dtype=vals.dtype, axis=-1)
+        dense = jnp.einsum("bnk,bnkB->bnB", vals, onehot)     # [Kb, N, B]
+        out = dense.transpose(0, 2, 1).reshape(p.k_dim, n)
+    if p.bits == 4:
+        grouped = out.astype(jnp.float32).reshape(
+            p.k_dim // p.group, p.group, n)
+        return (grouped * p.scale[:, None, :]).reshape(p.k_dim, n)
     if p.scale is not None:
         out = out * p.scale[None, :]
     return out
@@ -186,16 +314,27 @@ def dense_footprint_bytes(k_dim: int, n: int, itemsize: int = 1) -> int:
 
 
 def dbb_footprint_bytes(k_dim: int, n: int, block: int, nnz: int,
-                        itemsize: int = 1) -> int:
-    """Compressed bytes: values + per-block bitmask (paper §IV-A)."""
+                        itemsize: int = 1, bits: int = 8,
+                        group: int = 0) -> int:
+    """Compressed bytes: values + per-block bitmask (paper §IV-A).
+    ``bits=4`` halves the values plane (nibble packing) and adds the
+    groupwise f32 scale plane ``[K//G, N]`` (DESIGN.md §16)."""
     kb = k_dim // block
     mask_bytes = (block + 7) // 8
+    if bits == 4:
+        val_bytes = (kb * nnz + 1) // 2 * n       # two slots per byte
+        scale_bytes = (k_dim // group) * n * 4 if group > 0 else 0
+        return val_bytes + kb * n * mask_bytes + scale_bytes
     return kb * n * (nnz * itemsize + mask_bytes)
 
 
 def validate_dbb(p: DbbWeight) -> Tuple[bool, str]:
     """Host-side invariant check (used by tests & checkpoint loading)."""
-    vals = np.asarray(p.values).reshape(p.num_blocks, p.nnz, p.n_dim)
+    if p.indices is None:
+        return False, "indices plane stripped (serving format); " \
+                      "validate against the host-side copy"
+    values = unpack_nibbles(p.values) if p.bits == 4 else p.values
+    vals = np.asarray(values).reshape(p.num_blocks, p.nnz, p.n_dim)
     idx = np.asarray(p.indices).reshape(p.num_blocks, p.nnz, p.n_dim)
     if idx.min() < 0 or idx.max() >= p.block:
         return False, f"index out of range [0,{p.block})"

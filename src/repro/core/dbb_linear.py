@@ -40,9 +40,21 @@ DECOMPRESS_STATS = {"calls": 0}
 
 def decompress_xla(p: DbbWeight, dtype=None) -> jax.Array:
     """Pure-XLA decompression (GSPMD-shardable). Handles stacked leaves
-    ([L, Kc, N] scan stacks and [E, Kc, N] expert stacks) by vmapping."""
-    from repro.kernels import decompress_ref
+    ([L, Kc, N] scan stacks and [E, Kc, N] expert stacks) by vmapping.
+    ``bits=4`` leaves dequantize through the groupwise scale plane and
+    come back f32 (DESIGN.md §16)."""
+    from repro.kernels import decompress_ref, decompress_w4_ref
     DECOMPRESS_STATS["calls"] += 1
+    if p.bits == 4:
+        def one4(values, bitmask, gscale):
+            return decompress_w4_ref(values, bitmask.astype(jnp.int32),
+                                     gscale, block=p.block, nnz=p.nnz,
+                                     group=p.group)
+        fn = one4
+        for _ in range(p.values.ndim - 2):
+            fn = jax.vmap(fn)
+        w = fn(p.values, p.bitmask, p.scale)
+        return w.astype(dtype) if dtype is not None else w
     def one(values, bitmask):
         return decompress_ref(values, bitmask.astype(jnp.int32),
                               block=p.block, nnz=p.nnz)
@@ -93,8 +105,18 @@ def pack_tree(params: Any, cfg: DbbConfig, quantize: bool = False) -> Any:
         kd = leaf.shape[-2]
         if kd % cfg.block != 0:
             return leaf
+        # sub-8-bit plane (DESIGN.md §16): only where the w4 format's
+        # divisibility holds — other leaves stay INT8-packed
+        w4 = (cfg.weight_bits == 4
+              and cfg.quant_group > 0
+              and cfg.quant_group % cfg.block == 0
+              and kd % cfg.quant_group == 0
+              and (kd // cfg.block * cfg.nnz) % 2 == 0)
 
         def pack_one(w):
+            if w4:
+                return pack_dbb(w.astype(jnp.float32), cfg.block, cfg.nnz,
+                                bits=4, group=cfg.quant_group)
             if quantize:
                 from repro.core.quant import quantize_weight
                 qw = quantize_weight(w.astype(jnp.float32))
@@ -113,7 +135,9 @@ def pack_tree(params: Any, cfg: DbbConfig, quantize: bool = False) -> Any:
         # 4x the int8 payload); kernels and decompress consume the bitmask
         return DbbWeight(values=p.values, indices=None,
                          bitmask=p.bitmask, scale=p.scale,
-                         block=cfg.block, nnz=cfg.nnz, k_dim=kd)
+                         block=cfg.block, nnz=cfg.nnz, k_dim=kd,
+                         bits=4 if w4 else 8,
+                         group=cfg.quant_group if w4 else 0)
 
     return jax.tree_util.tree_map_with_path(
         visit, params, is_leaf=lambda x: isinstance(x, DbbWeight))
@@ -141,7 +165,9 @@ def tree_footprint_bytes(params: Any) -> int:
     def visit(leaf):
         nonlocal total
         if isinstance(leaf, DbbWeight):
-            nb = leaf.values.size // leaf.nnz
+            # bitmask.size counts (block, col) pairs directly — values.size
+            # over nnz would undercount on w4 leaves (nibble-packed rows)
+            nb = leaf.bitmask.size
             total += leaf.values.size * leaf.values.dtype.itemsize
             total += nb * ((leaf.block + 7) // 8)
             if leaf.scale is not None:

@@ -27,15 +27,16 @@ dispatch:  the one route registry + roofline-informed selection over all
 """
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 
-__all__ = ["Epilogue", "apply_epilogue", "decompress_ref"]
+__all__ = ["Epilogue", "apply_epilogue", "decompress_ref",
+           "decompress_w4_ref"]
 
 
 def __getattr__(name):
     # lazy re-export: `repro.core.dbb_linear` consumes the DBB decompress
-    # oracle through the package root (kernel-subsystem imports live only
+    # oracles through the package root (kernel-subsystem imports live only
     # here and in dispatch.py); eager import would cycle through
     # core/__init__ ↔ kernels.dbb_gemm at package-init time.
-    if name == "decompress_ref":
-        from repro.kernels.dbb_gemm.ref import decompress_ref
-        return decompress_ref
+    if name in ("decompress_ref", "decompress_w4_ref"):
+        from repro.kernels.dbb_gemm import ref
+        return getattr(ref, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -351,6 +351,8 @@ def conv_gemm_packed(x: jax.Array, p: DbbWeight,
     with the optional bias and activation, exactly like `dbb_gemm_packed`.
     """
     assert p.k_dim == kh * kw * x.shape[-1], (p.k_dim, kh, kw, x.shape)
+    assert p.bits != 4, ("conv kernels stream the INT8 DBB plane only; "
+                         "dispatch.conv decompresses w4 leaves up front")
     return conv_gemm_dbb(x, p.values, p.bitmask, bias, p.scale,
                          kh=kh, kw=kw, stride=stride, padding=padding,
                          act=act, block=p.block, nnz=p.nnz,

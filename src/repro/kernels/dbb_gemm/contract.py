@@ -20,36 +20,59 @@ __all__ = ["contracts"]
 
 
 def _instance(m: int, k: int, n: int, *, block: int = 8, nnz: int = 4,
-              itemsize: int = 4) -> KernelContract:
+              itemsize: int = 4, bits: int = 8, group: int = 0
+              ) -> KernelContract:
     bm, bk, bn = min(128, round_up(m, 8)), 128, 128
     mp, np_ = round_up(m, bm), round_up(n, bn)
     admitted = k % block == 0 and k % bk == 0
+    if bits == 4:
+        admitted = admitted and group > 0 and k % group == 0
     kp = round_up(k, bk)
     grid = (mp // bm, np_ // bn, kp // bk)
     nb_tile = bk // block
     bkc = nb_tile * nnz
     nb_total = kp // block
 
-    return KernelContract(
-        name=f"dbb_gemm[m{m} k{k} n{n} B{block} z{nnz}]",
-        route="dbb_packed", domain="matmul",
-        grid=grid,
-        dimension_semantics=("parallel", "parallel", "arbitrary"),
-        inputs=(
-            BlockDecl("x", (bm, bk), lambda i, j, kk: (i, kk), (mp, kp),
-                      itemsize),
+    inputs = [BlockDecl("x", (bm, bk), lambda i, j, kk: (i, kk), (mp, kp),
+                        itemsize)]
+    if bits == 4:
+        gpt = max(bk // group, 1)      # scale groups covered per K tile
+        gdiv = max(group // bk, 1)
+        inputs += [
+            # nibble plane: two compressed rows per streamed byte row
+            BlockDecl("values", (bkc // 2, bn), lambda i, j, kk: (kk, j),
+                      (nb_total * nnz // 2, np_), 1),
+            BlockDecl("bitmask", (nb_tile, bn), lambda i, j, kk: (kk, j),
+                      (nb_total, np_), 4),
+            BlockDecl("gscale", (gpt, bn),
+                      lambda i, j, kk: (kk // gdiv, j),
+                      (kp // group, np_), 4),
+        ]
+        # expansion chain per K step (DESIGN.md §16): unpacked int8
+        # slots + dense int8 tile + dequantized f32 tile
+        extra = bkc * bn + bk * bn + bk * bn * 4
+    else:
+        inputs += [
             BlockDecl("values", (bkc, bn), lambda i, j, kk: (kk, j),
                       (nb_total * nnz, np_), itemsize),
             BlockDecl("bitmask", (nb_tile, bn), lambda i, j, kk: (kk, j),
                       (nb_total, np_), 4),
-        ),
+        ]
+        extra = bk * bn * itemsize     # decompressed dense weight tile
+
+    kind = "dbb_packed_w4" if bits == 4 else "dbb_packed"
+    return KernelContract(
+        name=f"dbb_gemm[m{m} k{k} n{n} B{block} z{nnz} b{bits}]",
+        route=kind, domain="matmul",
+        grid=grid,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        inputs=tuple(inputs),
         outputs=(BlockDecl("out", (bm, bn), lambda i, j, kk: (i, j),
                            (mp, np_), 4),),
         scratch=(ScratchDecl("acc", (bm, bn), 4),),
         acc_dims=(2,), guarded_init=True, guarded_store=True,
         vmem_budget=KERNEL_VMEM_BUDGET,
-        # in-VMEM decompressed dense [bk, bn] weight tile
-        extra_vmem_bytes=bk * bn * itemsize,
+        extra_vmem_bytes=extra,
         admitted=admitted, vmem_reject=False,
         notes="" if admitted else f"K={k} not divisible by block {block}")
 
@@ -59,4 +82,7 @@ def contracts() -> List[KernelContract]:
         _instance(256, 512, 512),
         _instance(64, 1024, 256),
         _instance(128, 252, 256),      # guard-rejected: K % block != 0
+        # nibble-plane prefill-shaped instances (DESIGN.md §16)
+        _instance(256, 1024, 512, bits=4, group=128),
+        _instance(64, 512, 256, bits=4, group=256),
     ]

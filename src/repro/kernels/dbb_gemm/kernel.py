@@ -55,9 +55,35 @@ def _decompress_tile(vals, mask, *, block: int, nnz: int):
     return dense.reshape(nb * block, bn)
 
 
+def _expand_nibbles(packed):
+    """Sign-extend a nibble-packed int8 tile ``[r/2, bn] → [r, bn]``:
+    packed row i holds compressed row 2i (low nibble, ``(p << 4) >> 4``)
+    and row 2i+1 (high nibble, ``p >> 4``) — pure VPU shift arithmetic,
+    the in-kernel mirror of `core.dbb.unpack_nibbles`."""
+    r2, bn = packed.shape
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=1).reshape(r2 * 2, bn)
+
+
+def _dequant_tile(vals, mask, gscale, *, block: int, nnz: int):
+    """w4 decompress-tile step: expand the nibble plane to int8, bitmask-
+    rank decompress to the dense [bk, bn] tile, then dequantize with the
+    per-group scales ``gscale [gpt, bn]`` (gpt groups cover the K tile).
+    All in VMEM — neither the int8-expanded nor the dense weight ever
+    exists in HBM."""
+    w = _decompress_tile(_expand_nibbles(vals), mask, block=block, nnz=nnz)
+    bk, bn = w.shape
+    gpt = gscale.shape[0]
+    w = w.astype(jnp.float32).reshape(gpt, bk // gpt, bn) * gscale[:, None, :]
+    return w.reshape(bk, bn)
+
+
 def _dbb_gemm_kernel(x_ref, v_ref, m_ref, *refs, n_k: int, block: int,
-                     nnz: int, out_dtype, epilogue: Epilogue):
+                     nnz: int, out_dtype, epilogue: Epilogue,
+                     bits: int = 8):
     refs = list(refs)
+    gs_ref = refs.pop(0) if bits == 4 else None
     bias_ref = refs.pop(0) if epilogue.has_bias else None
     scale_ref = refs.pop(0) if epilogue.has_scale else None
     o_ref, acc_ref = refs
@@ -67,7 +93,11 @@ def _dbb_gemm_kernel(x_ref, v_ref, m_ref, *refs, n_k: int, block: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = _decompress_tile(v_ref[...], m_ref[...], block=block, nnz=nnz)
+    if bits == 4:
+        w = _dequant_tile(v_ref[...], m_ref[...], gs_ref[...],
+                          block=block, nnz=nnz)
+    else:
+        w = _decompress_tile(v_ref[...], m_ref[...], block=block, nnz=nnz)
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], w.astype(x_ref.dtype),
         dimension_numbers=(((1,), (0,)), ((), ())),
@@ -96,6 +126,9 @@ def dbb_gemm_pallas(
     block_n: int = 128,
     out_dtype=None,
     interpret: bool = False,
+    bits: int = 8,
+    group: int = 0,
+    gscale: jax.Array = None,  # [K//G, N] f32 (bits=4 only)
 ) -> jax.Array:
     """``x @ unpack(values, bitmask)`` with on-chip DBB decompression and an
     optional fused bias/activation/requant epilogue in the final-K store.
@@ -107,12 +140,17 @@ def dbb_gemm_pallas(
                               kb·B + pos is kept
     K must divide by block_k and block_k by B, so every K tile covers whole
     DBB blocks.
+
+    ``bits=4`` (DESIGN.md §16): ``values`` is the nibble-packed plane
+    ``[K/B·k/2, N] int8`` and ``gscale [K//G, N]`` the groupwise dequant
+    scales; the kernel streams the packed plane, sign-extends + dequantizes
+    at the decompress-tile step, so neither the int8-expanded nor the dense
+    weight ever exists in HBM. Requires float activations and block_k and
+    group to nest (block_k % group == 0 or group % block_k == 0).
     """
     m, k_dim = x.shape
     kc, n = values.shape
     nb_total = k_dim // block
-    assert kc == nb_total * nnz, (values.shape, k_dim, block, nnz)
-    assert bitmask.shape == (nb_total, n), bitmask.shape
     assert k_dim % block_k == 0 and block_k % block == 0
     assert m % block_m == 0 and n % block_n == 0
 
@@ -124,11 +162,31 @@ def dbb_gemm_pallas(
     bkc = nb_tile * nnz                   # compressed rows per K tile
 
     operands = [x, values, bitmask]
+    if bits == 4:
+        assert kc == nb_total * nnz // 2, (values.shape, k_dim, block, nnz)
+        assert bkc % 2 == 0, (block_k, block, nnz)
+        assert x.dtype != jnp.int8, "w4 dequantizes in VMEM: float x only"
+        assert group > 0 and (block_k % group == 0 or group % block_k == 0)
+        assert gscale is not None and gscale.shape == (k_dim // group, n)
+        vals_spec = pl.BlockSpec((bkc // 2, block_n),
+                                 lambda i, j, kk: (kk, j))
+    else:
+        assert kc == nb_total * nnz, (values.shape, k_dim, block, nnz)
+        vals_spec = pl.BlockSpec((bkc, block_n), lambda i, j, kk: (kk, j))
+    assert bitmask.shape == (nb_total, n), bitmask.shape
     in_specs = [
         pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((bkc, block_n), lambda i, j, kk: (kk, j)),
+        vals_spec,
         pl.BlockSpec((nb_tile, block_n), lambda i, j, kk: (kk, j)),
     ]
+    if bits == 4:
+        # gpt scale rows cover one K tile; when the group spans several K
+        # tiles (gdiv of them), successive kk revisit the same scale row.
+        gpt = max(block_k // group, 1)
+        gdiv = max(group // block_k, 1)
+        operands.append(gscale)
+        in_specs.append(pl.BlockSpec((gpt, block_n),
+                                     lambda i, j, kk: (kk // gdiv, j)))
     row_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
     if epilogue.has_bias:
         assert bias is not None and bias.shape == (1, n), (
@@ -144,7 +202,7 @@ def dbb_gemm_pallas(
     grid = (m // block_m, n // block_n, n_k)
     kernel = functools.partial(_dbb_gemm_kernel, n_k=n_k, block=block,
                                nnz=nnz, out_dtype=out_dtype,
-                               epilogue=epilogue)
+                               epilogue=epilogue, bits=bits)
     return pl.pallas_call(
         kernel,
         grid=grid,

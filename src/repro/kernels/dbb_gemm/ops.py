@@ -32,11 +32,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dbb import DbbWeight
-from repro.kernels.common import (coerce_bias_scale, default_interpret,
-                                  pad_cols, round_up, skinny_dispatch)
+from repro.kernels.common import (acc_dtype_for, coerce_bias_scale,
+                                  default_interpret, pad_cols, round_up,
+                                  skinny_dispatch)
 from repro.kernels.dbb_gemm.kernel import dbb_gemm_pallas
-from repro.kernels.dbb_gemm.ref import dbb_gemm_ref
-from repro.kernels.epilogue import Epilogue, as_row
+from repro.kernels.dbb_gemm.ref import dbb_gemm_ref, decompress_w4_ref
+from repro.kernels.epilogue import (Epilogue, apply_epilogue, as_row,
+                                    default_out_dtype)
 
 __all__ = ["dbb_gemm", "dbb_gemm_packed"]
 
@@ -53,10 +55,11 @@ def _skinny_kernel():
 @functools.partial(
     jax.jit,
     static_argnames=("act", "block", "nnz", "block_m", "block_k", "block_n",
-                     "out_dtype", "interpret", "use_kernel", "skinny"))
-def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
-                   block_m, block_k, block_n, out_dtype, interpret,
-                   use_kernel, skinny=False):
+                     "out_dtype", "interpret", "use_kernel", "skinny",
+                     "bits", "group"))
+def _dbb_gemm_impl(x, values, bitmask, bias, scale, gscale=None, *, act,
+                   block, nnz, block_m, block_k, block_n, out_dtype,
+                   interpret, use_kernel, skinny=False, bits=8, group=0):
     epilogue = Epilogue(act=act, has_bias=bias is not None,
                         has_scale=scale is not None)
     *batch, k_dim = x.shape
@@ -68,43 +71,67 @@ def _dbb_gemm_impl(x, values, bitmask, bias, scale, *, act, block, nnz,
     scale_r = as_row(scale, n) if scale is not None else None
 
     if not use_kernel:
-        y = dbb_gemm_ref(x2, values, mask_i32, block=block, nnz=nnz,
-                         epilogue=epilogue, bias=bias_r, scale=scale_r,
-                         out_dtype=out_dtype)
+        if bits == 4:
+            w = decompress_w4_ref(values, mask_i32, gscale, block=block,
+                                  nnz=nnz, group=group).astype(x2.dtype)
+            acc = jax.lax.dot_general(
+                x2, w, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dtype_for(x2.dtype))
+            od = out_dtype or default_out_dtype(x2.dtype, epilogue)
+            y = apply_epilogue(acc, epilogue, od, bias=bias_r, scale=scale_r)
+        else:
+            y = dbb_gemm_ref(x2, values, mask_i32, block=block, nnz=nnz,
+                             epilogue=epilogue, bias=bias_r, scale=scale_r,
+                             out_dtype=out_dtype)
         return y.reshape(*batch, n)
 
     assert k_dim % block == 0, (k_dim, block)
     bm = min(block_m, round_up(m, 8))
     bk = max(block, block_k // block * block)   # floor-align K tile to B
     bn = min(block_n, round_up(n, 128))
+    if bits == 4 and bk % group != 0 and group % bk != 0:
+        bk = group          # force K tile / scale group to nest
     # pad every axis to its block grid: M rows (zeros), K by whole DBB
     # blocks (zero value-rows + zero mask-rows), N by zero columns
     mp = round_up(m, 8) if skinny else round_up(m, bm)
-    kp = round_up(k_dim, bk)
+    # w4 padding must keep kp a whole number of scale groups too
+    kp = round_up(k_dim, max(bk, group) if bits == 4 else bk)
     np_ = round_up(n, bn)
     nb, nbp = k_dim // block, kp // block
     xp = x2 if (mp, kp) == (m, k_dim) else jnp.pad(
         x2, ((0, mp - m), (0, kp - k_dim)))
     vp, mp_arr = values, mask_i32
     if nbp != nb:
-        vp = jnp.pad(vp, ((0, (nbp - nb) * nnz), (0, 0)))
+        pad_rows = (nbp - nb) * nnz // 2 if bits == 4 else (nbp - nb) * nnz
+        vp = jnp.pad(vp, ((0, pad_rows), (0, 0)))
         mp_arr = jnp.pad(mp_arr, ((0, nbp - nb), (0, 0)))
     vp = pad_cols(vp, np_ - n)
     mp_arr = pad_cols(mp_arr, np_ - n)
     bias_r = pad_cols(bias_r, np_ - n)
     scale_r = pad_cols(scale_r, np_ - n)
+    gs = None
+    if bits == 4:
+        gs = gscale
+        gr = k_dim // group
+        if kp // group != gr:            # padded groups dequant zeros: ×1
+            gs = jnp.pad(gs, ((0, kp // group - gr), (0, 0)),
+                         constant_values=1.0)
+        gs = pad_cols(gs, np_ - n)
+    w4_kw = dict(bits=bits, group=group, gscale=gs) if bits == 4 else {}
     if skinny:
         # decode fast path (DESIGN.md §9): resident activations, the
         # compressed values/bitmask stream through the K loop
         y = _skinny_kernel()(xp, vp, mp_arr, bias_r, scale_r,
                                    epilogue=epilogue, block=block, nnz=nnz,
                                    block_k=bk, block_n=bn,
-                                   out_dtype=out_dtype, interpret=interpret)
+                                   out_dtype=out_dtype, interpret=interpret,
+                                   **w4_kw)
     else:
         y = dbb_gemm_pallas(xp, vp, mp_arr, bias_r, scale_r,
                             epilogue=epilogue, block=block, nnz=nnz,
                             block_m=bm, block_k=bk, block_n=bn,
-                            out_dtype=out_dtype, interpret=interpret)
+                            out_dtype=out_dtype, interpret=interpret,
+                            **w4_kw)
     return y[:m, :n].reshape(*batch, n)
 
 
@@ -126,6 +153,9 @@ def dbb_gemm(
     use_kernel: bool = True,
     autotune: Optional[bool] = None,
     skinny: Optional[bool] = None,
+    bits: int = 8,
+    group: int = 0,
+    gscale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """DBB structured-sparse GEMM: ``x @ unpack(values, bitmask)``.
 
@@ -138,11 +168,20 @@ def dbb_gemm(
     dense row kb·B + pos kept. K must divide by ``block``; M and N pad to
     the block grid. ``bias``/``scale``/``act`` fuse into the kernel's
     final-K store exactly as in `sta_gemm`.
+
+    ``bits=4`` (DESIGN.md §16): ``values`` is nibble-packed
+    ``[K/B·k/2, N] int8`` and ``gscale [K//G, N]`` the groupwise dequant
+    scales, applied at the in-VMEM decompress step (they vary along K, so
+    they cannot ride the [1, N] epilogue ``scale``, which stays available
+    for requant).
     """
     if interpret is None:
         interpret = default_interpret()
     bias, scale = coerce_bias_scale(bias, scale)
     bm0, bk0, bn0 = block_m or 128, block_k or 128, block_n or 128
+    if bits == 4:
+        assert gscale is not None, "bits=4 needs the groupwise gscale plane"
+        autotune = False   # tuner synthesizes int8/f32 operand sets only
     if not use_kernel:
         skinny = False
     if use_kernel:
@@ -168,11 +207,11 @@ def dbb_gemm(
                 m, k_dim, values.shape[1], x.dtype, epi, out_dtype,
                 interpret, block=block, nnz=nnz, measure=measure,
                 skinny=skinny)
-    return _dbb_gemm_impl(x, values, bitmask, bias, scale, act=act,
+    return _dbb_gemm_impl(x, values, bitmask, bias, scale, gscale, act=act,
                           block=block, nnz=nnz, block_m=bm0, block_k=bk0,
                           block_n=bn0, out_dtype=out_dtype,
                           interpret=interpret, use_kernel=use_kernel,
-                          skinny=skinny)
+                          skinny=skinny, bits=bits, group=group)
 
 
 def _autotuned_shape(m, k_dim, n, dtype, epilogue, out_dtype, interpret,
@@ -235,7 +274,18 @@ def dbb_gemm_packed(x: jax.Array, p: DbbWeight,
     The per-out-channel quant scale (if any) is *fused into the kernel
     epilogue* together with the optional bias and activation — the
     pre-dequant [M, N] accumulator never round-trips through HBM.
+
+    ``bits=4`` leaves route their groupwise ``[K//G, N]`` scale plane to
+    the kernels' dequant step instead (it varies along K); any caller
+    scale folded into ``p.scale`` upstream rides along multiplicatively.
     """
+    if p.bits == 4:
+        y = dbb_gemm(x, p.values, p.bitmask, bias, None,
+                     act=act, block=p.block, nnz=p.nnz,
+                     out_dtype=out_dtype, interpret=interpret,
+                     use_kernel=use_kernel, bits=4, group=p.group,
+                     gscale=p.scale, **block_kw)
+        return y
     scale = p.scale
     y = dbb_gemm(x, p.values, p.bitmask, bias, scale,
                  act=act, block=p.block, nnz=p.nnz,

@@ -7,11 +7,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.dbb import DbbWeight, unpack_dbb
+from repro.core.dbb import DbbWeight, unpack_dbb, unpack_nibbles
 from repro.kernels.common import acc_dtype_for
 from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
-__all__ = ["dbb_gemm_ref", "decompress_ref"]
+__all__ = ["dbb_gemm_ref", "decompress_ref", "decompress_w4_ref"]
 
 
 def decompress_ref(values: jax.Array, bitmask: jax.Array, *,
@@ -31,6 +31,20 @@ def decompress_ref(values: jax.Array, bitmask: jax.Array, *,
     gathered = jnp.take_along_axis(v, slot, axis=1)            # [nb, B, n]
     dense = jnp.where(bit == 1, gathered, jnp.zeros_like(gathered))
     return dense.reshape(nb * block, n)
+
+
+def decompress_w4_ref(values: jax.Array, bitmask: jax.Array,
+                      gscale: jax.Array, *, block: int, nnz: int,
+                      group: int) -> jax.Array:
+    """Dense f32 ``[K, N]`` from the nibble-packed INT4 plane: sign-extend
+    the nibbles (``values [K/B·k/2, N] int8``), bitmask-rank decompress,
+    then dequantize with the groupwise ``gscale [K//G, N]`` (DESIGN.md
+    §16). The XLA oracle for the w4 kernel routes."""
+    v8 = unpack_nibbles(values)                               # [K/B·k, N]
+    dense = decompress_ref(v8, bitmask, block=block, nnz=nnz)
+    k_dim, n = dense.shape
+    grouped = dense.astype(jnp.float32).reshape(k_dim // group, group, n)
+    return (grouped * gscale[:, None, :]).reshape(k_dim, n)
 
 
 def dbb_gemm_ref(x: jax.Array, values: jax.Array, bitmask: jax.Array, *,

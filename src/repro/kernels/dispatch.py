@@ -91,6 +91,8 @@ class OpSpec:
     block: int = 8               # DBB geometry (packed ops)
     nnz: int = 4
     vals_itemsize: int = 1       # packed value bytes (int8 deployment)
+    bits: int = 8                # value-plane width (4 = nibble-packed)
+    group: int = 0               # w4 scale group along dense K (bits=4)
     epilogue_ops: int = 0        # unfused bias/act/scale passes on XLA
     pallas: bool = False         # fused Pallas route family is active
     dense_fused: bool = True     # call site opted dense weights into kernels
@@ -138,6 +140,9 @@ class Route:
     cost: Callable[[OpSpec], Tuple[float, float]]   # (flops, bytes)
     defer: Optional[Callable[[OpSpec], bool]] = None  # soft demotion (auto only)
     describe: str = ""
+    # weight-stream bytes this route is costed at (the compressed-traffic
+    # column of explain tables); None = not a weight-streaming route
+    wbytes: Optional[Callable[[OpSpec], float]] = None
 
 
 @dataclasses.dataclass
@@ -155,6 +160,7 @@ class RouteDecision:
     deferred: bool = False
     chosen: bool = False
     forced: bool = False
+    weight_bytes: float = 0.0    # weight-stream traffic term (0 = n/a)
     # TP terms (0 / tp=1 outside a sharded costing, DESIGN.md §14)
     collective_bytes: float = 0.0
     collective_s: float = 0.0
@@ -279,7 +285,8 @@ def _decide(route: Route, spec: OpSpec, hw: Hardware) -> RouteDecision:
         flops=flops, bytes=nbytes, compute_s=compute_s, memory_s=memory_s,
         cost_s=max(compute_s, memory_s, coll_s), priority=route.priority,
         deferred=bool(route.defer and route.defer(spec)),
-        collective_bytes=coll_b, collective_s=coll_s, tp=spec.tp)
+        collective_bytes=coll_b, collective_s=coll_s, tp=spec.tp,
+        weight_bytes=float(route.wbytes(spec)) if route.wbytes else 0.0)
 
 
 _warned_forced: set = set()
@@ -412,15 +419,16 @@ def format_table(decisions: List[RouteDecision]) -> str:
         lines.append(f"costed for mesh {decisions[0].mesh or '?'} "
                      f"(model-axis tp={decisions[0].tp})")
     lines.append(f"{'route':<18} {'ok':<3} {'cost':>10} {'flops':>10} "
-                 f"{'bytes':>10} {'coll':>9}  note")
+                 f"{'bytes':>10} {'wbytes':>9} {'coll':>9}  note")
     for d in decisions:
         mark = "*" if d.chosen else ("f" if d.forced else "")
         note = d.reason if not d.applicable else (
             "deferred" if d.deferred and not d.chosen else "")
+        wb = f"{d.weight_bytes:>9.3g}" if d.weight_bytes else f"{'-':>9}"
         lines.append(
             f"{d.name:<18} {('y' + mark) if d.applicable else 'n':<3} "
             f"{d.cost_s * 1e6:>9.2f}u {d.flops:>10.3g} {d.bytes:>10.3g} "
-            f"{d.collective_bytes:>9.3g}  {note}")
+            f"{wb} {d.collective_bytes:>9.3g}  {note}")
     return "\n".join(lines)
 
 
@@ -460,9 +468,14 @@ def _dense_w_bytes(spec: OpSpec, kp: int, np_: int) -> float:
 
 def _packed_w_bytes(spec: OpSpec) -> float:
     """Compressed weight stream: values + bitmask, the paper's 62.5%
-    (the per-shard plane slice when the spec is TP-sharded)."""
+    (the per-shard plane slice when the spec is TP-sharded). ``bits=4``
+    halves the values term (two slots per byte) and adds the groupwise
+    f32 scale plane — 37.5% of dense INT8 at B=8/k=4/G=128 (§16)."""
     _, k, n = _shard_dims(spec)
     nb = max(k // max(spec.block, 1), 1)
+    if spec.bits == 4 and spec.group > 0:
+        return (nb * spec.nnz * n * 0.5 + nb * n * _MASK_BYTES
+                + max(k // spec.group, 1) * n * 4.0)
     return (nb * spec.nnz * n * spec.vals_itemsize
             + nb * n * _MASK_BYTES)
 
@@ -545,7 +558,10 @@ def _guard_skinny_sta(spec: OpSpec) -> str:
     return ""
 
 
-def _guard_pallas_packed(spec: OpSpec) -> str:
+def _guard_packed_base(spec: OpSpec) -> str:
+    """Shared admission for every packed-weight kernel route (both value-
+    plane widths): format present, route family on, block divisibility,
+    clean TP split."""
     if not spec.packed:
         return "weight is dense (DBB kernels take values+bitmask)"
     if not spec.pallas:
@@ -564,10 +580,17 @@ def _guard_pallas_packed(spec: OpSpec) -> str:
     return ""
 
 
-def _guard_skinny_dbb(spec: OpSpec) -> str:
-    r = _guard_pallas_packed(spec)
+def _guard_pallas_packed(spec: OpSpec) -> str:
+    r = _guard_packed_base(spec)
     if r:
         return r
+    if spec.bits == 4:
+        return ("values plane is nibble-packed INT4 (the w4 routes "
+                "stream it)")
+    return ""
+
+
+def _skinny_reason(spec: OpSpec) -> str:
     if spec.pinned:
         return "caller-pinned block shapes opt out of skinny dispatch"
     _, k_loc, _ = _shard_dims(spec)
@@ -578,10 +601,47 @@ def _guard_skinny_dbb(spec: OpSpec) -> str:
     return ""
 
 
+def _guard_skinny_dbb(spec: OpSpec) -> str:
+    return _guard_pallas_packed(spec) or _skinny_reason(spec)
+
+
+def _guard_pallas_packed_w4(spec: OpSpec) -> str:
+    r = _guard_packed_base(spec)
+    if r:
+        return r
+    if spec.bits != 4:
+        return "values plane is INT8 (w4 routes take the nibble plane)"
+    if spec.itemsize == 1:
+        return ("int8 activations: the w4 dequantized tile is float "
+                "(float x only)")
+    if spec.group <= 0 or spec.group % max(spec.block, 1) != 0:
+        return (f"scale group {spec.group} must be a positive multiple "
+                f"of the DBB block {spec.block}")
+    _, k_loc, _ = _shard_dims(spec)
+    if k_loc % spec.group != 0:
+        shard = "per-shard " if spec.tp > 1 else ""
+        return (f"{shard}K={k_loc} not divisible by the scale group "
+                f"{spec.group}")
+    return ""
+
+
+def _guard_skinny_dbb_w4(spec: OpSpec) -> str:
+    return _guard_pallas_packed_w4(spec) or _skinny_reason(spec)
+
+
+def _xla_w_bytes(spec: OpSpec) -> float:
+    _, k, n = _shard_dims(spec)
+    if spec.packed:
+        # decompress_xla: read compressed, write + re-read dense
+        return _packed_w_bytes(spec) + 2.0 * k * n * spec.itemsize
+    return float(k) * n * spec.itemsize
+
+
 register_route(Route(
     name="xla", domain="matmul", priority=9,
     guard=lambda s: "",
     cost=_mm_xla_cost,
+    wbytes=_xla_w_bytes,
     describe="plain XLA matmul (GSPMD-shardable, differentiable); packed "
              "weights decompress transiently in-graph"))
 
@@ -589,18 +649,21 @@ register_route(Route(
     name="sta", domain="matmul", priority=1,
     guard=_guard_sta,
     cost=lambda s: _mm_kernel_cost(s, skinny=False, dbb=False),
+    wbytes=lambda s: _dense_w_bytes(s, *_mm_dims(s, False)[1:]),
     describe="M-tiled dense STA Pallas kernel, fused epilogue"))
 
 register_route(Route(
     name="skinny_sta", domain="matmul", priority=0,
     guard=_guard_skinny_sta,
     cost=lambda s: _mm_kernel_cost(s, skinny=True, dbb=False),
+    wbytes=lambda s: _dense_w_bytes(s, *_mm_dims(s, True)[1:]),
     describe="skinny weight-streaming STA kernel (resident [M,K] rows)"))
 
 register_route(Route(
     name="dbb_packed", domain="matmul", priority=1,
     guard=_guard_pallas_packed,
     cost=lambda s: _mm_kernel_cost(s, skinny=False, dbb=True),
+    wbytes=_packed_w_bytes,
     describe="M-tiled DBB kernel: compressed weight stream, VMEM "
              "decompress, scale folded into the epilogue"))
 
@@ -608,7 +671,24 @@ register_route(Route(
     name="skinny_dbb", domain="matmul", priority=0,
     guard=_guard_skinny_dbb,
     cost=lambda s: _mm_kernel_cost(s, skinny=True, dbb=True),
+    wbytes=_packed_w_bytes,
     describe="skinny DBB kernel: resident rows, compressed stream"))
+
+register_route(Route(
+    name="dbb_packed_w4", domain="matmul", priority=1,
+    guard=_guard_pallas_packed_w4,
+    cost=lambda s: _mm_kernel_cost(s, skinny=False, dbb=True),
+    wbytes=_packed_w_bytes,
+    describe="M-tiled DBB kernel, nibble-packed INT4 stream (~half the "
+             "weight bytes) + groupwise dequant in VMEM (§16)"))
+
+register_route(Route(
+    name="skinny_dbb_w4", domain="matmul", priority=0,
+    guard=_guard_skinny_dbb_w4,
+    cost=lambda s: _mm_kernel_cost(s, skinny=True, dbb=True),
+    wbytes=_packed_w_bytes,
+    describe="skinny DBB kernel, INT4 nibble stream + groupwise dequant "
+             "— the decode weight-bandwidth floor (§16)"))
 
 
 def _epilogue_ops(bias, scale, act: str) -> int:
@@ -658,9 +738,11 @@ def matmul(x: jax.Array, w, bias=None, scale=None, *, act: str = "none",
                 k_w = k_local
         vals_itemsize = jnp.dtype(w.values.dtype).itemsize
         block, nnz = w.block, w.nnz
+        bits, group = w.bits, w.group
     else:
         k_w, n = w.shape
         vals_itemsize, block, nnz = 1, 8, 4
+        bits, group = 8, 0
     assert k_dim == k_w, (x.shape, k_w)
     eff_out = jnp.dtype(out_dtype).itemsize if out_dtype is not None \
         else x.dtype.itemsize
@@ -668,6 +750,7 @@ def matmul(x: jax.Array, w, bias=None, scale=None, *, act: str = "none",
         domain="matmul", m=m, k=k_dim, n=n,
         itemsize=x.dtype.itemsize, out_itemsize=eff_out,
         packed=packed, block=block, nnz=nnz, vals_itemsize=vals_itemsize,
+        bits=bits, group=group,
         epilogue_ops=_epilogue_ops(bias, scale if not packed else None, act),
         pallas=bool(pallas) and use_kernel, dense_fused=dense_fused,
         pinned=bool(block_m or block_k or block_n), gemv=gemv,
@@ -688,18 +771,21 @@ def matmul(x: jax.Array, w, bias=None, scale=None, *, act: str = "none",
         return sta_gemm(x, w.astype(x.dtype), bias, scale, act=act,
                         out_dtype=out_dtype, skinny=(name == "skinny_sta"),
                         **kw)
-    if name in ("dbb_packed", "skinny_dbb"):
+    if name in ("dbb_packed", "skinny_dbb", "dbb_packed_w4",
+                "skinny_dbb_w4"):
         from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
         if scale is not None:
             # fold a caller-supplied scale into the packed weight's
             # epilogue scale — dbb_gemm_packed consumes only w.scale, and
             # dropping the operand here would silently diverge from the
-            # xla route (scales are multiplicative, so folding is exact)
+            # xla route (scales are multiplicative, so folding is exact;
+            # on w4 leaves the [K//G, N] plane broadcasts against [N])
             s = jnp.asarray(scale, jnp.float32)
             w = dataclasses.replace(
                 w, scale=s if w.scale is None else w.scale * s)
-        return dbb_gemm_packed(x, w, bias, act=act, out_dtype=out_dtype,
-                               skinny=(name == "skinny_dbb"), **kw)
+        return dbb_gemm_packed(
+            x, w, bias, act=act, out_dtype=out_dtype,
+            skinny=(name in ("skinny_dbb", "skinny_dbb_w4")), **kw)
     return _matmul_xla(x, w, bias, scale, act=act, out_dtype=out_dtype)
 
 
@@ -713,7 +799,14 @@ def _matmul_xla(x, w, bias, scale, *, act, out_dtype):
     from repro.kernels.epilogue import Epilogue, apply_act, apply_epilogue
     if isinstance(w, DbbWeight):
         from repro.core.dbb_linear import decompress_xla
-        if x.dtype == jnp.int8 and w.scale is not None:
+        if w.bits == 4:
+            # w4: the [K//G, N] scales vary along K, so there is no int8
+            # epilogue folding — dequantize fully (f32); int8 activations
+            # upcast (no int8×w4 requant datapath exists anywhere)
+            w = decompress_xla(w)
+            if x.dtype == jnp.int8:
+                x = x.astype(w.dtype)
+        elif x.dtype == jnp.int8 and w.scale is not None:
             # INT8 deployment: the quant scale must survive to the int32
             # epilogue — decompress_xla(dtype=int8) would dequantize to
             # f32 and truncate back to int8, destroying the weights.
@@ -812,6 +905,9 @@ def _guard_conv_sta(spec: OpSpec) -> str:
 def _guard_conv_dbb(spec: OpSpec) -> str:
     if not spec.packed:
         return "weight is dense"
+    if spec.bits == 4:
+        return ("conv kernels stream the INT8 DBB plane only (w4 is the "
+                "decode GEMM format; conv decompresses it up front)")
     if not spec.pallas:
         return "implicit-GEMM kernels not selected (use_kernel=False)"
     if len(spec.conv_geom) < 7:
@@ -855,6 +951,13 @@ def conv(x: jax.Array, w, bias=None, *, kh: int, kw: int, stride: int = 1,
     pins the explicit im2col oracle (the conv_xla route)."""
     from repro.kernels.conv_gemm.ops import out_spatial
     packed = isinstance(w, DbbWeight)
+    if packed and w.bits == 4:
+        # conv kernels stream the INT8 plane only — w4 is a decode-GEMM
+        # format. Decompress once (XLA) and take the dense routes rather
+        # than silently mis-reading the nibble plane as int8 slots.
+        from repro.core.dbb import unpack_dbb
+        w = unpack_dbb(w).astype(x.dtype)
+        packed = False
     b, h, w_dim, c = x.shape
     ho, _, _ = out_spatial(h, kh, stride, padding)
     wo, _, _ = out_spatial(w_dim, kw, stride, padding)

@@ -22,8 +22,8 @@ __all__ = ["contracts"]
 
 
 def _instance(m: int, k: int, n: int, *, itemsize: int = 4,
-              dbb: bool = False, block: int = 8, nnz: int = 4
-              ) -> KernelContract:
+              dbb: bool = False, block: int = 8, nnz: int = 4,
+              bits: int = 8, group: int = 0) -> KernelContract:
     mp = round_up(max(m, 1), SUBLANE)
     kp = round_up(max(k, 1), LANE)
     np_ = round_up(max(n, 1), LANE)
@@ -32,6 +32,8 @@ def _instance(m: int, k: int, n: int, *, itemsize: int = 4,
     admitted = skinny_ok(m, k, itemsize)
     if dbb:
         admitted = admitted and k % block == 0
+    if bits == 4:
+        admitted = admitted and group > 0 and k % group == 0
 
     inputs = [BlockDecl("x", (mp, kp), lambda j, kk: (0, 0), (mp, kp),
                         itemsize, resident=True)]
@@ -39,19 +41,40 @@ def _instance(m: int, k: int, n: int, *, itemsize: int = 4,
     if dbb:
         nb_tile = bk // block
         nb_total = kp // block
-        inputs += [
-            BlockDecl("values", (nb_tile * nnz, bn),
-                      lambda j, kk: (kk, j), (nb_total * nnz, np_),
-                      itemsize),
-            BlockDecl("bitmask", (nb_tile, bn), lambda j, kk: (kk, j),
-                      (nb_total, np_), 4),
-        ]
-        extra = bk * bn * itemsize      # decompressed dense weight tile
+        kc_tile = nb_tile * nnz        # compressed (int8-slot) rows/tile
+        if bits == 4:
+            gpt = max(bk // group, 1)  # scale groups covered per K tile
+            gdiv = max(group // bk, 1)
+            inputs += [
+                # nibble plane: two compressed rows per streamed byte row
+                BlockDecl("values", (kc_tile // 2, bn),
+                          lambda j, kk: (kk, j),
+                          (nb_total * nnz // 2, np_), 1),
+                BlockDecl("bitmask", (nb_tile, bn), lambda j, kk: (kk, j),
+                          (nb_total, np_), 4),
+                BlockDecl("gscale", (gpt, bn),
+                          lambda j, kk: (kk // gdiv, j),
+                          (kp // group, np_), 4),
+            ]
+            # expansion chain per tile, all live in VMEM at the
+            # decompress step: unpacked int8 slots + dense int8 tile +
+            # dequantized f32 tile (DESIGN.md §16)
+            extra = kc_tile * bn + bk * bn + bk * bn * 4
+        else:
+            inputs += [
+                BlockDecl("values", (kc_tile, bn),
+                          lambda j, kk: (kk, j), (nb_total * nnz, np_),
+                          itemsize),
+                BlockDecl("bitmask", (nb_tile, bn), lambda j, kk: (kk, j),
+                          (nb_total, np_), 4),
+            ]
+            extra = bk * bn * itemsize  # decompressed dense weight tile
     else:
         inputs.append(BlockDecl("w", (bk, bn), lambda j, kk: (kk, j),
                                 (kp, np_), itemsize))
 
-    kind = "skinny_dbb" if dbb else "skinny_sta"
+    kind = ("skinny_dbb_w4" if bits == 4 else
+            "skinny_dbb" if dbb else "skinny_sta")
     return KernelContract(
         name=f"{kind}[m{m} k{k} n{n} i{itemsize}]",
         route=kind, domain="matmul",
@@ -80,4 +103,8 @@ def contracts() -> List[KernelContract]:
         _instance(8, k_fit + LANE, 256),              # boundary: rejected
         _instance(8, 256, 1024, dbb=True),
         _instance(32, 2048, 512, dbb=True),
+        # nibble-plane decode stream (DESIGN.md §16): group nests inside
+        # the K tile (G=128 == bk) and spans multiple tiles (G=256)
+        _instance(8, 2048, 8192, dbb=True, bits=4, group=128),
+        _instance(32, 1024, 512, dbb=True, bits=4, group=256),
     ]

@@ -35,7 +35,7 @@ from jax.experimental import pallas as pl
 from repro.core.sta import SUBLANE
 from repro.kernels.common import (SKINNY_M_MAX, CompilerParams, acc_dtype_for,
                                   pltpu, round_up, skinny_ok)
-from repro.kernels.dbb_gemm.kernel import _decompress_tile
+from repro.kernels.dbb_gemm.kernel import _decompress_tile, _dequant_tile
 from repro.kernels.epilogue import Epilogue, apply_epilogue, default_out_dtype
 
 __all__ = ["SKINNY_M_MAX", "skinny_ok", "sta_gemm_skinny_pallas",
@@ -134,8 +134,10 @@ def sta_gemm_skinny_pallas(
 
 
 def _dbb_skinny_kernel(x_ref, v_ref, m_ref, *refs, n_k: int, block_k: int,
-                       block: int, nnz: int, out_dtype, epilogue: Epilogue):
+                       block: int, nnz: int, out_dtype, epilogue: Epilogue,
+                       bits: int = 8):
     refs = list(refs)
+    gs_ref = refs.pop(0) if bits == 4 else None
     bias_ref = refs.pop(0) if epilogue.has_bias else None
     scale_ref = refs.pop(0) if epilogue.has_scale else None
     o_ref, acc_ref = refs
@@ -145,7 +147,11 @@ def _dbb_skinny_kernel(x_ref, v_ref, m_ref, *refs, n_k: int, block_k: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = _decompress_tile(v_ref[...], m_ref[...], block=block, nnz=nnz)
+    if bits == 4:
+        w = _dequant_tile(v_ref[...], m_ref[...], gs_ref[...],
+                          block=block, nnz=nnz)
+    else:
+        w = _decompress_tile(v_ref[...], m_ref[...], block=block, nnz=nnz)
     x = x_ref[:, pl.ds(k * block_k, block_k)]
     acc_ref[...] += jax.lax.dot_general(
         x, w.astype(x.dtype),
@@ -172,15 +178,18 @@ def dbb_gemm_skinny_pallas(
     block_n: int = 128,
     out_dtype=None,
     interpret: bool = False,
+    bits: int = 8,
+    group: int = 0,
+    gscale: Optional[jax.Array] = None,  # [K//G, N] f32 (bits=4 only)
 ) -> jax.Array:
     """Skinny ``x @ unpack(values, bitmask)``: resident activations, the
     COMPRESSED weight stream moves through the K loop and is decompressed in
-    VMEM per tile — no dense [K, N] weight exists at any point."""
+    VMEM per tile — no dense [K, N] weight exists at any point. ``bits=4``
+    streams the nibble-packed plane (37.5% of dense INT8 bytes) and
+    dequantizes with ``gscale`` at the decompress step (DESIGN.md §16)."""
     m, k_dim = x.shape
     kc, n = values.shape
     nb_total = k_dim // block
-    assert kc == nb_total * nnz, (values.shape, k_dim, block, nnz)
-    assert bitmask.shape == (nb_total, n), bitmask.shape
     assert m % SUBLANE == 0 and m <= round_up(SKINNY_M_MAX, SUBLANE), m
     assert k_dim % block_k == 0 and block_k % block == 0
     assert n % block_n == 0
@@ -193,11 +202,29 @@ def dbb_gemm_skinny_pallas(
     bkc = nb_tile * nnz                   # compressed rows per K tile
 
     operands = [x, values, bitmask]
+    if bits == 4:
+        assert kc == nb_total * nnz // 2, (values.shape, k_dim, block, nnz)
+        assert bkc % 2 == 0, (block_k, block, nnz)
+        assert x.dtype != jnp.int8, "w4 dequantizes in VMEM: float x only"
+        assert group > 0 and (block_k % group == 0 or group % block_k == 0)
+        assert gscale is not None and gscale.shape == (k_dim // group, n)
+        vals_spec = pl.BlockSpec((bkc // 2, block_n),
+                                 lambda j, kk: (kk, j))
+    else:
+        assert kc == nb_total * nnz, (values.shape, k_dim, block, nnz)
+        vals_spec = pl.BlockSpec((bkc, block_n), lambda j, kk: (kk, j))
+    assert bitmask.shape == (nb_total, n), bitmask.shape
     in_specs = [
         pl.BlockSpec((m, k_dim), lambda j, kk: (0, 0)),   # resident A
-        pl.BlockSpec((bkc, block_n), lambda j, kk: (kk, j)),
+        vals_spec,
         pl.BlockSpec((nb_tile, block_n), lambda j, kk: (kk, j)),
     ]
+    if bits == 4:
+        gpt = max(block_k // group, 1)
+        gdiv = max(group // block_k, 1)
+        operands.append(gscale)
+        in_specs.append(pl.BlockSpec((gpt, block_n),
+                                     lambda j, kk: (kk // gdiv, j)))
     row_spec = pl.BlockSpec((1, block_n), lambda j, kk: (0, j))
     if epilogue.has_bias:
         assert bias is not None and bias.shape == (1, n), (
@@ -213,7 +240,7 @@ def dbb_gemm_skinny_pallas(
     grid = (n // block_n, n_k)
     kernel = functools.partial(_dbb_skinny_kernel, n_k=n_k, block_k=block_k,
                                block=block, nnz=nnz, out_dtype=out_dtype,
-                               epilogue=epilogue)
+                               epilogue=epilogue, bits=bits)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -51,11 +51,13 @@ def _log_routes(cfg, batch: int, smax: int, packed: bool,
     print(f"\nkernel routes (gemm_impl={cfg.gemm_impl!r}, "
           f"attn_impl={cfg.attn_impl!r}, overrides="
           f"{dict(cfg.kernel_routes) or 'none'}):")
+    w4 = packed and cfg.dbb.weight_bits == 4
+    w4_kw = dict(bits=4, group=cfg.dbb.quant_group) if w4 else {}
     print(f"- decode layer GEMM [M={batch}, K={d}, N={ff}]"
-          f"{' packed' if packed else ''}:")
+          f"{' packed w4' if w4 else ' packed' if packed else ''}:")
     print(dispatch.format_table(dispatch.explain(
         "matmul", m=batch, k=d, n=ff, dtype=cfg.dtype, packed=packed,
-        cfg=cfg, epilogue_ops=1)))   # the MLP GEMMs fuse one act/scale
+        cfg=cfg, epilogue_ops=1, **w4_kw)))  # the MLP GEMMs fuse 1 act/scale
     if total_tokens > 0:
         print(f"- prefill attention [total_tokens={total_tokens}, "
               f"packed cu_seqlens]:")
@@ -89,6 +91,16 @@ def main(argv=None) -> int:
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--packed", action="store_true",
                     help="serve DBB-packed weights")
+    ap.add_argument("--weight-bits", type=int, default=0,
+                    choices=[0, 4, 8],
+                    help="packed value-plane width (with --packed): 4 = "
+                         "nibble-packed INT4 + groupwise scales, the "
+                         "decode bandwidth floor (DESIGN.md §16); 8 = "
+                         "INT8/float plane; 0 = the arch config's "
+                         "dbb.weight_bits")
+    ap.add_argument("--quant-group", type=int, default=0,
+                    help="w4 scale-group length G along K (0 = the arch "
+                         "config's dbb.quant_group, default 128)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0,
                     help="total request count; > batch engages the "
@@ -136,6 +148,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.weight_bits or args.quant_group:
+        import dataclasses as _dc
+        dbb = cfg.dbb
+        dbb = _dc.replace(
+            dbb,
+            weight_bits=args.weight_bits or dbb.weight_bits,
+            quant_group=args.quant_group or dbb.quant_group)
+        cfg = cfg.replace(dbb=dbb)
     if args.attn_backend:
         cfg = cfg.replace(attn_impl=args.attn_backend)
     if args.kv_page_size:

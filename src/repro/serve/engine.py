@@ -547,6 +547,16 @@ class ServeEngine:
     draft_layers: int = 0
 
     def __post_init__(self):
+        # the diagnostic int32 indices plane is host-side validation
+        # material (validate_dbb) — 4 B/value of dead HBM on a serving
+        # engine. Strip it from every device-resident packed leaf up
+        # front; kernels and decompress consume the bitmask only.
+        from repro.core.dbb import DbbWeight as _Dbb
+        self.params = jax.tree_util.tree_map(
+            lambda l: (dataclasses.replace(l, indices=None)
+                       if isinstance(l, _Dbb) and l.indices is not None
+                       else l),
+            self.params, is_leaf=lambda l: isinstance(l, _Dbb))
         # hoisted non-layer decompression: pay the embed/LM-head DBB
         # expansion once here instead of on every decode step (the inner
         # _decompress_non_layer then no-ops — no packed non-layer leaves);

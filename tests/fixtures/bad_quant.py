@@ -1,0 +1,44 @@
+"""Known-bad fixture for the vmem pass: w4 expanded-tile undercount.
+
+The INT4 weight-streaming kernels (DESIGN.md §16) stream a nibble-packed
+values plane whose BlockSpecs alone undercount residency — the dequant
+step expands each tile through int8 slots, a dense int8 tile, and a
+dequantized f32 tile, all declared as ``extra_vmem_bytes``. This
+contract models the bug where that expansion chain is sized for huge
+K/N tiles the guard happily admits: the streamed blocks fit, the
+expansion does not. Expected code: ``vmem-overflow``.
+"""
+from repro.analysis.contracts import BlockDecl, KernelContract, ScratchDecl
+from repro.core.sta import KERNEL_VMEM_BUDGET
+
+# a 4096-deep K tile over 512 lanes: the *packed* stream is small, but
+# the in-VMEM expansion (int8 slots + dense int8 + dense f32) is ~11 MiB
+_BK, _BN, _BLOCK, _NNZ = 4096, 512, 8, 4
+_BKC = _BK // _BLOCK * _NNZ            # compressed int8-slot rows / tile
+
+w4_overflow = KernelContract(
+    name="bad_quant_w4_expansion", route="fixture", domain="matmul",
+    grid=(2, 2, 2),
+    dimension_semantics=("parallel", "parallel", "arbitrary"),
+    inputs=(
+        BlockDecl("x", (8, _BK), lambda i, j, kk: (i, kk),
+                  (16, 2 * _BK), 4),
+        BlockDecl("values", (_BKC // 2, _BN), lambda i, j, kk: (kk, j),
+                  (_BKC, 2 * _BN), 1),
+        BlockDecl("bitmask", (_BK // _BLOCK, _BN),
+                  lambda i, j, kk: (kk, j),
+                  (2 * _BK // _BLOCK, 2 * _BN), 4),
+        BlockDecl("gscale", (_BK // 128, _BN), lambda i, j, kk: (kk, j),
+                  (2 * _BK // 128, 2 * _BN), 4),
+    ),
+    outputs=(BlockDecl("out", (8, _BN), lambda i, j, kk: (i, j),
+                       (16, 2 * _BN), 4),),
+    scratch=(ScratchDecl("acc", (8, _BN), 4),),
+    acc_dims=(2,), guarded_init=True, guarded_store=True,
+    vmem_budget=KERNEL_VMEM_BUDGET,
+    # the dequant expansion chain, honestly declared — and far over
+    # budget at this tile shape
+    extra_vmem_bytes=_BKC * _BN + _BK * _BN + _BK * _BN * 4,
+    admitted=True)                      # guard bug: expansion can't fit
+
+CONTRACTS = [w4_overflow]

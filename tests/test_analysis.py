@@ -124,6 +124,7 @@ class TestRepoClean:
 
 _FIXTURE_EXPECT = [
     ("bad_vmem.py", "vmem", {"vmem-overflow", "dead-headroom"}),
+    ("bad_quant.py", "vmem", {"vmem-overflow"}),
     ("bad_race.py", "races", {"race", "unguarded-accumulation"}),
     ("bad_sample.py", "races", {"race"}),
     ("bad_bounds.py", "bounds", {"oob", "overlapping-write"}),

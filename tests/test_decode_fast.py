@@ -318,6 +318,138 @@ class TestPackedStreamingDecode:
             [[5, 17, 3, 250]], max_new_tokens=3)[0]
         assert out_d == out_p
 
+    def test_engine_strips_diagnostic_indices(self, packed_lm):
+        """ServeEngine drops the int32 indices plane from device-resident
+        packed leaves (diagnostics only — 4 B/value, 4x the int8
+        payload). `pack_tree` output is already stripped; a hand-packed
+        tree (pack_dbb keeps indices for validate_dbb) must not carry
+        the plane into the engine's resident params either."""
+        import dataclasses
+
+        from repro.core.dbb import DbbWeight
+        from repro.serve.engine import ServeEngine
+
+        cfg, _, packed = packed_lm
+        is_dbb = lambda x: isinstance(x, DbbWeight)  # noqa: E731
+        with_idx = jax.tree_util.tree_map(
+            lambda l: dataclasses.replace(
+                l, indices=jnp.zeros(l.values.shape, jnp.int32))
+            if is_dbb(l) else l, packed, is_leaf=is_dbb)
+        host_leaves = [l for l in jax.tree_util.tree_leaves(
+            with_idx, is_leaf=is_dbb) if is_dbb(l)]
+        assert host_leaves and all(l.indices is not None
+                                   for l in host_leaves)
+        eng = ServeEngine(cfg.replace(gemm_impl="pallas"), with_idx,
+                          max_batch=2)
+        eng_leaves = [l for l in jax.tree_util.tree_leaves(
+            eng.params, is_leaf=is_dbb) if is_dbb(l)]
+        assert eng_leaves and all(l.indices is None for l in eng_leaves)
+        # the caller's tree is untouched (host-side diagnostics keep it)
+        assert all(l.indices is not None for l in host_leaves)
+
+
+@pytest.fixture(scope="module")
+def packed_lm_w4():
+    from repro.configs import get_config
+    from repro.core.dbb_linear import pack_tree
+    from repro.core.sparsity import apply_dbb_to_tree
+    from repro.models import registry
+
+    cfg = get_config("olmo-1b", smoke=True).replace(remat="none")
+    dbb = cfg.dbb.__class__(enabled=True, block=8, nnz=4,
+                            weight_bits=4, quant_group=64)
+    cfg = cfg.replace(dbb=dbb)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    proj = apply_dbb_to_tree(params, dbb, straight_through=False)
+    packed = pack_tree(proj, dbb)
+    return cfg, packed
+
+
+class TestW4StreamingDecode:
+    def test_all_leaves_pack_w4(self, packed_lm_w4):
+        from repro.core.dbb import DbbWeight
+
+        _, packed = packed_lm_w4
+        leaves = [l for l in jax.tree_util.tree_leaves(
+            packed, is_leaf=lambda x: isinstance(x, DbbWeight))
+            if isinstance(l, DbbWeight)]
+        assert leaves and all(l.bits == 4 for l in leaves)
+
+    def test_decode_token_parity(self, packed_lm_w4):
+        """Pallas w4 streaming decode == XLA w4-decompress decode on the
+        same packed tree (identical dequantized weights), token for
+        token."""
+        from repro.models import registry
+        from repro.serve.engine import make_decode_step
+
+        cfg, packed = packed_lm_w4
+        cfgp = cfg.replace(gemm_impl="pallas")
+        tok = jnp.asarray([7])
+        n1, _ = jax.jit(make_decode_step(cfg))(
+            packed, registry.init_cache(cfg, 1, 8), tok)
+        n2, _ = jax.jit(make_decode_step(cfgp))(
+            packed, registry.init_cache(cfgp, 1, 8), tok)
+        assert int(n1[0]) == int(n2[0])
+
+    def test_no_dense_or_int8_materialization(self, packed_lm_w4):
+        """The w4 trace claim is stronger than the int8 one: neither the
+        dense [K, N] weight NOR the int8-expanded [K/B·nnz, N] slot
+        plane may appear as a traced HBM intermediate — the nibble
+        plane expands only inside kernel VMEM."""
+        from repro.analysis.materialize import trace_avals
+        from repro.core import dbb_linear
+        from repro.core.dbb import DbbWeight
+        from repro.core.sta import LANE
+        from repro.models import registry
+        from repro.serve.engine import make_decode_step
+
+        cfg, packed = packed_lm_w4
+        tok = jnp.asarray([7], jnp.int32)
+
+        def calls(route_cfg):
+            cache = registry.init_cache(route_cfg, 1, 8)
+            before = dbb_linear.DECOMPRESS_STATS["calls"]
+            jax.eval_shape(make_decode_step(route_cfg), packed, cache,
+                           tok)
+            return dbb_linear.DECOMPRESS_STATS["calls"] - before
+
+        assert calls(cfg.replace(gemm_impl="pallas")) == 0
+        assert calls(cfg.replace(gemm_impl="xla")) > 0   # control
+
+        leaves = [l for l in jax.tree_util.tree_leaves(
+            packed, is_leaf=lambda x: isinstance(x, DbbWeight))
+            if isinstance(l, DbbWeight)]
+        banned = (
+            {(l.k_dim, l.n_dim) for l in leaves
+             if l.k_dim * l.n_dim > LANE * LANE}
+            | {(l.k_dim // l.block * l.nnz, l.n_dim) for l in leaves
+               if l.k_dim // l.block * l.nnz * l.n_dim > LANE * LANE})
+
+        def traced(route_cfg):
+            cache = registry.init_cache(route_cfg, 1, 8)
+            avals = trace_avals(make_decode_step(route_cfg), packed,
+                                cache, tok)
+            return banned & {tuple(a.shape) for a in avals}
+
+        hit = traced(cfg.replace(gemm_impl="pallas"))
+        assert not hit, (
+            f"w4 decode step traced dense/int8-expanded weight-shaped "
+            f"intermediates: {sorted(hit)}")
+        assert traced(cfg.replace(gemm_impl="xla"))      # control
+
+    def test_engine_generate_runs(self, packed_lm_w4):
+        """End-to-end smoke: the w4 streaming engine decodes; greedy
+        tokens match the XLA w4 engine (same dequantized weights)."""
+        from repro.serve.engine import ServeEngine
+
+        cfg, packed = packed_lm_w4
+        out_x = ServeEngine(cfg, packed, max_batch=2).generate(
+            [[5, 17, 3, 250]], max_new_tokens=3)[0]
+        out_p = ServeEngine(cfg.replace(gemm_impl="pallas"), packed,
+                            max_batch=2).generate(
+            [[5, 17, 3, 250]], max_new_tokens=3)[0]
+        assert out_x == out_p
+
 
 @pytest.fixture(scope="module")
 def small_lm():

@@ -152,7 +152,9 @@ class TestGoldenRouteTable:
     def test_explain_reports_cost_terms(self):
         decs = dispatch.explain("matmul", m=4, k=256, n=512, pallas=True)
         assert {d.name for d in decs} == {"xla", "sta", "skinny_sta",
-                                          "dbb_packed", "skinny_dbb"}
+                                          "dbb_packed", "skinny_dbb",
+                                          "dbb_packed_w4",
+                                          "skinny_dbb_w4"}
         for d in decs:
             assert d.flops > 0 and d.bytes > 0
             assert d.cost_s == pytest.approx(max(d.compute_s, d.memory_s))

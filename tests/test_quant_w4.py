@@ -1,0 +1,272 @@
+"""INT4 groupwise DBB weight streaming (DESIGN.md §16).
+
+Format invariants (nibble pack/unpack, footprint math across bit
+widths), kernel bit-exactness against the XLA decompress reference on
+both w4 routes, dispatch registry behavior (route selection, halved
+weight-bytes roofline, int8-activation rejection), and the serving-tree
+integration (pack_tree w4 leaves + per-leaf INT8 fallback).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    hypothesis.settings.register_profile(
+        "fast", max_examples=25, deadline=None)
+    hypothesis.settings.load_profile("fast")
+except ModuleNotFoundError:      # bare container: deterministic fallback
+    from _hyp_fallback import given, st
+
+from repro.core.dbb import (INT4_MAX, dbb_footprint_bytes,
+                            dense_footprint_bytes, pack_dbb,
+                            pack_nibbles, unpack_dbb, unpack_nibbles,
+                            validate_dbb)
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestNibblePlane:
+    @given(st.integers(0, 20), st.integers(1, 8), st.integers(1, 6))
+    def test_roundtrip(self, seed, rows2, n):
+        q = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed), (2 * rows2, n), -INT4_MAX,
+            INT4_MAX + 1), np.int8)
+        packed = pack_nibbles(jnp.asarray(q))
+        assert packed.shape == (rows2, n) and packed.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(unpack_nibbles(packed)),
+                                      q)
+
+    def test_full_int4_range(self):
+        q = jnp.asarray(np.arange(-8, 8, dtype=np.int8).reshape(16, 1))
+        np.testing.assert_array_equal(
+            np.asarray(unpack_nibbles(pack_nibbles(q))), np.asarray(q))
+
+    def test_odd_rows_rejected(self):
+        with pytest.raises(ValueError):
+            pack_nibbles(jnp.zeros((3, 4), jnp.int8))
+
+
+class TestW4Format:
+    @given(st.integers(0, 10), st.integers(1, 4))
+    def test_pack_unpack_quant_error_bound(self, seed, gb):
+        """unpack(pack(w, bits=4)) equals the groupwise INT4 fake-quant
+        of the kept positions: error <= scale/2 per group, zeros exact
+        where the (quantized) projection dropped a row."""
+        group = 8 * gb
+        w = _rand((2 * group, 16), seed)
+        p = pack_dbb(w, 8, 4, bits=4, group=group)
+        assert p.bits == 4 and p.group == group
+        assert p.values.dtype == jnp.int8
+        assert p.values.shape == (2 * group // 8 * 4 // 2, 16)
+        assert p.scale.shape == (2, 16)
+        deq = np.asarray(unpack_dbb(p))
+        scale = np.asarray(p.scale)
+        # every kept position is within half an INT4 LSB of the dense w
+        kept = deq != 0
+        err = np.abs(deq - np.asarray(w))
+        bound = np.repeat(scale, group, axis=0) * 0.5 + 1e-7
+        assert np.all(err[kept] <= bound[kept])
+        ok, msg = validate_dbb(p)
+        assert ok, msg
+
+    def test_bad_dims_raise(self):
+        with pytest.raises(ValueError):
+            pack_dbb(_rand((64, 8)), 8, 4, bits=4, group=12)   # % block
+        with pytest.raises(ValueError):
+            pack_dbb(_rand((64, 8)), 8, 4, bits=4, group=48)   # K % group
+        with pytest.raises(ValueError):
+            pack_dbb(_rand((8, 8)), 8, 1, bits=4, group=8)     # odd slots
+        with pytest.raises(ValueError):
+            pack_dbb(_rand((64, 8)), 8, 4, bits=5)
+
+    def test_caller_scale_rejected(self):
+        with pytest.raises(ValueError):
+            pack_dbb(_rand((64, 8)), 8, 4, bits=4, group=64,
+                     scale=jnp.ones((8,)))
+
+
+class TestFootprint:
+    @pytest.mark.parametrize("block,nnz", [(8, 4), (8, 2), (16, 8)])
+    @pytest.mark.parametrize("group", [64, 128])
+    def test_w4_math(self, block, nnz, group):
+        k, n = 1024, 512
+        b4 = dbb_footprint_bytes(k, n, block, nnz, itemsize=1,
+                                 bits=4, group=group)
+        vals = (k // block * nnz + 1) // 2 * n
+        mask = k // block * n * ((block + 7) // 8)
+        scales = k // group * n * 4
+        assert b4 == vals + mask + scales
+
+    def test_int4_under_int8_under_dense(self):
+        k, n = 2048, 2048
+        dense = dense_footprint_bytes(k, n, 1)
+        b8 = dbb_footprint_bytes(k, n, 8, 4, 1)
+        b4 = dbb_footprint_bytes(k, n, 8, 4, 1, bits=4, group=128)
+        assert b4 < b8 < dense
+        # B=8/nnz=4/G=128: 0.25 values + 0.125 mask + 0.03125 scales
+        assert b4 / dense == pytest.approx(0.40625)
+        assert b8 / b4 == pytest.approx(0.625 / 0.40625)
+
+    def test_config_ratio_matches_format(self):
+        from repro.config import DbbConfig
+        cfg = DbbConfig(block=8, nnz=4, weight_bits=4, quant_group=128)
+        assert cfg.weight_footprint_ratio == pytest.approx(0.40625)
+
+
+class TestW4Kernels:
+    @pytest.mark.parametrize("m,k,n,group", [
+        (8, 256, 256, 128),      # skinny route, group nests in K tile
+        (8, 256, 256, 256),      # group spans two K tiles
+        (64, 256, 384, 64),      # M-tiled route
+        (5, 200, 130, 8),        # ragged M/N padding, K padded to group
+    ])
+    def test_matches_xla_decompress(self, m, k, n, group):
+        """Pallas w4 streaming == dense GEMM against the XLA-decompressed
+        reference weight — the decompress itself is bit-exact, so the
+        only difference is f32 accumulation order."""
+        from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
+
+        w = _rand((k, n), seed=m)
+        p = pack_dbb(w, 8, 4, bits=4, group=group)
+        x = _rand((m, k), seed=m + 1)
+        y = dbb_gemm_packed(x, p)
+        y_ref = x @ unpack_dbb(p)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_decompress_ref_bit_exact(self):
+        """decompress_w4_ref == unpack_dbb on the bitmask plane — the
+        XLA oracle the kernel tests and serving decompress both use."""
+        from repro.kernels.dbb_gemm.ref import decompress_w4_ref
+
+        p = pack_dbb(_rand((256, 64)), 8, 4, bits=4, group=64)
+        ref = decompress_w4_ref(p.values, p.bitmask.astype(jnp.int32),
+                                p.scale, block=8, nnz=4, group=64)
+        np.testing.assert_array_equal(np.asarray(ref),
+                                      np.asarray(unpack_dbb(p)))
+
+    def test_fused_epilogue(self):
+        """bias/act fuse on the w4 route exactly like the int8 route."""
+        from repro.kernels.dbb_gemm.ops import dbb_gemm_packed
+
+        p = pack_dbb(_rand((256, 128)), 8, 4, bits=4, group=128)
+        x = _rand((8, 256), 1)
+        bias = _rand((128,), 2)
+        y = dbb_gemm_packed(x, p, bias, act="relu")
+        y_ref = jnp.maximum(x @ unpack_dbb(p) + bias[None, :], 0.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestW4Dispatch:
+    def _explain(self, m, **kw):
+        from repro.kernels import dispatch
+        kw.setdefault("dtype", "float32")
+        return dispatch.explain("matmul", m=m, k=256, n=512,
+                                packed=True, pallas=True, **kw)
+
+    def test_w4_routes_selected(self):
+        chosen = [d.name for d in self._explain(8, bits=4, group=128)
+                  if d.chosen]
+        assert chosen == ["skinny_dbb_w4"]
+        chosen = [d.name for d in self._explain(256, bits=4, group=128)
+                  if d.chosen]
+        assert chosen == ["dbb_packed_w4"]
+
+    def test_int8_routes_reject_w4_and_vice_versa(self):
+        ds = {d.name: d for d in self._explain(8, bits=4, group=128)}
+        assert not ds["skinny_dbb"].applicable
+        assert not ds["dbb_packed"].applicable
+        ds = {d.name: d for d in self._explain(8)}
+        assert not ds["skinny_dbb_w4"].applicable
+        assert not ds["dbb_packed_w4"].applicable
+
+    def test_w4_halves_weight_bytes(self):
+        d8 = {d.name: d for d in self._explain(8)}["skinny_dbb"]
+        d4 = {d.name: d for d in self._explain(8, bits=4, group=128)
+              }["skinny_dbb_w4"]
+        assert 0 < d4.weight_bytes < d8.weight_bytes
+        # values plane halves; mask and [K/G, N] scales ride on top
+        k, n = 256, 512
+        assert d4.weight_bytes == pytest.approx(
+            k // 8 * 4 * n * 0.5 + k // 8 * n + k // 128 * n * 4)
+        assert d4.cost_s < d8.cost_s
+
+    def test_int8_activations_rejected(self):
+        ds = {d.name: d for d in self._explain(8, bits=4, group=128,
+                                               dtype="int8")}
+        assert not ds["skinny_dbb_w4"].applicable
+        assert not ds["dbb_packed_w4"].applicable
+
+    def test_weight_bytes_column_in_table(self):
+        from repro.kernels import dispatch
+        table = dispatch.format_table(self._explain(8, bits=4, group=128))
+        assert "wbytes" in table.splitlines()[0]
+
+    def test_xla_route_executes_w4(self):
+        from repro.kernels import dispatch
+        p = pack_dbb(_rand((256, 64)), 8, 4, bits=4, group=128)
+        x = _rand((4, 256), 3)
+        y = dispatch.matmul(x, p, pallas=False)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(x @ unpack_dbb(p)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestW4Tree:
+    def test_pack_tree_w4_with_fallback(self):
+        """Leaves whose K dim fits the group pack at 4 bits; the rest
+        fall back to the INT8/float format per-leaf."""
+        from repro.config import DbbConfig
+        from repro.core.dbb import DbbWeight
+        from repro.core.dbb_linear import (decompress_xla, pack_tree,
+                                           tree_footprint_bytes)
+
+        cfg = DbbConfig(enabled=True, block=8, nnz=4,
+                        apply_to=("mlp",), weight_bits=4,
+                        quant_group=128)
+        tree = {"mlp": {"wi": {"w": _rand((128, 64))},
+                        "wo": {"w": _rand((72, 64))}}}   # 72 % 128 != 0
+        out = pack_tree(tree, cfg)
+        wi, wo = out["mlp"]["wi"]["w"], out["mlp"]["wo"]["w"]
+        assert isinstance(wi, DbbWeight) and wi.bits == 4
+        assert wi.indices is None
+        assert isinstance(wo, DbbWeight) and wo.bits == 8
+        # footprint counts the nibble plane at 1 byte per 2 values
+        got = tree_footprint_bytes({"w": wi})
+        assert got == dbb_footprint_bytes(128, 64, 8, 4, 1,
+                                          bits=4, group=128)
+        # XLA decompress reproduces unpack_dbb exactly
+        np.testing.assert_array_equal(np.asarray(decompress_xla(wi)),
+                                      np.asarray(unpack_dbb(wi)))
+
+    def test_validate_reports_stripped_indices(self):
+        p = pack_dbb(_rand((64, 8)), 8, 4, bits=4, group=64)
+        import dataclasses
+        stripped = dataclasses.replace(p, indices=None)
+        ok, msg = validate_dbb(stripped)
+        assert not ok and "stripped" in msg
+
+    def test_conv_front_door_decompresses_w4(self):
+        """conv never consumes the nibble plane: the front door expands
+        w4 leaves to dense before the conv kernels see them."""
+        from repro.kernels import dispatch
+
+        k, n = 72, 16                    # 3x3x8 patch dim
+        w = _rand((k, n))
+        p = pack_dbb(w, 8, 4, bits=4, group=8)
+        x = _rand((2, 8, 8, 8), 1)
+        w4d = jnp.reshape(unpack_dbb(p), (3, 3, 8, n))
+        y = dispatch.conv(x, p, kh=3, kw=3, stride=1, padding="SAME")
+        y_ref = jax.lax.conv_general_dilated(
+            x, w4d, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
